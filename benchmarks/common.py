@@ -1,0 +1,116 @@
+"""Shared benchmark scaffolding: corpora, profiles, trace construction.
+
+One benchmark module per paper table/figure (see run.py); they all share
+this cache so the five per-persona predictors are trained once per
+variance subset.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import (datagen, personas, scheduler as sched, simulator,
+                        workload)
+
+OUTDIR = os.environ.get("RTLM_BENCH_OUT", "experiments/bench")
+
+# workload calibration (DESIGN.md §6): the paper's beta ramp is 10..150
+# q/min against an RTX A4500 — per-LM batch sizes C_f differ 3x, so a
+# single ramp saturates DialoGPT (C=11) while leaving T5 (C=33) idle and
+# policy-insensitive.  We preserve the ramp SHAPE (14 linear steps, one
+# simulated minute each) but scale its peak per persona to the same
+# 2x-capacity sustained-overload regime the paper's tables were
+# measured in (their Figs. 9-12 show multi-second queueing delays, i.e.
+# saturated peaks).
+N_RAMP_STEPS = 14
+PEAK_UTILIZATION = 2.0
+N_TASKS = 2800
+TRAIN_FRAC = 0.3
+EPOCHS = 60
+SEED = 0
+
+
+def persona_betas(persona_name: str, variance: str,
+                  malicious_pct: int = 0,
+                  platform: str = "edge_server") -> list:
+    import numpy as _np
+    persona = personas.on_platform(
+        personas.get_persona(persona_name), platform)
+    train, _ = corpus(variance, malicious_pct)
+    lens = _np.array([t.out_lens[persona_name] for t in train])
+    # batched decode runs to ~the long tail of its batch
+    t_batch = (persona.setup_time + persona.eta * _np.quantile(lens, 0.9)
+               + persona.item_time * persona.batch_size)
+    peak = 60.0 * persona.batch_size / t_batch * PEAK_UTILIZATION
+    return [max(5, int(peak * i / N_RAMP_STEPS))
+            for i in range(1, N_RAMP_STEPS + 1)]
+
+POLICIES = ("fifo", "hpf", "luf", "muf", "rt-lm")
+ABLATION = ("fifo", "hpf", "slack-eq2", "up", "up+c", "rt-lm")
+VARIANCES = ("small", "normal", "large")
+
+
+@functools.lru_cache(maxsize=None)
+def corpus(variance: str, malicious_pct: int = 0, seed: int = SEED):
+    tasks = datagen.generate_corpus(
+        datagen.VARIANCE_MIXES[variance], N_TASKS, seed=seed,
+        malicious_frac=malicious_pct / 100.0)
+    return datagen.train_test_split(tasks, train_frac=TRAIN_FRAC,
+                                    seed=seed)
+
+
+@functools.lru_cache(maxsize=None)
+def profile(variance: str, persona_name: str, malicious_pct: int = 0,
+            seed: int = SEED, tail_quantile=None):
+    train, _ = corpus(variance, malicious_pct, seed)
+    persona = personas.get_persona(persona_name)
+    t0 = time.time()
+    prof = sched.offline_profile(train, persona, epochs=EPOCHS, seed=seed,
+                                 tail_quantile=tail_quantile)
+    prof.train_wall_s = time.time() - t0
+    return prof
+
+
+def sim_tasks(variance: str, persona_name: str, malicious_pct: int = 0,
+              seed: int = SEED, platform: str = "edge_server",
+              tail_quantile=None):
+    _, test = corpus(variance, malicious_pct, seed)
+    prof = profile(variance, persona_name, malicious_pct, seed,
+                   tail_quantile)
+    persona = personas.on_platform(
+        personas.get_persona(persona_name), platform)
+    betas = persona_betas(persona_name, variance, malicious_pct, platform)
+    arrivals = workload.poisson_trace(len(test), betas=betas,
+                                      seed=seed + 1)
+    return sched.make_sim_tasks(test, prof, persona, arrivals), prof
+
+
+def run(variance: str, persona_name: str, policy: str, *,
+        malicious_pct: int = 0, alpha: float = 1.0, lam: float = 1.5,
+        b: float = 1.8, seed: int = SEED, platform: str = "edge_server",
+        tail_quantile=None) -> simulator.SimResult:
+    tasks, prof = sim_tasks(variance, persona_name, malicious_pct, seed,
+                            platform, tail_quantile)
+    persona = personas.on_platform(
+        personas.get_persona(persona_name), platform)
+    pcfg = prof.policy_config(alpha=alpha, lam=lam, b=b)
+    return simulator.run_policy(tasks, policy, persona, pcfg)
+
+
+def save(name: str, payload) -> str:
+    os.makedirs(OUTDIR, exist_ok=True)
+    path = os.path.join(OUTDIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def emit(name: str, wall_s: float, derived: str):
+    """The harness CSV contract: name,us_per_call,derived."""
+    print(f"{name},{wall_s*1e6:.0f},{derived}")

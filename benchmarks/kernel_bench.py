@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks: chunked-jnp substrate path wall-clock on CPU
+(the Pallas kernels themselves are TPU artifacts; interpret mode is a
+correctness harness, not a performance proxy — see EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=5, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def attention_bench():
+    key = jax.random.PRNGKey(0)
+    rows = {}
+    for (B, S, H, KV, D) in [(1, 512, 8, 2, 64), (1, 1024, 8, 2, 64),
+                             (2, 2048, 8, 8, 128)]:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
+        t_sub = _time(ops.flash_attention, q, k, v, use_pallas=False)
+        t_ref = _time(jax.jit(lambda a, b, c: ref.attention_ref(a, b, c)),
+                      q, k, v)
+        flops = 2 * 2 * B * H * S * S * D * 0.5
+        rows[f"B{B}_S{S}_H{H}kv{KV}_D{D}"] = {
+            "chunked_ms": round(t_sub * 1e3, 2),
+            "naive_ms": round(t_ref * 1e3, 2),
+            "chunked_gflops": round(flops / t_sub / 1e9, 1),
+        }
+    return rows
+
+
+def rmsnorm_bench():
+    key = jax.random.PRNGKey(1)
+    rows = {}
+    for (N, D) in [(4096, 1024), (16384, 4096)]:
+        x = jax.random.normal(key, (N, D), jnp.float32)
+        w = jnp.zeros(D)
+        t = _time(ops.rms_norm, x, w, use_pallas=False)
+        gbps = 2 * x.nbytes / t / 1e9
+        rows[f"N{N}_D{D}"] = {"ms": round(t * 1e3, 3),
+                              "effective_GBps": round(gbps, 1)}
+    return rows

@@ -1,0 +1,84 @@
+"""EXPERIMENTS.md §Roofline table builder: reads the dry-run JSONs
+(experiments/dryrun/*.json) and renders the per-(arch x shape x mesh)
+three-term roofline with dominant-bottleneck calls."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.environ.get("RTLM_DRYRUN_OUT", "experiments/dryrun")
+
+
+def load(dirname: str = DRYRUN_DIR) -> List[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def table(rows: List[dict], *, multi_pod=False, fsdp=True,
+          seq_parallel=False, serving=False) -> List[dict]:
+    out = []
+    for r in rows:
+        if r.get("multi_pod") != multi_pod or r.get("fsdp", True) != fsdp:
+            continue
+        if r["status"] == "ok" and (
+                bool(r.get("seq_parallel")) != seq_parallel
+                or bool(r.get("serving")) != serving):
+            continue
+        if r["status"] != "ok":
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "status": r["status"],
+                        "reason": r.get("reason", r.get("error", ""))})
+            continue
+        roof = r["roofline"]
+        mem = r["memory"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "compute_ms": round(roof["compute_s"] * 1e3, 1),
+            "memory_ms": round(roof["memory_s"] * 1e3, 1),
+            "collective_ms": round(roof["collective_s"] * 1e3, 1),
+            "dominant": roof["dominant"],
+            "useful_flops_ratio": round(roof["useful_flops_ratio"], 3),
+            "GiB_per_dev": round(
+                mem["resident_bytes_per_device"] / 2 ** 30, 1),
+            "fits_16GiB": mem["resident_bytes_per_device"] <= 16 * 2 ** 30,
+        })
+    return out
+
+
+def render_markdown(rows: List[dict]) -> str:
+    hdr = ("| arch | shape | compute ms | memory ms | collective ms | "
+           "dominant | useful-FLOPs | GiB/dev | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']}: {r.get('reason','')[:60]} | — | "
+                         f"— | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_ms']} | "
+            f"{r['memory_ms']} | {r['collective_ms']} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']} | {r['GiB_per_dev']} | "
+            f"{'✓' if r['fits_16GiB'] else '✗'} |")
+    return hdr + "\n".join(lines)
+
+
+def summary(rows: List[dict]) -> Dict[str, int]:
+    ok = [r for r in rows if r["status"] == "ok"]
+    return {
+        "ok": len(ok),
+        "skipped": sum(r["status"] == "skipped" for r in rows),
+        "error": sum(r["status"] == "error" for r in rows),
+        "compute_bound": sum(r["dominant"] == "compute" for r in ok),
+        "memory_bound": sum(r["dominant"] == "memory" for r in ok),
+        "collective_bound": sum(
+            r["dominant"] == "collective" for r in ok),
+        "fits": sum(r["fits_16GiB"] for r in ok),
+    }

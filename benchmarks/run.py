@@ -1,0 +1,90 @@
+"""Benchmark harness: one entry per paper table/figure + substrate
+microbenches + the roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table3_max_response]
+
+Prints ``name,us_per_call,derived`` CSV lines (harness contract) and
+writes full payloads to experiments/bench/*.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from . import common, kernel_bench, paper_tables, roofline_report
+
+
+def run_paper_tables(only=None):
+    for name, fn in paper_tables.ALL.items():
+        if only and only != name:
+            continue
+        t0 = time.time()
+        try:
+            payload, derived = fn()
+        except Exception as e:            # noqa: BLE001
+            traceback.print_exc()
+            common.emit(name, time.time() - t0, f"ERROR:{e}")
+            continue
+        common.save(name, payload)
+        common.emit(name, time.time() - t0, derived)
+
+
+def run_kernels(only=None):
+    if only and only not in ("kernel_attention", "kernel_rmsnorm"):
+        return
+    t0 = time.time()
+    rows = kernel_bench.attention_bench()
+    common.save("kernel_attention", rows)
+    best = max(v["chunked_gflops"] for v in rows.values())
+    common.emit("kernel_attention", time.time() - t0,
+                f"chunked_best={best}gflops_cpu")
+    t0 = time.time()
+    rows = kernel_bench.rmsnorm_bench()
+    common.save("kernel_rmsnorm", rows)
+    best = max(v["effective_GBps"] for v in rows.values())
+    common.emit("kernel_rmsnorm", time.time() - t0, f"best={best}GBps_cpu")
+
+
+def run_roofline(only=None):
+    if only and only != "roofline":
+        return
+    t0 = time.time()
+    rows = roofline_report.load()
+    if not rows:
+        common.emit("roofline", time.time() - t0,
+                    "no dry-run artifacts (run repro.launch.dryrun_all)")
+        return
+    variants = [
+        ("roofline_pod", dict(multi_pod=False)),
+        ("roofline_multipod", dict(multi_pod=True)),
+        ("roofline_pod_seqpar", dict(multi_pod=False, seq_parallel=True)),
+        ("roofline_pod_serving", dict(multi_pod=False, fsdp=False,
+                                      serving=True)),
+    ]
+    for name, kw in variants:
+        tab = roofline_report.table(rows, **kw)
+        if not any(r["status"] == "ok" for r in tab):
+            continue
+        s = roofline_report.summary(tab)
+        common.save(name, tab)
+        common.emit(name, time.time() - t0,
+                    f"ok={s['ok']};mem_bound={s['memory_bound']};"
+                    f"coll_bound={s['collective_bound']};"
+                    f"compute_bound={s['compute_bound']};fits={s['fits']}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run_paper_tables(args.only)
+    run_kernels(args.only)
+    run_roofline(args.only)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,48 @@
+"""Train a ~100M-param model for a few hundred steps on the synthetic
+pipeline (end-to-end training driver, deliverable b).
+
+    PYTHONPATH=src python examples/train_tiny.py [--steps 300]
+
+Uses a scaled-up smoke variant of yi-6b (~100M params) and AdamW; loss
+should fall well below the unigram entropy of the synthetic stream.
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro import configs
+from repro.models import model as model_lib
+from repro.training import data as data_lib, optimizer as opt_lib
+from repro.training import train_step as ts_lib
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=256)
+args = ap.parse_args()
+
+base = configs.get_smoke_config("yi-6b")
+cfg = dataclasses.replace(
+    base, name="yi-100m", num_layers=8, d_model=768, num_heads=12,
+    num_kv_heads=4, head_dim=64, d_ff=2304, vocab_size=49152)
+params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+n = sum(x.size for x in jax.tree.leaves(params))
+print(f"model: {cfg.name}  params={n/1e6:.1f}M")
+
+opt = opt_lib.make_optimizer("adamw", 1e-3)
+step = jax.jit(ts_lib.make_train_step(cfg, opt, remat=False),
+               donate_argnums=(0, 1))
+state = opt.init(params)
+pipe = data_lib.SyntheticLMData(vocab_size=cfg.vocab_size,
+                                seq_len=args.seq, batch_size=args.batch,
+                                seed=0)
+t0 = time.time()
+for i, batch in enumerate(pipe.batches(args.steps)):
+    params, state, m = step(params, state, batch)
+    if i % 20 == 0 or i == args.steps - 1:
+        print(f"step {i:4d}  loss={float(m['loss']):.4f}  "
+              f"grad_norm={float(m['grad_norm']):.3f}  "
+              f"({(time.time()-t0)/(i+1):.2f}s/step)")

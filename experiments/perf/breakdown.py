@@ -1,0 +1,31 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, jax
+from repro import configs
+from repro.launch import mesh as mesh_lib, specs, hlo_cost
+from repro.sharding import context as shctx, policy as policy_lib
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+fsdp = "--no-fsdp" not in sys.argv
+cfg = configs.get_config(arch)
+shape = configs.INPUT_SHAPES[shape_name]
+mesh = mesh_lib.make_production_mesh()
+policy = policy_lib.make_policy(mesh, fsdp=fsdp)
+step = specs.make_step_fn(cfg, shape)
+args, _ = specs.input_specs(cfg, shape)
+in_sh, out_sh, donate = specs.step_shardings(cfg, shape, policy)
+with mesh, shctx.use_policy(policy):
+    compiled = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                       donate_argnums=donate).lower(*args).compile()
+cost = hlo_cost.module_cost(compiled.as_text(), breakdown=True)
+print(f"== {arch} x {shape_name} fsdp={fsdp}: traffic={cost.traffic_bytes/2**30:.1f}GiB "
+      f"flops={cost.flops:.2e} coll={cost.collective_bytes/2**30:.2f}GiB")
+print("-- top traffic by op_name --")
+for k, v in sorted(cost.traffic_by_meta.items(), key=lambda kv: -kv[1])[:14]:
+    print(f"  {v/2**30:9.2f} GiB  {k}")
+print("-- top collectives by op_name --")
+for k, v in sorted(cost.collective_by_meta.items(), key=lambda kv: -kv[1])[:10]:
+    print(f"  {v/2**30:9.2f} GiB  {k}")
+print("-- top flops by op_name --")
+for k, v in sorted(cost.flops_by_meta.items(), key=lambda kv: -kv[1])[:8]:
+    print(f"  {v:9.2e}      {k}")

@@ -1,0 +1,32 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, jax, re, collections
+from repro import configs
+from repro.launch import mesh as mesh_lib, specs, hlo_cost
+from repro.sharding import context as shctx, policy as policy_lib
+
+cfg = configs.get_config("yi-6b")
+shape = configs.INPUT_SHAPES["decode_32k"]
+mesh = mesh_lib.make_production_mesh()
+policy = policy_lib.make_policy(mesh, fsdp=False); policy.serving = True
+step = specs.make_step_fn(cfg, shape)
+args, _ = specs.input_specs(cfg, shape)
+in_sh, out_sh, donate = specs.step_shardings(cfg, shape, policy)
+with mesh, shctx.use_policy(policy):
+    compiled = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                       donate_argnums=donate).lower(*args).compile()
+txt = compiled.as_text()
+comps, entry = hlo_cost.parse_module(txt)
+# find big no-metadata traffic ops
+rows = []
+for cname, comp in comps.items():
+    for on in comp.order:
+        op = comp.ops[on]
+        if 'op_name=' in op.line: continue
+        if op.kind not in hlo_cost._TRAFFIC_OPS: continue
+        b = hlo_cost._shape_bytes(op.result_shapes)
+        if b > 2**24:
+            rows.append((b, cname, op.kind, op.line.strip()[:160]))
+rows.sort(reverse=True)
+for b, cname, kind, line in rows[:15]:
+    print(f"{b/2**20:9.1f} MiB  {cname[:28]:28s} {kind:10s} {line[:110]}")

@@ -1,0 +1,38 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, jax
+from repro import configs
+from repro.launch import mesh as mesh_lib, specs, hlo_cost
+from repro.sharding import context as shctx, policy as policy_lib
+cfg = configs.get_config("yi-6b")
+shape = configs.INPUT_SHAPES["decode_32k"]
+mesh = mesh_lib.make_production_mesh()
+policy = policy_lib.make_policy(mesh, fsdp=False); policy.serving = True
+step = specs.make_step_fn(cfg, shape)
+args, _ = specs.input_specs(cfg, shape)
+in_sh, out_sh, donate = specs.step_shardings(cfg, shape, policy)
+with mesh, shctx.use_policy(policy):
+    compiled = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate).lower(*args).compile()
+comps, entry = hlo_cost.parse_module(compiled.as_text())
+# multipliers
+m = {name: 0.0 for name in comps}; m[entry]=1.0
+for _ in range(len(comps)+2):
+    new = {name: 0.0 for name in comps}; new[entry]=1.0
+    for cname, comp in comps.items():
+        if m[cname]==0: continue
+        for on in comp.order:
+            for callee, mm in hlo_cost._callees(comp.ops[on].line):
+                if callee in new: new[callee]+=m[cname]*mm
+    m = new
+rows=[]
+for cname, comp in comps.items():
+    if m[cname]==0 or cname.startswith("fused_") or "fused_computation" in cname: continue
+    for on in comp.order:
+        op = comp.ops[on]
+        if 'op_name=' in op.line or op.kind not in hlo_cost._TRAFFIC_OPS: continue
+        b = hlo_cost._shape_bytes(op.result_shapes) * m[cname]
+        if b > 2**26:
+            rows.append((b, m[cname], cname[:24], op.kind, op.line.strip()[:130]))
+rows.sort(reverse=True)
+for b, w, cname, kind, line in rows[:12]:
+    print(f"{b/2**30:7.2f} GiB x{w:5.0f} {cname:24s} {kind:9s} {line[:105]}")

@@ -1,0 +1,15 @@
+"""RT-LM core: the paper's contribution.
+
+  rulegen    — six linguistic-uncertainty rules (RULEGEN)
+  predictor  — lightweight MLP m_theta: rule scores -> output length
+  priority   — Eq. 2 slack / Eq. 3 uncertainty-aware priorities
+  scheduler  — Algorithm 1 UASCHED + FIFO/HPF/LUF/MUF baselines
+  simulator  — discrete-event serving-node model (GPU + CPU lanes)
+  workload   — Poisson traces (beta = 10..150 q/min, xi batching window)
+  datagen    — six-type synthetic corpora + benchmark-dataset mixes
+  personas   — published per-LM coefficient profiles (C_f, tau_f, eta_f,
+               phi_f for DialoGPT/GODEL/BlenderBot/BART/T5)
+"""
+
+from . import (datagen, personas, predictor, priority, rulegen,  # noqa
+               scheduler, simulator, workload)

@@ -1,0 +1,142 @@
+"""The lightweight (LW) uncertainty-score predictor (paper §III-B, Alg. 1).
+
+A pure-JAX MLP with hidden sizes [100, 200, 200, 100] (paper §V-A),
+trained with Adam at lr=1e-4 to minimize MSE between the predicted and
+true output lengths:  u_J = m_theta(RULEGEN(J)).
+
+Inputs are the 6 rule intensities + input length (rulegen.features);
+features are z-normalized with training-set statistics held inside the
+predictor state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import datagen, rulegen
+
+HIDDEN = (100, 200, 200, 100)
+
+
+def init_mlp(key, in_dim: int = rulegen.FEATURE_DIM,
+             hidden: Sequence[int] = HIDDEN) -> list:
+    sizes = (in_dim,) + tuple(hidden) + (1,)
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (a, b), jnp.float32) * (2.0 / a) ** 0.5
+        params.append({"w": w, "b": jnp.zeros((b,), jnp.float32)})
+    return params
+
+
+def mlp_apply(params: list, x: jnp.ndarray) -> jnp.ndarray:
+    h = x
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h[..., 0]
+
+
+import functools
+
+
+@functools.partial(jax.jit, static_argnames=("quantile",))
+def _loss(params, x, y, quantile=None):
+    pred = mlp_apply(params, x)
+    if quantile is None:
+        return jnp.mean(jnp.square(pred - y))
+    # pinball loss — beyond-paper: a tail-aware predictor (e.g. P90 of the
+    # output-length distribution) lets the scheduler consolidate/offload
+    # on the statistic that actually sets batched-decode latency (the
+    # batch MAX), not the mean.
+    err = y - pred
+    return jnp.mean(jnp.maximum(quantile * err, (quantile - 1.0) * err))
+
+
+@functools.partial(jax.jit, static_argnames=("quantile",))
+def _adam_step(params, m, v, t, x, y, lr=1e-4, b1=0.9, b2=0.999, eps=1e-8,
+               quantile=None):
+    loss, grads = jax.value_and_grad(_loss)(params, x, y, quantile)
+    t = t + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, v, grads)
+    tf = t.astype(jnp.float32)
+    params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ / (1 - b1 ** tf))
+        / (jnp.sqrt(v_ / (1 - b2 ** tf)) + eps),
+        params, m, v)
+    return params, m, v, t, loss
+
+
+@dataclasses.dataclass
+class Predictor:
+    params: list
+    mean: np.ndarray
+    std: np.ndarray
+    train_losses: list
+
+    def score(self, text: str) -> float:
+        """u_J = m_theta(RULEGEN(J)) — predicted output length (tokens)."""
+        f = (rulegen.features(text) - self.mean) / self.std
+        return float(mlp_apply(self.params, jnp.asarray(f[None]))[0])
+
+    def score_batch(self, texts: Sequence[str]) -> np.ndarray:
+        f = np.stack([rulegen.features(t) for t in texts])
+        f = (f - self.mean) / self.std
+        return np.asarray(mlp_apply(self.params, jnp.asarray(f)))
+
+
+def extract_xy(tasks: Sequence[datagen.Task], persona: str):
+    x = np.stack([rulegen.features(t.text) for t in tasks])
+    y = np.array([t.out_lens[persona] for t in tasks], np.float32)
+    return x, y
+
+
+def train_predictor(tasks: Sequence[datagen.Task], persona: str,
+                    *, epochs: int = 100, batch_size: int = 64,
+                    lr: float = 1e-3, seed: int = 0,
+                    quantile=None) -> Predictor:
+    x, y = extract_xy(tasks, persona)
+    mean = x.mean(axis=0)
+    std = x.std(axis=0) + 1e-6
+    xn = (x - mean) / std
+
+    key = jax.random.PRNGKey(seed)
+    params = init_mlp(key)
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    t = jnp.zeros((), jnp.int32)
+
+    n = len(xn)
+    rng = np.random.default_rng(seed)
+    losses: List[float] = []
+    xj, yj = jnp.asarray(xn), jnp.asarray(y)
+    for epoch in range(epochs):
+        perm = rng.permutation(n)
+        ep_loss = 0.0
+        nb = 0
+        for s in range(0, n, batch_size):
+            idx = jnp.asarray(perm[s:s + batch_size])
+            params, m, v, t, loss = _adam_step(
+                params, m, v, t, xj[idx], yj[idx], lr=lr,
+                quantile=quantile)
+            ep_loss += float(loss)
+            nb += 1
+        losses.append(ep_loss / max(nb, 1))
+    return Predictor(params=params, mean=mean, std=std, train_losses=losses)
+
+
+def fit_weighted_rule(tasks: Sequence[datagen.Task],
+                      persona: str) -> np.ndarray:
+    """§III-B 'weighted rule': least-squares weights over the features."""
+    x, y = extract_xy(tasks, persona)
+    w, *_ = np.linalg.lstsq(
+        np.concatenate([x, np.ones((len(x), 1))], axis=1), y, rcond=None)
+    return w.astype(np.float32)

@@ -1,0 +1,175 @@
+"""Discrete-event simulator of the serving node (GPU lane + CPU lane).
+
+Execution-time model, calibrated to the paper's published coefficients
+(personas.py) and cross-checked against the real JAX engine on tiny
+configs (tests/test_engine_vs_sim.py):
+
+    t_batch(GPU) = setup_f + eta_f * max(out_len in batch)
+    t_batch(CPU) = cpu_slowdown_f * t_batch(GPU-model)
+
+Batched autoregressive decoding runs until its *longest* member finishes
+— this is precisely the head-of-line effect RT-LM's consolidation
+exploits: batches with homogeneous output lengths waste no decode steps.
+
+The simulator owns the clock; the policy is consulted whenever the GPU
+lane is free and the dispatch condition holds (>= C queued, or the oldest
+task has waited the xi batching window).  The CPU lane drains offloaded
+tasks independently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from . import scheduler as sched_lib
+from .personas import Persona
+from .priority import SimTask
+
+
+@dataclasses.dataclass
+class SimResult:
+    tasks: List[SimTask]
+    makespan: float
+    overhead_s: float = 0.0
+
+    # ---- paper metrics ------------------------------------------------
+    @property
+    def response_times(self) -> np.ndarray:
+        return np.array([t.response_time for t in self.tasks])
+
+    @property
+    def mean_response(self) -> float:
+        return float(self.response_times.mean())
+
+    @property
+    def max_response(self) -> float:
+        return float(self.response_times.max())
+
+    @property
+    def throughput_per_min(self) -> float:
+        return 60.0 * len(self.tasks) / max(self.makespan, 1e-9)
+
+    @property
+    def miss_rate(self) -> float:
+        return float(np.mean([t.missed for t in self.tasks]))
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "mean_response_s": self.mean_response,
+            "max_response_s": self.max_response,
+            "p95_response_s": float(np.quantile(self.response_times, 0.95)),
+            "throughput_per_min": self.throughput_per_min,
+            "miss_rate": self.miss_rate,
+            "n_tasks": len(self.tasks),
+        }
+
+
+class Lane:
+    def __init__(self, slowdown: float = 1.0):
+        self.free_at = 0.0
+        self.slowdown = slowdown
+        self.busy_time = 0.0
+
+    def run_batch(self, batch: List[SimTask], now: float,
+                  persona: Persona, lane_name: str) -> float:
+        start = max(now, self.free_at)
+        dur = persona.batch_latency(
+            [t.true_out_len for t in batch]) * self.slowdown
+        finish = start + dur
+        for t in batch:
+            t.start, t.finish, t.lane = start, finish, lane_name
+        self.free_at = finish
+        self.busy_time += dur
+        return finish
+
+
+def simulate(tasks: Sequence[SimTask], policy: sched_lib.Policy, *,
+             xi: float = 2.0, per_task_overhead_s: float = 0.0) -> SimResult:
+    """Run the full trace through the node under ``policy``.
+
+    per_task_overhead_s models the scheduler's own latency (Table VII);
+    it is added to the dispatch instant of every formed batch.
+    """
+    persona = policy.persona
+    pending = sorted(tasks, key=lambda t: t.r)
+    n_total = len(pending)
+    queue: List[SimTask] = []
+    cpu_queue: List[SimTask] = []
+    done: List[SimTask] = []
+    gpu = Lane(1.0)
+    cpu = Lane(persona.cpu_slowdown)
+    now = 0.0
+    overhead_total = 0.0
+    i = 0
+    C = persona.batch_size
+
+    def dispatch_ready(now: float) -> bool:
+        if not queue:
+            return False
+        if len(queue) >= C:
+            return True
+        oldest = min(t.r for t in queue)
+        if now - oldest >= xi:
+            return True
+        # nothing else will ever arrive -> flush
+        return i >= n_total
+
+    while len(done) < n_total:
+        # admit arrivals up to `now`
+        while i < n_total and pending[i].r <= now + 1e-12:
+            queue.append(pending[i])
+            i += 1
+
+        progressed = False
+        if gpu.free_at <= now + 1e-12 and dispatch_ready(now):
+            gpu_batch, off_batch, rest = policy.select(list(queue), now)
+            queue = list(rest)
+            cpu_queue.extend(off_batch)
+            if gpu_batch:
+                oh = per_task_overhead_s * len(gpu_batch)
+                overhead_total += oh
+                gpu.run_batch(gpu_batch, now + oh, persona, "gpu")
+                done.extend(gpu_batch)
+                progressed = True
+        if cpu.free_at <= now + 1e-12 and cpu_queue:
+            batch, cpu_queue = cpu_queue[:C], cpu_queue[C:]
+            cpu.run_batch(batch, now, persona, "cpu")
+            done.extend(batch)
+            progressed = True
+
+        if progressed:
+            continue
+        # advance the clock to the next *future* event
+        candidates = []
+        if i < n_total:
+            candidates.append(pending[i].r)
+        if queue:
+            candidates.append(min(t.r for t in queue) + xi)
+            candidates.append(gpu.free_at)
+        if cpu_queue:
+            candidates.append(cpu.free_at)
+        future = [c for c in candidates if c > now + 1e-12]
+        now = min(future) if future else now + xi
+
+    makespan = max(t.finish for t in done) - min(t.r for t in done)
+    return SimResult(tasks=done, makespan=makespan,
+                     overhead_s=overhead_total)
+
+
+# ---------------------------------------------------------------------------
+# one-call experiment helper
+# ---------------------------------------------------------------------------
+
+
+def run_policy(tasks: Sequence[SimTask], policy_name: str,
+               persona: Persona, pcfg: sched_lib.PolicyConfig, *,
+               xi: float = 2.0, per_task_overhead_s: float = 0.0
+               ) -> SimResult:
+    import copy
+    policy = sched_lib.POLICIES[policy_name](persona, pcfg)
+    tasks = [copy.copy(t) for t in tasks]    # fresh timing fields
+    return simulate(tasks, policy, xi=xi,
+                    per_task_overhead_s=per_task_overhead_s)

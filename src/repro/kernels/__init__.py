@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the serving substrate's compute hot spots.
+
+RT-LM itself is a scheduling layer (no kernel-level contribution), but
+the LM substrate it manages has three hot spots that a production TPU
+deployment tiles by hand; each has a pl.pallas_call implementation with
+explicit VMEM BlockSpecs, a jitted wrapper (ops.py) and a pure-jnp
+oracle (ref.py):
+
+  flash_attention   — FA2-style prefill attention (causal / sliding
+                      window), online softmax in VMEM scratch
+  decode_attention  — flash-decode GQA attention over long KV caches
+  rmsnorm           — fused normalization (one HBM round-trip)
+
+Validated in interpret mode on CPU (tests/test_kernels.py sweeps
+shapes/dtypes against ref.py); compiled on TPU targets.
+"""
+
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,107 @@
+"""Flash-decode: single-token GQA attention against a long KV cache.
+
+The decode hot spot is memory-bound (the whole KV cache streams through
+once per token), so the kernel's job is to keep the online-softmax state
+in VMEM while the cache is read exactly once, in MXU-aligned blocks:
+
+  grid = (B, KV, nk)  — innermost sequential over cache blocks;
+  per step: q-group tile (G, D) x cache block (block_k, D) on the MXU,
+  masked by a precomputed validity mask (ring-buffer slot positions are
+  resolved to a boolean mask outside the kernel — cheap, (S,) bool);
+  running (m, l, acc) scratch identical to the prefill kernel.
+
+VMEM per step (defaults G<=8, block_k=512, D<=256, bf16):
+  k,v (2x512x256x2) + q (8x256x2) + acc (8x256x4) ~= 540 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fd_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_scr, l_scr, acc_scr,
+               *, scale: float):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (G, bk)
+    valid = mask_ref[0]                           # (bk,) bool
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_decode_attention(q, k_cache, v_cache, mask, *,
+                           block_k: int = 512, interpret: bool = False):
+    """q: (B, H, D); caches: (B, S, KV, D); mask: (B, S) bool valid slots.
+
+    Returns (B, H, D).
+    """
+    B, H, D = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    scale = 1.0 / (D ** 0.5)
+    block_k = min(block_k, max(S, 8))
+    pk = (-S) % block_k
+    if pk:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, pk)))
+    nk = (S + pk) // block_k
+
+    qt = q.reshape(B, KV, G, D)
+    kt = k_cache.transpose(0, 2, 1, 3)           # (B, KV, S, D)
+    vt = v_cache.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_fd_kernel, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, block_k), lambda b, h, ki: (b, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, mask)
+    return out.reshape(B, H, D)

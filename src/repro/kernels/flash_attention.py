@@ -1,0 +1,134 @@
+"""FlashAttention-2-style prefill attention as a Pallas TPU kernel.
+
+TPU adaptation of the FA2 GPU algorithm (DESIGN.md §2):
+  * tiles live in VMEM via explicit BlockSpecs; MXU-aligned block shapes
+    (block_q x block_k = 128 x 128 by default, multiples of the 128-lane
+    MXU systolic dimension);
+  * the online-softmax running state (m, l, acc) sits in VMEM scratch and
+    persists across the innermost sequential grid dimension (kv blocks) —
+    the TPU analogue of FA2's per-SM register accumulators;
+  * GQA is handled in the BlockSpec index_map (kv head = h // G), so the
+    expanded K/V are never materialized in HBM;
+  * causal/sliding-window masking is positional, computed on the tile.
+
+VMEM budget per grid step (defaults, bf16 in / f32 accum):
+    q (128x128x2) + k,v (2x128x128x2) + s (128x128x4) + acc (128x128x4)
+    + m,l (2x128x4)  ~= 230 KiB  << 16 MiB v5e VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, window: Optional[int],
+               block_q: int, block_k: int, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)            # (bq, d)
+    k = k_ref[0].astype(jnp.float32)            # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (bq, bk)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = kpos < kv_len                         # padded kv tail
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (B, Sq, H, D); k/v: (B, Sk, KV, D) -> (B, Sq, H, D).
+
+    Positions are assumed aligned (prefill): q position i == kv position
+    i.  Sq/Sk are padded to block multiples internally.
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = 1.0 / (D ** 0.5)
+
+    block_q = min(block_q, max(Sq, 8))
+    block_k = min(block_k, max(Sk, 8))
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    nq = (Sq + pq) // block_q
+    nk = (Sk + pk) // block_k
+
+    # (B, S, H, D) -> (B*H, S, D) without materializing per-head copies:
+    # pallas indexes the transposed view lazily via BlockSpecs.
+    qt = qp.transpose(0, 2, 1, 3).reshape(B * H, Sq + pq, D)
+    kt = kp.transpose(0, 2, 1, 3).reshape(B * KV, Sk + pk, D)
+    vt = vp.transpose(0, 2, 1, 3).reshape(B * KV, Sk + pk, D)
+
+    def kv_index(bh, qi, ki):
+        return ((bh // H) * KV + (bh % H) // G, ki, 0)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, kv_len=Sk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, D), kv_index),
+            pl.BlockSpec((1, block_k, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq + pq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),    # m — running max
+            pltpu.VMEM((block_q,), jnp.float32),    # l — running sum
+            pltpu.VMEM((block_q, D), jnp.float32),  # acc — running out
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.reshape(B, H, Sq + pq, D).transpose(0, 2, 1, 3)
+    return out[:, :Sq]

@@ -1,0 +1,80 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Dispatch contract:
+  * on TPU: compiled Pallas kernels (the production path);
+  * elsewhere (this CPU container): ``interpret=True`` executes the same
+    kernel bodies in Python for correctness validation, unless
+    ``use_pallas=False`` falls back to the chunked-jnp implementations in
+    ``repro.models.layers`` (the path the multi-pod dry-run lowers).
+
+All wrappers are shape-polymorphic jit functions; block sizes are static
+arguments so benchmarks can sweep them.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as jlayers
+
+from . import decode_attention as _fd, flash_attention as _fa, rmsnorm as _rn
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "use_pallas", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 128, use_pallas: bool = True,
+                    interpret: Optional[bool] = None):
+    """Prefill/train attention. q: (B,S,H,D); k/v: (B,S,KV,D)."""
+    if not use_pallas:
+        S = q.shape[1]
+        pos = jnp.arange(S)
+        return jlayers.chunked_attention(
+            q, k, v, q_positions=pos, kv_positions=pos, causal=causal,
+            window=window)
+    interp = _default_interpret() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_k", "use_pallas", "interpret"))
+def flash_decode_attention(q, k_cache, v_cache, mask, *, block_k: int = 512,
+                           use_pallas: bool = True,
+                           interpret: Optional[bool] = None):
+    """One-token decode attention. q: (B,H,D); caches: (B,S,KV,D);
+    mask: (B,S) bool — valid cache slots (ring positions pre-resolved)."""
+    if not use_pallas:
+        B, H, D = q.shape
+        S = k_cache.shape[1]
+        # emulate via the layers decode path: mask -> positions trick
+        kv_pos = jnp.where(mask[0], 0, 2**30)
+        out = jlayers.decode_attention(
+            q[:, None], k_cache, v_cache,
+            q_position=jnp.int32(0), kv_positions=kv_pos,
+            valid_len=jnp.int32(S))
+        return out[:, 0]
+    interp = _default_interpret() if interpret is None else interpret
+    return _fd.flash_decode_attention(q, k_cache, v_cache, mask,
+                                      block_k=block_k, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "eps", "block_rows", "use_pallas", "interpret"))
+def rms_norm(x, weight, *, eps: float = 1e-6, block_rows: int = 256,
+             use_pallas: bool = True, interpret: Optional[bool] = None):
+    if not use_pallas:
+        return jlayers.rms_norm(x, weight, eps)
+    interp = _default_interpret() if interpret is None else interpret
+    return _rn.rms_norm(x, weight, eps=eps, block_rows=block_rows,
+                        interpret=interp)

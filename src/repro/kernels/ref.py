@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests).
+
+These are the *semantic* references: naive, unchunked, numerically
+straightforward.  The production jnp fallback in repro.models.layers is
+the chunked flash-style implementation; tests close the triangle
+(pallas ~= ref, layers ~= ref).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  q_positions=None, kv_positions=None):
+    """q: (B, Sq, H, D); k/v: (B, Sk, KV, D) -> (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    if q_positions is None:
+        q_positions = jnp.arange(Sq)
+    if kv_positions is None:
+        kv_positions = jnp.arange(k.shape[1])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kv_positions[None, :] <= q_positions[:, None]
+    if window is not None:
+        mask &= (q_positions[:, None] - kv_positions[None, :]) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, *, mask):
+    """q: (B, H, D); caches: (B, S, KV, D); mask: (B, S) or (S,) bool."""
+    B, H, D = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    if G > 1:
+        k_cache = jnp.repeat(k_cache, G, axis=2)
+        v_cache = jnp.repeat(v_cache, G, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / (D ** 0.5)
+    if mask.ndim == 1:
+        mask = mask[None]
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rms_norm_ref(x, weight, eps: float = 1e-6):
+    """x: (..., D); weight: (D,) — matches models.layers.rms_norm."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,200 @@
+"""Roofline-term derivation from the compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), per the assignment:
+
+    compute_s    = HLO_FLOPs        / (peak_FLOP/s per chip)
+    memory_s     = HLO_bytes        / (HBM bandwidth per chip)
+    collective_s = collective_bytes / (ICI link bandwidth per chip)
+
+``compiled.cost_analysis()`` runs on the post-SPMD per-device module, so
+its flops/bytes are already per-chip.  collective_bytes is NOT in
+cost_analysis — we parse the optimized HLO (``compiled.as_text()``) and
+sum the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (async "-start" variants
+counted once, "-done" skipped).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_COLL_LINE_RE = re.compile(
+    r"=\s*(?P<shapes>[^=]*?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<variant>-start|-done)?\(")
+
+
+def collective_stats(hlo_text: str) -> Dict[str, object]:
+    """Per-op-kind result-shape bytes summed over the HLO module.
+
+    Result-shape bytes are the standard traffic proxy: an all-gather
+    *produces* the gathered bytes on every chip; a reduce-scatter reads
+    the pre-reduce bytes (its operand = result x shards, but per-link
+    traffic is ~result bytes x (shards-1)/shards ~= result bytes).  Async
+    "-start" ops are counted once, "-done" skipped.
+    """
+    per_kind = {k: 0 for k in _COLL_OPS}
+    counts = {k: 0 for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        m = _COLL_LINE_RE.search(line)
+        if not m or m.group("variant") == "-done":
+            continue
+        kind = m.group("op")
+        sizes = [_shape_bytes(d, dims)
+                 for d, dims in _SHAPE_RE.findall(m.group("shapes"))]
+        if not sizes:
+            continue
+        # async -start results are (operand-alias, output) tuples: count
+        # the output buffer only; sync tuple ops reduce N tensors: sum.
+        total = max(sizes) if m.group("variant") == "-start" else sum(sizes)
+        per_kind[kind] += total
+        counts[kind] += 1
+    return {
+        "bytes_by_kind": per_kind,
+        "counts": counts,
+        "total_bytes": sum(per_kind.values()),
+    }
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per chip
+    hbm_bytes: float             # per chip
+    collective_bytes: float      # per chip
+    model_flops: float           # 6*N(_active)*tokens, per chip
+    n_devices: int
+    raw_flops_once: float = 0.0  # cost_analysis() (while bodies counted 1x)
+    collective_by_kind: Optional[dict] = None
+    collective_counts: Optional[dict] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "collective_bytes_per_dev": self.collective_bytes,
+            "model_flops_per_dev": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "n_devices": self.n_devices,
+            "raw_flops_once": self.raw_flops_once,
+            "collective_by_kind": self.collective_by_kind,
+            "collective_counts": self.collective_counts,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic 6*N*D (dense) / 6*N_active*D (MoE) model FLOPs, global.
+
+    Train counts fwd+bwd (6ND); prefill counts forward only (2ND);
+    decode counts one token per sequence (2*N_active*B).
+    """
+    tokens = shape.global_batch * shape.seq_len
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch        # one decode step
+
+
+def analyze(compiled, cfg, shape, n_devices: int) -> Roofline:
+    """Roofline terms from the compiled per-device HLO.
+
+    Uses the trip-count-aware HLO cost model (launch/hlo_cost.py) because
+    ``compiled.cost_analysis()`` counts while-loop bodies once — fatally
+    wrong for scan-over-layers programs.  The raw cost_analysis numbers
+    are preserved in ``raw_cost_analysis`` for reference.
+    """
+    from . import hlo_cost
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):                        # older jax versions
+        cost = cost[0]
+    hlo = hlo_cost.module_cost(compiled.as_text())
+    return Roofline(
+        flops=hlo.flops,
+        hbm_bytes=hlo.traffic_bytes,
+        collective_bytes=hlo.collective_bytes,
+        model_flops=model_flops(cfg, shape) / n_devices,
+        n_devices=n_devices,
+        raw_flops_once=float(cost.get("flops", 0.0)),
+        collective_by_kind={k: v for k, v in
+                            hlo.collective_by_kind.items()},
+        collective_counts={k: v for k, v in
+                           hlo.collective_counts.items()},
+    )
+
+
+def memory_summary(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for key in ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes"):
+        if hasattr(ma, key):
+            out[key] = int(getattr(ma, key))
+    args = out.get("argument_size_in_bytes", 0)
+    alias = out.get("alias_size_in_bytes", 0)
+    out["resident_bytes_per_device"] = (
+        args + out.get("output_size_in_bytes", 0) - alias
+        + out.get("temp_size_in_bytes", 0))
+    return out

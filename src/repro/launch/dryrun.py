@@ -1,0 +1,122 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b \
+        --shape train_4k [--multi-pod] [--out results.json] [--fsdp/--no-fsdp]
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from 512 placeholder host devices, lowers the step
+function against ShapeDtypeStruct inputs (no allocation), compiles, and
+prints memory_analysis() (fits?) + cost_analysis() (FLOPs/bytes for
+EXPERIMENTS.md §Roofline) + the parsed collective schedule.
+"""
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+
+from repro import configs
+from repro.launch import analysis, mesh as mesh_lib, specs
+from repro.sharding import context as shctx, policy as policy_lib
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            fsdp: bool = True, seq_parallel: bool = False,
+            serving: bool = False, verbose: bool = True) -> dict:
+    cfg = configs.get_config(arch)
+    shape = configs.INPUT_SHAPES[shape_name]
+    ok, reason = configs.shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": reason}
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    policy = policy_lib.make_policy(mesh, fsdp=fsdp)
+    policy.seq_parallel = seq_parallel
+    policy.serving = serving
+    step = specs.make_step_fn(cfg, shape)
+    args, _ = specs.input_specs(cfg, shape)
+    in_sh, out_sh, donate = specs.step_shardings(cfg, shape, policy)
+
+    t0 = time.time()
+    with mesh, shctx.use_policy(policy):
+        lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = analysis.memory_summary(compiled)
+    roof = analysis.analyze(compiled, cfg, shape, len(mesh.devices.flat))
+    coll = {"bytes_by_kind": roof.collective_by_kind,
+            "counts": roof.collective_counts,
+            "total_bytes": roof.collective_bytes}
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "fsdp": fsdp, "seq_parallel": seq_parallel, "serving": serving,
+        "status": "ok",
+        "mesh": {"shape": list(mesh.devices.shape),
+                 "axes": list(mesh.axis_names)},
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem,
+        "roofline": roof.to_dict(),
+        "collectives": coll,
+    }
+    if verbose:
+        gb = mem.get("resident_bytes_per_device", 0) / 2**30
+        print(f"[dryrun] {arch} x {shape_name} "
+              f"mesh={tuple(mesh.devices.shape)} fsdp={fsdp}")
+        print(f"  lower {t_lower:.1f}s  compile {t_compile:.1f}s")
+        print(f"  memory_analysis: {json.dumps(mem)}")
+        print(f"  resident/device: {gb:.2f} GiB "
+              f"({'FITS' if gb <= 16 else 'EXCEEDS'} 16 GiB v5e HBM)")
+        print(f"  cost_analysis: flops/dev={roof.flops:.3e} "
+              f"bytes/dev={roof.hbm_bytes:.3e}")
+        print(f"  roofline: compute={roof.compute_s*1e3:.2f}ms "
+              f"memory={roof.memory_s*1e3:.2f}ms "
+              f"collective={roof.collective_s*1e3:.2f}ms "
+              f"-> {roof.dominant}-bound")
+        print(f"  useful-FLOPs ratio (model/HLO): "
+              f"{roof.useful_flops_ratio:.3f}")
+        print(f"  collectives: " + ", ".join(
+            f"{k}:{v} ({coll['bytes_by_kind'][k]/2**20:.1f} MiB)"
+            for k, v in coll["counts"].items() if v))
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--shape", required=True,
+                    choices=tuple(configs.INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-fsdp", dest="fsdp", action="store_false")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--serving-layout", dest="serving",
+                    action="store_true")
+    ap.add_argument("--out", default=None, help="write JSON result here")
+    args = ap.parse_args(argv)
+
+    result = run_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                     fsdp=args.fsdp, seq_parallel=args.seq_parallel,
+                     serving=args.serving)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+    if result["status"] == "skipped":
+        print(f"[dryrun] SKIPPED {args.arch} x {args.shape}: "
+              f"{result['reason']}")
+    return 0 if result["status"] in ("ok", "skipped") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

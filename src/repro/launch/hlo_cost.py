@@ -1,0 +1,303 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body exactly ONCE,
+which makes it useless for scan-over-layers programs (a 61-layer scan
+reports ~1/61 of the real FLOPs).  This module re-derives per-device
+costs from ``compiled.as_text()``:
+
+  1. parse the module into computations and ops (shapes included),
+  2. build the call graph (while bodies/conditions, fusions, calls,
+     conditionals) with XLA's ``known_trip_count`` annotations,
+  3. propagate execution multipliers from ENTRY,
+  4. accumulate per-computation costs x multiplier:
+       flops            — dot ops: 2 * prod(result dims) * contracted dim
+       collective bytes — result-shape bytes of all-gather / all-reduce /
+                          reduce-scatter / all-to-all / collective-permute
+       hbm traffic      — for top-level (non-nested) ops: operand bytes +
+                          result bytes of fusions/dots/gathers/... — the
+                          "fusion boundary" model of HBM traffic.
+
+This is the profiling substrate of EXPERIMENTS.md §Roofline / §Perf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_COMP_HEADER_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:{[^}]*})?")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLEE_RES = (
+    re.compile(r"body=%?([\w\.\-]+)"),
+    re.compile(r"condition=%?([\w\.\-]+)"),
+    re.compile(r"calls=%?([\w\.\-]+)"),
+    re.compile(r"to_apply=%?([\w\.\-]+)"),
+)
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+# ops whose operands+results cross the fusion boundary (HBM traffic).
+# TPU-target model: 'convert' and 'copy' are excluded — precision changes
+# fuse into neighbors on TPU and while-boundary copies are elided by
+# in-place loop state (the CPU backend materializes both: hoisted f32 KV
+# copies and carry copies are CPU-lowering artifacts, see EXPERIMENTS.md
+# §Roofline methodology).
+_TRAFFIC_OPS = {
+    "fusion", "dot", "convolution", "gather", "scatter", "sort",
+    "dynamic-slice", "dynamic-update-slice",
+    "broadcast", "reduce", "transpose", "reshape", "slice", "concatenate",
+    "pad", "select", "compare", "iota", "rng", "exponential", "add",
+    "multiply", "subtract", "divide", "maximum", "minimum", "tanh",
+} | set(COLLECTIVE_OPS) | {c + "-start" for c in COLLECTIVE_OPS}
+
+
+def _parse_shapes(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    return [(d, tuple(int(x) for x in dims.split(",")) if dims else ())
+            for d, dims in _SHAPE_RE.findall(text)]
+
+
+def _shape_bytes(shapes) -> int:
+    return sum(_DTYPE_BYTES.get(d, 4) * math.prod(dims)
+               for d, dims in shapes)
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_shapes: list
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op]
+    order: List[str]
+
+    def shape_of(self, operand: str):
+        op = self.ops.get(operand)
+        return op.result_shapes if op else []
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        m = _COMP_HEADER_RE.match(raw.strip()) if "{" in raw else None
+        if m and ("->" in raw):
+            cur = Computation(m.group(2), {}, [])
+            comps[cur.name] = cur
+            if m.group(1):
+                entry = cur.name
+            continue
+        if raw.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_RE.match(raw)
+        if not om:
+            continue
+        name, result_txt, kind = om.groups()
+        op = Op(name, kind, _parse_shapes(result_txt), raw)
+        cur.ops[name] = op
+        cur.order.append(name)
+    return comps, entry or ""
+
+
+def _callees(line: str) -> List[Tuple[str, int]]:
+    """(callee, trip_multiplier) pairs referenced by an op line."""
+    out = []
+    trip = 1
+    tm = _TRIP_RE.search(line)
+    if tm:
+        trip = int(tm.group(1))
+    for rex in _CALLEE_RES:
+        for m in rex.finditer(line):
+            mult = trip if rex.pattern.startswith("body") else \
+                (trip + 1 if rex.pattern.startswith("condition") else 1)
+            out.append((m.group(1), mult))
+    bm = _BRANCHES_RE.search(line)
+    if bm:
+        for b in bm.group(1).split(","):
+            out.append((b.strip().lstrip("%"), 1))
+    return out
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    # result element count
+    res = math.prod(op.result_shapes[0][1]) if op.result_shapes else 0
+    m = re.search(r"dot\(([^)]*)\)", op.line)
+    lhs_dims_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    if not (m and lhs_dims_m):
+        return 0.0
+    lhs_name = m.group(1).split(",")[0].strip().lstrip("%")
+    lhs_shapes = comp.shape_of(lhs_name)
+    if not lhs_shapes:
+        return 2.0 * res  # unknown contraction — lower bound
+    lhs_dims = lhs_shapes[0][1]
+    contract = 1
+    for d in lhs_dims_m.group(1).split(","):
+        if d:
+            contract *= lhs_dims[int(d)]
+    return 2.0 * res * contract
+
+
+_DATA_MOVE_TOKENS = {"wrapped", "convert", "copy", "transpose", "bitcast",
+                     "fusion", "broadcast", "reshape", "slice", "pad",
+                     "dynamic-update-slice", "dynamic-slice", "select"}
+
+
+def _is_pure_move_fusion(name: str) -> bool:
+    toks = [t for t in re.split(r"[._]", name) if t and not t.isdigit()]
+    return bool(toks) and all(t in _DATA_MOVE_TOKENS for t in toks)
+
+
+def _operand_names(line: str, kind: str) -> List[str]:
+    m = re.search(re.escape(kind) + r"\(([^)]*)\)", line)
+    if not m:
+        return []
+    return [t.strip().lstrip("%") for t in m.group(1).split(",")
+            if t.strip().startswith("%")]
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    collective_bytes: float
+    traffic_bytes: float
+    collective_by_kind: Dict[str, float]
+    collective_counts: Dict[str, float]
+    # optional per-op breakdowns (op_name metadata -> bytes/flops), used by
+    # the §Perf hypothesis loop to find the dominant contributors
+    traffic_by_meta: Optional[Dict[str, float]] = None
+    flops_by_meta: Optional[Dict[str, float]] = None
+    collective_by_meta: Optional[Dict[str, float]] = None
+
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _meta_key(line: str) -> str:
+    m = _META_RE.search(line)
+    if not m:
+        return "<no-metadata>"
+    name = m.group(1)
+    # collapse uniquifying suffixes: keep the jaxpr path head
+    parts = name.split("/")
+    return "/".join(parts[:8])
+
+
+def module_cost(hlo_text: str, breakdown: bool = False) -> HloCost:
+    comps, entry = parse_module(hlo_text)
+    if not entry:
+        return HloCost(0, 0, 0, {}, {})
+
+    # execution multiplier per computation (call-graph walk, fixpoint)
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    mult[entry] = 1.0
+    # topological-ish: iterate until stable (call graph is a DAG)
+    for _ in range(len(comps) + 2):
+        new = {name: 0.0 for name in comps}
+        new[entry] = 1.0
+        changed = False
+        for cname, comp in comps.items():
+            if mult[cname] == 0.0:
+                continue
+            for oname in comp.order:
+                for callee, m in _callees(comp.ops[oname].line):
+                    if callee in new:
+                        new[callee] += mult[cname] * m
+        for k in comps:
+            if abs(new[k] - mult[k]) > 1e-9:
+                changed = True
+        mult = new
+        if not changed:
+            break
+
+    flops = 0.0
+    coll = {k: 0.0 for k in COLLECTIVE_OPS}
+    coll_n = {k: 0.0 for k in COLLECTIVE_OPS}
+    traffic = 0.0
+    t_meta: Dict[str, float] = {}
+    f_meta: Dict[str, float] = {}
+    c_meta: Dict[str, float] = {}
+    for cname, comp in comps.items():
+        w = mult[cname]
+        if w == 0.0:
+            continue
+        fused = cname.startswith("fused_") or "fused_computation" in cname
+        for oname in comp.order:
+            op = comp.ops[oname]
+            if op.kind == "dot":
+                df = w * _dot_flops(comp, op)
+                flops += df
+                if breakdown:
+                    k = _meta_key(op.line)
+                    f_meta[k] = f_meta.get(k, 0.0) + df
+            base_kind = op.kind[:-6] if op.kind.endswith("-start") else \
+                op.kind
+            if base_kind in COLLECTIVE_OPS and not op.kind.endswith("-done"):
+                sizes = [_DTYPE_BYTES.get(d, 4) * math.prod(dims)
+                         for d, dims in op.result_shapes]
+                if sizes:
+                    b = max(sizes) if op.kind.endswith("-start") \
+                        else sum(sizes)
+                    coll[base_kind] += w * b
+                    coll_n[base_kind] += w
+                    if breakdown:
+                        k = _meta_key(op.line)
+                        c_meta[k] = c_meta.get(k, 0.0) + w * b
+            if not fused and op.kind in _TRAFFIC_OPS:
+                operands = _operand_names(op.line, op.kind)
+                is_dus = op.kind == "dynamic-update-slice" or (
+                    op.kind == "fusion"
+                    and "dynamic-update-slice" in op.name)
+                if not is_dus and op.kind == "fusion" and \
+                        _is_pure_move_fusion(op.name):
+                    # precision/layout-change fusions (f32 weight copies,
+                    # transposes for CPU dots) — fused away on TPU; the
+                    # consuming dot already counts its operand reads.
+                    continue
+                if is_dus:
+                    # in-place on TPU (donated buffers): traffic = read +
+                    # write of the update slice = the smallest non-scalar
+                    # operand, not the whole buffer.
+                    sizes = [s for s in
+                             (_shape_bytes(comp.shape_of(o))
+                              for o in operands) if s > 4]
+                    upd = min(sizes) if sizes else \
+                        _shape_bytes(op.result_shapes)
+                    total = 2 * upd
+                else:
+                    total = _shape_bytes(op.result_shapes) + sum(
+                        _shape_bytes(comp.shape_of(o)) for o in operands)
+                traffic += w * total
+                if breakdown:
+                    k = _meta_key(op.line)
+                    t_meta[k] = t_meta.get(k, 0.0) + w * total
+    return HloCost(
+        flops=flops,
+        collective_bytes=sum(coll.values()),
+        traffic_bytes=traffic,
+        collective_by_kind=coll,
+        collective_counts=coll_n,
+        traffic_by_meta=t_meta if breakdown else None,
+        flops_by_meta=f_meta if breakdown else None,
+        collective_by_meta=c_meta if breakdown else None,
+    )

@@ -1,0 +1,37 @@
+"""Production mesh construction (TPU v5e target).
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — jax locks the device count on
+first backend initialization, and only launch/dryrun.py is allowed to
+set the 512-placeholder-device XLA flag before that happens.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = math.prod(shape)
+    have = len(jax.devices())
+    if have < ndev:
+        raise RuntimeError(
+            f"mesh {shape} needs {ndev} devices, have {have} — run under "
+            f"launch/dryrun.py (XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count=512)")
+    return jax.make_mesh(
+        shape, axes, devices=jax.devices()[:ndev],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary (test-scale) mesh over the first prod(shape) devices."""
+    ndev = math.prod(shape)
+    return jax.make_mesh(
+        tuple(shape), tuple(axes), devices=jax.devices()[:ndev],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

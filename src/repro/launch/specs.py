@@ -1,0 +1,137 @@
+"""ShapeDtypeStruct input specs + step functions for the dry-run.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable
+stand-ins for every model input of the given assigned input shape — no
+device allocation ever happens; the dry-run lowers and compiles against
+these specs only.
+
+Step selection per shape.kind:
+    train    -> train_step(params, opt_state, batch)
+    prefill  -> prefill(params, batch)          (build cache + last logits)
+    decode   -> decode_step(params, cache, tok) (ONE token, cache = seq_len)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import model as model_lib, transformer
+from repro.training import optimizer as opt_lib, train_step as ts_lib
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _sds(shape, dtype):
+    return SDS(tuple(shape), jnp.dtype(dtype))
+
+
+def text_len(cfg: ModelConfig, shape: InputShape) -> int:
+    """Token positions available for text after modality prefix tokens."""
+    if cfg.frontend == "vision":
+        return shape.seq_len - cfg.num_patch_tokens
+    return shape.seq_len
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Train/prefill batch pytree of ShapeDtypeStructs."""
+    B = shape.global_batch
+    S = text_len(cfg, shape)
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        batch["labels"] = _sds((B, S), jnp.int32)
+    if cfg.frontend == "vision":
+        batch["patches"] = _sds((B, cfg.num_patch_tokens, cfg.d_model),
+                                jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((B, cfg.encoder_seq_len, cfg.d_model),
+                               jnp.bfloat16)
+    return batch
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(model_lib.init_params, cfg=cfg),
+        jax.random.PRNGKey(0))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, batch, max_len, jnp.bfloat16))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Tuple[tuple, dict]:
+    """Returns (args, meta) where args are the positional SDS arguments of
+    the step function produced by ``make_step_fn``."""
+    params = params_specs(cfg)
+    if shape.kind == "train":
+        opt = opt_lib.make_optimizer(
+            opt_lib.default_optimizer_name(cfg), 3e-4)
+        opt_state = jax.eval_shape(opt.init, params)
+        return (params, opt_state, batch_specs(cfg, shape)), {}
+    if shape.kind == "prefill":
+        return (params, batch_specs(cfg, shape)), {}
+    # decode: ONE new token against a cache of seq_len
+    B = shape.global_batch
+    cache = cache_specs(cfg, B, shape.seq_len)
+    token = _sds((B, 1), jnp.int32)
+    return (params, cache, token), {}
+
+
+def make_step_fn(cfg: ModelConfig, shape: InputShape):
+    """The function the dry-run lowers, matching input_specs' args."""
+    if shape.kind == "train":
+        opt = opt_lib.make_optimizer(
+            opt_lib.default_optimizer_name(cfg), 3e-4)
+        return ts_lib.make_train_step(cfg, opt, remat=True)
+    if shape.kind == "prefill":
+        S = text_len(cfg, shape) + (cfg.num_patch_tokens
+                                    if cfg.frontend == "vision" else 0)
+
+        def prefill_fn(params, batch):
+            return model_lib.prefill(params, cfg, batch, max_len=S)
+
+        return prefill_fn
+
+    def decode_fn(params, cache, token):
+        return model_lib.decode_step(params, cfg, cache, token)
+
+    return decode_fn
+
+
+def step_shardings(cfg: ModelConfig, shape: InputShape, policy):
+    """(in_shardings, out_shardings, donate_argnums) for jit."""
+    params = params_specs(cfg)
+    p_sh = policy.param_shardings(params)
+    if shape.kind == "train":
+        opt = opt_lib.make_optimizer(
+            opt_lib.default_optimizer_name(cfg), 3e-4)
+        opt_state = jax.eval_shape(opt.init, params)
+        o_sh = policy.opt_shardings(opt_state)
+        b_sh = policy.batch_shardings(batch_specs(cfg, shape))
+        metrics = {k: policy.replicated() for k in
+                   ("loss", "xent", "tokens", "moe_aux_loss",
+                    "moe_drop_frac", "grad_norm")}
+        return ((p_sh, o_sh, b_sh), (p_sh, o_sh, metrics), (0, 1))
+    if shape.kind == "prefill":
+        b_sh = policy.batch_shardings(batch_specs(cfg, shape))
+        # out = (cache, last_logits)
+        cache = cache_specs(cfg, shape.global_batch,
+                            text_len(cfg, shape)
+                            + (cfg.num_patch_tokens
+                               if cfg.frontend == "vision" else 0))
+        c_sh = policy.cache_shardings(cache)
+        lg_sh = policy.named(
+            (shape.global_batch, cfg.padded_vocab), ("batch", "vocab"))
+        return ((p_sh, b_sh), (c_sh, lg_sh), ())
+    # decode
+    cache = cache_specs(cfg, shape.global_batch, shape.seq_len)
+    c_sh = policy.cache_shardings(cache)
+    t_sh = policy.named((shape.global_batch, 1), ("batch", None))
+    lg_sh = policy.named(
+        (shape.global_batch, cfg.padded_vocab), ("batch", "vocab"))
+    return ((p_sh, c_sh, t_sh), (t_sh, lg_sh, c_sh), (1,))

@@ -1,0 +1,104 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+        --steps 200 --batch 8 --seq 256 [--mesh 2x4] [--checkpoint DIR]
+
+On the CPU container this trains the reduced smoke variant of the chosen
+architecture on the synthetic pipeline; on a real pod the same launcher
+builds the production mesh and full config (--no-smoke).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import mesh as mesh_lib
+from repro.models import model as model_lib
+from repro.sharding import context as shctx, policy as policy_lib
+from repro.training import checkpoint as ckpt_lib, data as data_lib
+from repro.training import optimizer as opt_lib, train_step as ts_lib
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--no-smoke", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. 2x4 => (data=2, model=4); default: no mesh")
+    ap.add_argument("--optimizer", default=None,
+                    choices=(None, "adamw", "adafactor"))
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    opt_name = args.optimizer or opt_lib.default_optimizer_name(cfg)
+    opt = opt_lib.make_optimizer(opt_name, args.lr)
+    step_fn = ts_lib.make_train_step(cfg, opt, remat=not args.smoke)
+
+    mesh = policy = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model")[:len(shape)] if len(shape) == 2 else \
+            ("pod", "data", "model")
+        mesh = mesh_lib.make_mesh(shape, axes)
+        policy = policy_lib.make_policy(mesh)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = model_lib.init_params(key, cfg)
+    opt_state = opt.init(params)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train] arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"optimizer={opt_name} mesh={args.mesh}")
+
+    pipe = data_lib.SyntheticLMData(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        batch_size=args.batch, seed=args.seed)
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    t0 = time.time()
+    losses = []
+    ctx = shctx.use_policy(policy) if policy else None
+    if ctx:
+        ctx.__enter__()
+    if mesh:
+        mesh.__enter__()
+    try:
+        for i, batch in enumerate(pipe.batches(args.steps)):
+            batch = data_lib.add_modality_stub(batch, cfg, seed=i)
+            params, opt_state, metrics = jit_step(params, opt_state, batch)
+            losses.append(float(metrics["loss"]))
+            if i % args.log_every == 0 or i == args.steps - 1:
+                print(f"  step {i:5d} loss={losses[-1]:.4f} "
+                      f"xent={float(metrics['xent']):.4f} "
+                      f"grad_norm={float(metrics['grad_norm']):.3f} "
+                      f"({(time.time()-t0)/(i+1):.2f}s/step)")
+    finally:
+        if mesh:
+            mesh.__exit__(None, None, None)
+        if ctx:
+            ctx.__exit__(None, None, None)
+
+    if args.checkpoint:
+        ckpt_lib.save(args.checkpoint, {"params": params}, step=args.steps)
+        print(f"[train] checkpoint -> {args.checkpoint}")
+    print(json.dumps({"first_loss": losses[0], "last_loss": losses[-1],
+                      "steps": args.steps}))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,243 @@
+"""Top-level model API: config -> init / train-loss / prefill / decode.
+
+This is the single entry point the training loop, the serving engine and the
+multi-pod dry-run all share:
+
+  * ``init_params(key, cfg)``                 parameter pytree
+  * ``lm_loss(params, cfg, batch)``           causal-LM loss for train_step
+  * ``prefill(params, cfg, batch, max_len)``  build KV/recurrent cache
+  * ``decode_step(params, cfg, cache, tok)``  one greedy decode step
+
+Batch layout per family:
+  dense / moe / ssm / hybrid :  {"tokens": (B, S) i32, "labels": (B, S) i32}
+  vlm   : + {"patches": (B, num_patch_tokens, D) bf16} (stub ViT frontend);
+          tokens/labels cover the S - num_patch_tokens text positions.
+  encdec: + {"frames": (B, encoder_seq_len, D) bf16} (stub audio frontend);
+          tokens/labels are the decoder sequence.
+
+Labels < 0 are ignored in the loss.  Logit positions >= cfg.vocab_size
+(vocab padding for shardability) are masked to -inf.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding import context as shctx
+
+from . import layers, multimodal, transformer
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _param_dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_encoder(key: Array, cfg, dtype) -> dict:
+    """Bidirectional encoder stack (seamless audio backbone)."""
+    n = cfg.num_encoder_layers
+    keys = jax.random.split(key, n)
+    blocks = jax.vmap(
+        lambda k: transformer.init_attn_mlp_block(k, cfg, dtype))(keys)
+    return {"blocks": blocks, "final_ln": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def init_params(key: Array, cfg) -> dict:
+    dtype = _param_dtype(cfg)
+    k_embed, k_stack, k_enc, k_front = jax.random.split(key, 4)
+    params = {
+        "embed": layers.init_embedding(k_embed, cfg, dtype),
+        "stack": transformer.init_stack(k_stack, cfg, dtype),
+        "final_ln": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if cfg.family == "encdec":
+        params["encoder"] = init_encoder(k_enc, cfg, dtype)
+    if cfg.frontend or cfg.family == "encdec":
+        params["frontend_proj"] = multimodal.init_projector(
+            k_front, cfg, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# encoder forward (bidirectional, scanned)
+# ---------------------------------------------------------------------------
+
+
+def encode(params: dict, cfg, frames: Array, *, remat: bool = False) -> Array:
+    """frames: (B, Te, D) stub frontend embeddings -> encoder memory."""
+    x = multimodal.apply_projector(params["frontend_proj"], frames)
+    x = shctx.constrain(x, ("batch", None, None))
+    Te = x.shape[1]
+    positions = jnp.arange(Te)
+
+    def body(x, p):
+        x = shctx.constrain(x, ("batch", "seq", None))
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = layers.attention_qkv(p["attn"], h, positions,
+                                       cfg.rope_theta)
+        attn = layers.chunked_attention(
+            q, k, v, q_positions=positions, kv_positions=positions,
+            causal=False)
+        x = x + layers.attention_out(p["attn"], attn)
+        x = x + layers.apply_mlp(
+            p["mlp"], layers.rms_norm(x, p["ln2"], cfg.norm_eps),
+            cfg.mlp_act)
+        return x, None
+
+    # without remat the encoder scan saves every per-layer attention
+    # intermediate for the backward pass — tens of GiB at train_4k
+    x, _ = lax.scan(jax.checkpoint(body) if remat else body, x,
+                    params["encoder"]["blocks"])
+    return layers.rms_norm(x, params["encoder"]["final_ln"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# decoder input assembly
+# ---------------------------------------------------------------------------
+
+
+def _decoder_inputs(params: dict, cfg, batch: dict, *, remat: bool = False):
+    """Returns (x, ctx, num_prefix) where num_prefix is the count of
+    non-text positions (VLM patches) prepended before the tokens."""
+    tokens = batch["tokens"]
+    x = layers.embed(params["embed"], tokens, cfg)
+    num_prefix = 0
+    if cfg.frontend == "vision":
+        patches = multimodal.apply_projector(
+            params["frontend_proj"], batch["patches"]).astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        num_prefix = patches.shape[1]
+    x = shctx.constrain(x, ("batch", None, None))
+    S = x.shape[1]
+    ctx = {"positions": jnp.arange(S), "enc_out": None}
+    if cfg.family == "encdec":
+        ctx["enc_out"] = encode(params, cfg, batch["frames"], remat=remat)
+    return x, ctx, num_prefix
+
+
+# ---------------------------------------------------------------------------
+# loss (chunked over sequence so (B, S, V) logits never materialize)
+# ---------------------------------------------------------------------------
+
+
+def chunked_xent(params: dict, cfg, x: Array, labels: Array,
+                 chunk: int = 1024):
+    """x: (B, S, D) final hidden states; labels: (B, S) (<0 = ignore).
+
+    Computes sum of per-token NLL and the token count, scanning over
+    sequence chunks: peak logits memory is (B, chunk, V) instead of
+    (B, S, V) — for the 1T MoE at train_4k that is the difference between
+    ~343 MB/device and ~2.7 GB/device.
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    xs = x.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        nll_sum, count = carry
+        xc, lc = inp
+        logits = layers.logits(params["embed"], xc, cfg)     # (B, c, V) f32
+        logits = shctx.constrain(logits, ("batch", None, "vocab"))
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        nll = (logz - ll) * mask
+        return (nll_sum + nll.sum(), count + mask.sum()), None
+
+    (nll_sum, count), _ = lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (xs, ls))
+    return nll_sum, count
+
+
+def lm_loss(params: dict, cfg, batch: dict, *, remat: bool = False):
+    """Causal-LM loss. Returns (loss, metrics)."""
+    x, ctx, num_prefix = _decoder_inputs(params, cfg, batch, remat=remat)
+    x, _, aux = transformer.apply_stack(
+        params["stack"], x, ctx, cfg, cache=None, mode="train", remat=remat)
+    x = layers.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    if num_prefix:
+        x = x[:, num_prefix:]
+    # gather the (possibly sequence-sharded) final hiddens: chunked_xent
+    # scans over sequence chunks, and scanning over a sharded dim would
+    # force GSPMD reshards inside the loop.
+    x = shctx.constrain(x, ("batch", None, None))
+    # next-token prediction: hidden state at position t predicts labels[t]
+    nll_sum, count = chunked_xent(params, cfg, x, batch["labels"])
+    xent = nll_sum / jnp.maximum(count, 1.0)
+    loss = xent + aux["moe_aux_loss"]
+    metrics = {
+        "loss": loss,
+        "xent": xent,
+        "tokens": count,
+        "moe_aux_loss": aux["moe_aux_loss"],
+        "moe_drop_frac": aux["moe_drop_frac"],
+    }
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-step decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(params: dict, cfg, batch: dict, max_len: int,
+            cache_dtype=jnp.bfloat16):
+    """Run the prompt through the stack, building the decode cache.
+
+    Returns (cache, last_logits) where last_logits: (B, V) are the logits
+    at the final prompt position (the sampler consumes them).
+    """
+    x, ctx, _ = _decoder_inputs(params, cfg, batch)
+    B, S = x.shape[0], x.shape[1]
+    cache = transformer.init_cache(cfg, B, max_len, cache_dtype)
+    x, new_cache, _ = transformer.apply_stack(
+        params["stack"], x, ctx, cfg, cache=cache, mode="prefill")
+    x = layers.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    last = x[:, -1]
+    last_logits = layers.logits(params["embed"], last[:, None], cfg)[:, 0]
+    # global decode bookkeeping
+    cap = cache["slot_pos"].shape[0]
+    new_cache["pos"] = jnp.asarray(S, jnp.int32)
+    new_cache["slot_pos"] = transformer.prefill_slot_pos(cap, S)
+    return new_cache, last_logits.astype(jnp.float32)
+
+
+def decode_step(params: dict, cfg, cache: dict, token: Array):
+    """One greedy decode step.
+
+    token: (B, 1) i32 — the token sampled from the previous step's logits.
+    Returns (next_token (B, 1) i32, logits (B, V) f32, new_cache).
+    """
+    x = layers.embed(params["embed"], token, cfg)
+    x = shctx.constrain(x, ("batch", None, None))
+    ctx = {"pos": cache["pos"], "slot_pos": cache["slot_pos"]}
+    x, new_cache, _ = transformer.apply_stack(
+        params["stack"], x, ctx, cfg, cache=cache, mode="decode")
+    x = layers.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = layers.logits(params["embed"], x, cfg)[:, 0]
+    logits = logits.astype(jnp.float32)
+    next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    # global bookkeeping (per-layer caches already updated in the stack)
+    cap = cache["slot_pos"].shape[0]
+    pos = cache["pos"]
+    new_cache["pos"] = pos + 1
+    new_cache["slot_pos"] = cache["slot_pos"].at[pos % cap].set(pos)
+    return next_token, logits, new_cache

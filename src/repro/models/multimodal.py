@@ -1,0 +1,57 @@
+"""Modality-frontend STUBS for the [vlm] and [audio] architectures.
+
+Per the assignment carve-out, the ViT/SigLIP vision encoder and the
+mel-spectrogram + conv feature extractor are NOT implemented; instead
+``input_specs()`` (launch/dryrun.py) provides precomputed patch / frame
+embeddings of the right shape, and this module provides
+
+  * the trainable projector that maps frontend embeddings into the
+    language model's embedding space (the LLaVA-style ``mm_projector``),
+  * helpers to synthesize random embeddings for smoke tests / examples.
+
+The language / decoder transformer that CONSUMES these embeddings is fully
+implemented in ``repro.models``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+Array = jax.Array
+
+
+def init_projector(key: Array, cfg, dtype) -> dict:
+    """Two-layer MLP projector (LLaVA-1.5+ style mlp2x_gelu)."""
+    D = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": layers.dense_init(k1, (D, D), dtype),
+        "b1": jnp.zeros((D,), dtype),
+        "w2": layers.dense_init(k2, (D, D), dtype),
+        "b2": jnp.zeros((D,), dtype),
+    }
+
+
+def apply_projector(params: dict, emb: Array) -> Array:
+    """emb: (B, T_front, D) frontend embeddings -> LM embedding space."""
+    h = jax.nn.gelu(emb @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def stub_patch_embeddings(key: Array, batch: int, cfg,
+                          dtype=jnp.bfloat16) -> Array:
+    """Random stand-in for ViT anyres patch embeddings (smoke/examples)."""
+    return jax.random.normal(
+        key, (batch, cfg.num_patch_tokens, cfg.d_model), jnp.float32
+    ).astype(dtype)
+
+
+def stub_frame_embeddings(key: Array, batch: int, cfg,
+                          dtype=jnp.bfloat16) -> Array:
+    """Random stand-in for conv-encoded audio frame embeddings."""
+    return jax.random.normal(
+        key, (batch, cfg.encoder_seq_len, cfg.d_model), jnp.float32
+    ).astype(dtype)

@@ -1,0 +1,208 @@
+"""Mamba-2 (SSD — state-space duality) blocks, pure JAX.
+
+Implements the chunked SSD algorithm (Dao & Gu 2024, arXiv:2405.21060):
+intra-chunk quadratic attention-like term + inter-chunk linear recurrence on
+the (heads, head_dim, state) tensor, carried with lax.scan.  Decode is an
+O(1) single-token state update — this is what makes mamba2 long_500k
+eligible.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding import context as shctx
+
+from . import layers
+
+Array = jax.Array
+
+
+def _segsum(a: Array) -> Array:
+    """a: (..., T) -> (..., T, T) with out[i,j] = sum(a[j+1..i]), -inf above diag."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def init_mamba2(key: Array, cfg, dtype) -> dict:
+    D = cfg.d_model
+    di, nh, ns = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_state
+    g, cw = cfg.ssm_groups, cfg.ssm_conv_width
+    conv_dim = di + 2 * g * ns
+    ks = jax.random.split(key, 6)
+    a = jax.random.uniform(ks[3], (nh,), jnp.float32, 1.0, 16.0)
+    # dt bias: softplus^-1 of dt sampled in [1e-3, 1e-1]
+    dt = jnp.exp(jax.random.uniform(ks[4], (nh,), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": layers.dense_init(
+            ks[0], (D, 2 * di + 2 * g * ns + nh), dtype),
+        "conv_w": layers.dense_init(ks[1], (cw, conv_dim), dtype, scale=0.1),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(a),
+        "dt_bias": dt_bias,
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": layers.dense_init(ks[2], (di, D), dtype),
+    }
+
+
+def _split_proj(proj: Array, cfg):
+    di, nh, ns, g = (cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_state,
+                     cfg.ssm_groups)
+    z = proj[..., :di]
+    xBC = proj[..., di:di + di + 2 * g * ns]
+    dt = proj[..., -nh:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: Array, w: Array, b: Array,
+                 state: Optional[Array] = None):
+    """Depthwise causal conv over time. xBC: (B, S, C); w: (W, C).
+
+    Returns (out, new_state) where state is the last W-1 inputs.
+    """
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xBC.shape[0], W - 1, xBC.shape[-1]), xBC.dtype)
+    xp = jnp.concatenate([state, xBC], axis=1)              # (B, S+W-1, C)
+    out = sum(xp[:, i:i + xBC.shape[1]] * w[i] for i in range(W)) + b
+    new_state = xp[:, -(W - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x: Array, a: Array, B_: Array, C_: Array, chunk: int,
+                init_state: Optional[Array] = None):
+    """Chunked SSD scan.
+
+    x: (b, s, h, p)  — already multiplied by dt (discrete input)
+    a: (b, s, h)     — dt * A  (negative)
+    B_, C_: (b, s, g, n); heads h are grouped into g groups.
+    Returns (y: (b, s, h, p), final_state: (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B_.shape[2], B_.shape[3]
+    rep = h // g
+    Q = min(chunk, s)
+    nc = -(-s // Q)
+    pad = nc * Q - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    xc = x.reshape(b, nc, Q, h, p)
+    ac = a.reshape(b, nc, Q, h).transpose(0, 3, 1, 2)        # (b,h,nc,Q)
+    Bh = jnp.repeat(B_.reshape(b, nc, Q, g, n), rep, axis=3)  # (b,nc,Q,h,n)
+    Ch = jnp.repeat(C_.reshape(b, nc, Q, g, n), rep, axis=3)
+
+    acs = jnp.cumsum(ac, axis=-1)                            # (b,h,nc,Q)
+    L = jnp.exp(_segsum(ac))                                 # (b,h,nc,Q,Q)
+    y_diag = jnp.einsum("bcqhn,bckhn,bhcqk,bckhp->bcqhp",
+                        Ch, Bh, L.astype(Ch.dtype), xc,
+                        preferred_element_type=jnp.float32)
+
+    decay_states = jnp.exp(acs[..., -1:] - acs)              # (b,h,nc,Q)
+    states = jnp.einsum("bckhn,bhck,bckhp->bchpn",
+                        Bh, decay_states.astype(Bh.dtype), xc,
+                        preferred_element_type=jnp.float32)   # (b,c,h,p,n)
+    chunk_decay = jnp.exp(acs[..., -1])                      # (b,h,nc)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                        # (b,h,p,n),(b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry
+
+    st0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+           else init_state.astype(jnp.float32))
+    final, prev = lax.scan(
+        scan_fn, st0,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(2, 0, 1)))
+    prev = prev.transpose(1, 0, 2, 3, 4)                     # (b,nc,h,p,n)
+
+    y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp",
+                       Ch, prev.astype(Ch.dtype),
+                       jnp.exp(acs).astype(Ch.dtype),
+                       preferred_element_type=jnp.float32)
+    y = (y_diag + y_off).reshape(b, nc * Q, h, p)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def apply_mamba2(params: dict, x: Array, cfg,
+                 state: Optional[dict] = None):
+    """Full Mamba-2 mixer. x: (B, S, D).
+
+    state: None for training/prefill-from-scratch, else
+    {"conv": (B, W-1, convdim), "ssd": (B, H, P, N)} for chunk-wise
+    continuation.  Returns (out, new_state).
+    """
+    B, S, D = x.shape
+    nh, ns, g = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    p = cfg.ssm_head_dim
+    proj = x @ params["in_proj"]
+    z, xBC, dt = _split_proj(proj, cfg)
+    conv_in_state = None if state is None else state["conv"]
+    xBC, conv_state = _causal_conv(xBC, params["conv_w"], params["conv_b"],
+                                   conv_in_state)
+    di = cfg.ssm_d_inner
+    xs = xBC[..., :di].reshape(B, S, nh, p)
+    xs = shctx.constrain(xs, ("batch", None, "heads", None))
+    B_ = xBC[..., di:di + g * ns].reshape(B, S, g, ns)
+    C_ = xBC[..., di + g * ns:].reshape(B, S, g, ns)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                            # (nh,)
+    a = dt * A                                               # (B,S,nh)
+    x_in = xs * dt[..., None].astype(xs.dtype)
+    ssd_in_state = None if state is None else state["ssd"]
+    y, final = ssd_chunked(x_in, a, B_, C_, cfg.ssm_chunk, ssd_in_state)
+    y = y + xs * params["D"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B, S, di)
+    y = layers.gated_rms_norm(y, z, params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, {"conv": conv_state, "ssd": final}
+
+
+def decode_mamba2(params: dict, x: Array, cfg, state: dict):
+    """O(1) single-token step. x: (B, 1, D)."""
+    B = x.shape[0]
+    nh, ns, g, p = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups, \
+        cfg.ssm_head_dim
+    di = cfg.ssm_d_inner
+    proj = x[:, 0] @ params["in_proj"]                      # (B, ...)
+    z, xBC, dt = _split_proj(proj, cfg)
+    # conv: append token to state buffer
+    conv_state = state["conv"]                               # (B, W-1, C)
+    xp = jnp.concatenate([conv_state, xBC[:, None]], axis=1)  # (B, W, C)
+    w = params["conv_w"]
+    out = jnp.einsum("bwc,wc->bc", xp, w) + params["conv_b"]
+    xBC = jax.nn.silu(out)
+    new_conv = xp[:, 1:]
+    xs = xBC[..., :di].reshape(B, nh, p)
+    B_ = xBC[..., di:di + g * ns].reshape(B, g, ns)
+    C_ = xBC[..., di + g * ns:].reshape(B, g, ns)
+    rep = nh // g
+    Bh = jnp.repeat(B_, rep, axis=1)                         # (B, nh, ns)
+    Ch = jnp.repeat(C_, rep, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,nh)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)                                  # (B, nh)
+    h = state["ssd"]                                         # (B,nh,p,ns)
+    dBx = jnp.einsum("bh,bhn,bhp->bhpn", dt, Bh.astype(jnp.float32),
+                     xs.astype(jnp.float32))
+    h_new = h * decay[..., None, None] + dBx
+    y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), h_new)
+    y = y.astype(xs.dtype) + xs * params["D"][None, :, None].astype(xs.dtype)
+    y = y.reshape(B, di)
+    y = layers.gated_rms_norm(y, z, params["norm"], cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None]
+    return out, {"conv": new_conv, "ssd": h_new}

@@ -1,0 +1,457 @@
+"""Decoder stacks for every assigned architecture family.
+
+Design notes:
+  * Layers are stacked along a leading axis and executed with ``lax.scan``
+    so HLO size / compile time stay O(1 layer) even for the 61-layer 1T MoE
+    at 512 devices.  Heterogeneous stacks (RecurrentGemma's rec/rec/attn
+    pattern, MoE dense prefixes) scan over "superblocks" of one pattern
+    repeat, with the non-multiple remainder unrolled.
+  * KV caches are ring buffers of capacity ``min(window, max_len)`` so
+    sliding-window / local-attention archs keep bounded decode state
+    (long_500k eligibility).  ``slot_pos`` carries the absolute position of
+    each slot; masking in the attention ops uses positions, so ring
+    non-monotonicity is harmless.
+  * All functions are functional; ``mode`` is one of train|prefill|decode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding import context as shctx
+
+from . import layers, moe as moe_lib, rglru, ssm
+from .layers import rms_norm
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# block init
+# ---------------------------------------------------------------------------
+
+
+def init_attn_mlp_block(key, cfg, dtype, *, use_moe=False, cross=False):
+    ks = jax.random.split(key, 5)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": layers.init_attention(ks[0], cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if use_moe:
+        p["moe"] = moe_lib.init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff,
+                                   cfg.mlp_act, dtype)
+    if cross:
+        p["ln_x"] = jnp.zeros((cfg.d_model,), dtype)
+        p["xattn"] = layers.init_attention(ks[2], cfg, dtype)
+    return p
+
+
+def init_ssm_block(key, cfg, dtype):
+    return {"ln": jnp.zeros((cfg.d_model,), dtype),
+            "mixer": ssm.init_mamba2(key, cfg, dtype)}
+
+
+def init_rec_block(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+            "rec": rglru.init_rglru_block(ks[0], cfg, dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff,
+                                   cfg.mlp_act, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# KV-cache ring buffer helpers
+# ---------------------------------------------------------------------------
+
+
+def kv_cache_capacity(cfg, max_len: int, window: Optional[int]) -> int:
+    return min(window, max_len) if window else max_len
+
+
+def empty_slot_pos(capacity: int) -> Array:
+    return jnp.full((capacity,), 2**30, jnp.int32)
+
+
+def prefill_write_kv(cache_k, cache_v, k, v, slot_pos_template=None):
+    """Write a freshly prefilled sequence of length S into a ring cache.
+
+    cache_k/v: (B, W, KV, D); k/v: (B, S, KV, D).  Prefill always starts at
+    position 0, so slots are positions mod W.  Returns new caches + the
+    slot->position map (W,).
+    """
+    Wc = cache_k.shape[1]
+    S = k.shape[1]
+    if S >= Wc:
+        tail_k, tail_v = k[:, S - Wc:], v[:, S - Wc:]
+        shift = S % Wc
+        new_k = jnp.roll(tail_k, shift, axis=1).astype(cache_k.dtype)
+        new_v = jnp.roll(tail_v, shift, axis=1).astype(cache_v.dtype)
+        slot_pos = jnp.roll(jnp.arange(S - Wc, S, dtype=jnp.int32), shift)
+    else:
+        new_k = lax.dynamic_update_slice_in_dim(
+            cache_k, k.astype(cache_k.dtype), 0, axis=1)
+        new_v = lax.dynamic_update_slice_in_dim(
+            cache_v, v.astype(cache_v.dtype), 0, axis=1)
+        slot_pos = empty_slot_pos(Wc).at[:S].set(
+            jnp.arange(S, dtype=jnp.int32))
+    return new_k, new_v, slot_pos
+
+
+def prefill_slot_pos(capacity: int, seq_len: int) -> Array:
+    """Slot -> absolute-position map after prefilling ``seq_len`` tokens."""
+    if seq_len >= capacity:
+        shift = seq_len % capacity
+        return jnp.roll(
+            jnp.arange(seq_len - capacity, seq_len, dtype=jnp.int32), shift)
+    return empty_slot_pos(capacity).at[:seq_len].set(
+        jnp.arange(seq_len, dtype=jnp.int32))
+
+
+def decode_write_kv(cache_k, cache_v, k, v, pos):
+    """Write one token (B, 1, KV, D) at ring slot pos % W."""
+    Wc = cache_k.shape[1]
+    idx = (pos % Wc).astype(jnp.int32)
+    new_k = lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), idx, axis=1)
+    new_v = lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), idx, axis=1)
+    return new_k, new_v
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _attn_seq(p, x, positions, cfg, window, kv_len_hint=None):
+    """Full-sequence self attention (train / prefill compute)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = layers.attention_qkv(p["attn"], h, positions, cfg.rope_theta)
+    S = x.shape[1]
+    policy = shctx.current()
+    q_chunk = 1024
+    if policy is not None and policy.use_seq_attention(S, cfg.num_heads):
+        # sequence-sharded attention (heads don't divide the model axis):
+        # q stays sharded on its seq dim — no q-chunk scan, so the
+        # sharded dim is never scanned over; kv still streams in chunks.
+        q_chunk = S
+    if window is not None and window < S:
+        # (windowed attention keeps its own chunking: its per-chunk kv
+        # span is what makes it sub-quadratic; no assigned arch combines
+        # SWA with a non-divisible head count)
+        attn = layers.windowed_attention(
+            q, k, v, q_positions=positions, kv_positions=positions,
+            window=window)
+    else:
+        attn = layers.chunked_attention(
+            q, k, v, q_positions=positions, kv_positions=positions,
+            causal=True, window=window, q_chunk=q_chunk)
+    return x + layers.attention_out(p["attn"], attn), k, v
+
+
+def _attn_decode(p, x, cache_k, cache_v, pos, slot_pos, cfg, window):
+    """One-token self attention against the ring cache."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = layers.attention_qkv(p["attn"], h, pos[None], cfg.rope_theta)
+    new_k, new_v = decode_write_kv(cache_k, cache_v, k, v, pos)
+    Wc = cache_k.shape[1]
+    new_slot_pos = slot_pos.at[pos % Wc].set(pos)
+    valid = jnp.minimum(pos + 1, Wc)
+    attn = layers.decode_attention(
+        q, new_k, new_v, q_position=pos, kv_positions=new_slot_pos,
+        valid_len=valid, window=window)
+    return (x + layers.attention_out(p["attn"], attn), new_k, new_v,
+            new_slot_pos)
+
+
+def _project_enc_kv(p, enc_out):
+    """Per-layer K/V projections of the shared encoder memory (no rope)."""
+    enc_k = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wk"])
+    enc_v = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wv"])
+    return enc_k, enc_v
+
+
+def _cross_attn(p, x, enc_k, enc_v, cfg):
+    """Cross attention against the (already projected) encoder memory."""
+    h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["xattn"]["wq"])
+    Te = enc_k.shape[1]
+    pos_q = jnp.full((x.shape[1],), Te, jnp.int32)  # attend to everything
+    attn = layers.chunked_attention(
+        q, enc_k, enc_v, q_positions=pos_q,
+        kv_positions=jnp.arange(Te), causal=False)
+    return x + jnp.einsum("bshk,hkd->bsd", attn, p["xattn"]["wo"])
+
+
+def _mlp_part(p, x, cfg):
+    return x + layers.apply_mlp(p["mlp"], rms_norm(x, p["ln2"],
+                                                   cfg.norm_eps), cfg.mlp_act)
+
+
+def _moe_part(p, x, cfg, capacity_factor=None):
+    y, aux = moe_lib.apply_moe(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                               cfg)
+    return x + y, aux
+
+
+ZERO_AUX = {"moe_aux_loss": jnp.float32(0.0), "moe_drop_frac": jnp.float32(0.0)}
+
+
+def apply_block_seq(kind, p, x, ctx, cfg, cache=None):
+    """Full-sequence application of one block.
+
+    ctx: dict(positions, enc_k, enc_v).  cache: per-layer cache pytree or
+    None (train).  Returns (x, new_cache, aux).
+    """
+    positions = ctx["positions"]
+    aux = ZERO_AUX
+    # "seq" resolves to "model" only under the seq-parallel policy flag —
+    # the residual stream (and thus every saved layer input under remat)
+    # is then sequence-sharded between blocks (16x less live memory).
+    x = shctx.constrain(x, ("batch", "seq", None))
+    if kind in ("dense", "moe", "cross"):
+        window = cfg.window if kind != "attn_local" else cfg.local_window
+        x, k, v = _attn_seq(p, x, positions, cfg, window)
+        new_cache = None
+        if cache is not None:
+            nk, nv, _ = prefill_write_kv(cache["k"], cache["v"], k, v)
+            new_cache = dict(cache, k=nk, v=nv)
+        if kind == "cross":
+            enc_k, enc_v = _project_enc_kv(p, ctx["enc_out"])
+            x = _cross_attn(p, x, enc_k, enc_v, cfg)
+            if new_cache is not None:
+                new_cache["enc_k"] = enc_k.astype(new_cache["enc_k"].dtype)
+                new_cache["enc_v"] = enc_v.astype(new_cache["enc_v"].dtype)
+        if kind == "moe":
+            x, aux = _moe_part(p, x, cfg)
+        else:
+            x = _mlp_part(p, x, cfg)
+        return x, new_cache, aux
+    if kind == "attn_local":
+        x, k, v = _attn_seq(p, x, positions, cfg, cfg.local_window)
+        new_cache = None
+        if cache is not None:
+            nk, nv, _ = prefill_write_kv(cache["k"], cache["v"], k, v)
+            new_cache = dict(cache, k=nk, v=nv)
+        return _mlp_part(p, x, cfg), new_cache, aux
+    if kind == "ssm":
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        y, new_state = ssm.apply_mamba2(p["mixer"], h, cfg,
+                                        None if cache is None else cache)
+        return x + y, new_state, aux
+    if kind == "rec":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, new_state = rglru.apply_recurrent_block(
+            p["rec"], h, cfg, None if cache is None else cache)
+        return _mlp_part(p, x + y, cfg), new_state, aux
+    raise ValueError(kind)
+
+
+def apply_block_decode(kind, p, x, ctx, cfg, cache):
+    pos = ctx["pos"]
+    slot_pos = ctx["slot_pos"]
+    aux = ZERO_AUX
+    x = shctx.constrain(x, ("batch", None, None))
+    if kind in ("dense", "moe", "cross"):
+        x, nk, nv, _ = _attn_decode(p, x, cache["k"], cache["v"], pos,
+                                    slot_pos, cfg, cfg.window)
+        if kind == "cross":
+            x = _cross_attn(p, x, cache["enc_k"], cache["enc_v"], cfg)
+        if kind == "moe":
+            x, aux = _moe_part(p, x, cfg)
+        else:
+            x = _mlp_part(p, x, cfg)
+        return x, dict(cache, k=nk, v=nv), aux
+    if kind == "attn_local":
+        x, nk, nv, _ = _attn_decode(p, x, cache["k"], cache["v"], pos,
+                                    slot_pos, cfg, cfg.local_window)
+        return _mlp_part(p, x, cfg), dict(cache, k=nk, v=nv), aux
+    if kind == "ssm":
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        y, new_state = ssm.decode_mamba2(p["mixer"], h, cfg, cache)
+        return x + y, new_state, aux
+    if kind == "rec":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, new_state = rglru.decode_recurrent_block(p["rec"], h, cfg, cache)
+        return _mlp_part(x=x + y, p=p, cfg=cfg), new_state, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stack structure: pattern of block kinds -> scanned superblocks + remainder
+# ---------------------------------------------------------------------------
+
+
+def stack_pattern(cfg) -> tuple[tuple[str, ...], int, tuple[str, ...],
+                                tuple[str, ...]]:
+    """Returns (pattern, n_repeats, prefix_kinds, tail_kinds)."""
+    if cfg.family == "moe":
+        prefix = ("dense",) * cfg.num_dense_layers
+        n = cfg.num_layers - cfg.num_dense_layers
+        return ("moe",), n, prefix, ()
+    if cfg.family == "ssm":
+        return ("ssm",), cfg.num_layers, (), ()
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn_local")
+        n = cfg.num_layers // len(pat)
+        rem = cfg.num_layers - n * len(pat)
+        return pat, n, (), pat[:rem]
+    # dense / vlm / encdec decoder
+    kind = "cross" if cfg.family == "encdec" else "dense"
+    return (kind,), cfg.num_layers, (), ()
+
+
+def _init_kind(kind, key, cfg, dtype):
+    if kind == "dense":
+        return init_attn_mlp_block(key, cfg, dtype)
+    if kind == "moe":
+        return init_attn_mlp_block(key, cfg, dtype, use_moe=True)
+    if kind == "cross":
+        return init_attn_mlp_block(key, cfg, dtype, cross=True)
+    if kind == "attn_local":
+        return init_attn_mlp_block(key, cfg, dtype)
+    if kind == "ssm":
+        return init_ssm_block(key, cfg, dtype)
+    if kind == "rec":
+        return init_rec_block(key, cfg, dtype)
+    raise ValueError(kind)
+
+
+def init_stack(key, cfg, dtype) -> dict:
+    pat, n, prefix, tail = stack_pattern(cfg)
+    out = {}
+    kp, ks, kt = jax.random.split(key, 3)
+    for i, kind in enumerate(prefix):
+        out[f"prefix{i}"] = _init_kind(kind, jax.random.fold_in(kp, i),
+                                       cfg, dtype)
+    if n > 0:
+        for s, kind in enumerate(pat):
+            keys = jax.random.split(jax.random.fold_in(ks, s), n)
+            out[f"scan{s}"] = jax.vmap(
+                lambda k: _init_kind(kind, k, cfg, dtype))(keys)
+    for i, kind in enumerate(tail):
+        out[f"tail{i}"] = _init_kind(kind, jax.random.fold_in(kt, i),
+                                     cfg, dtype)
+    return out
+
+
+def _sum_aux(a, b):
+    return {k: a[k] + b[k] for k in a}
+
+
+def apply_stack(params: dict, x: Array, ctx: dict, cfg, cache=None,
+                mode: str = "train", remat: bool = False):
+    """Run the whole block stack. Returns (x, new_cache, aux)."""
+    pat, n, prefix, tail = stack_pattern(cfg)
+    aux = dict(ZERO_AUX)
+    new_cache = {} if cache is not None else None
+    apply_fn = apply_block_decode if mode == "decode" else apply_block_seq
+
+    for i, kind in enumerate(prefix):
+        c = None if cache is None else cache[f"prefix{i}"]
+        x, nc, a = apply_fn(kind, params[f"prefix{i}"], x, ctx, cfg, c)
+        aux = _sum_aux(aux, a)
+        if new_cache is not None:
+            new_cache[f"prefix{i}"] = nc
+
+    if n > 0:
+        def superblock(x, inp):
+            ps, cs = inp
+            auxes = dict(ZERO_AUX)
+            ncs = [None] * len(pat)
+            for s, kind in enumerate(pat):
+                c = None if cs is None else cs[s]
+                x, nc, a = apply_fn(kind, ps[s], x, ctx, cfg, c)
+                auxes = _sum_aux(auxes, a)
+                ncs[s] = nc
+            if cs is None:
+                return x, auxes
+            return x, (tuple(ncs), auxes)
+
+        body = jax.checkpoint(superblock) if (remat and mode == "train") \
+            else superblock
+        p_stacked = tuple(params[f"scan{s}"] for s in range(len(pat)))
+        if cache is None:
+            x, auxes = lax.scan(body, x, (p_stacked, None))
+        else:
+            c_stacked = tuple(cache[f"scan{s}"] for s in range(len(pat)))
+            x, (nc_stacked, auxes) = lax.scan(body, x,
+                                              (p_stacked, c_stacked))
+            for s in range(len(pat)):
+                new_cache[f"scan{s}"] = nc_stacked[s]
+        aux = _sum_aux(aux, jax.tree.map(jnp.sum, auxes))
+
+    for i, kind in enumerate(tail):
+        c = None if cache is None else cache[f"tail{i}"]
+        x, nc, a = apply_fn(kind, params[f"tail{i}"], x, ctx, cfg, c)
+        aux = _sum_aux(aux, a)
+        if new_cache is not None:
+            new_cache[f"tail{i}"] = nc
+
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# cache construction (zeros for the real engine; specs for the dry-run)
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_zeros(kind, cfg, batch, max_len, dtype):
+    if kind in ("dense", "moe", "cross", "attn_local"):
+        window = cfg.local_window if kind == "attn_local" else cfg.window
+        cap = kv_cache_capacity(cfg, max_len, window)
+        c = {"k": jnp.zeros((batch, cap, cfg.num_kv_heads, cfg.head_dim),
+                            dtype),
+             "v": jnp.zeros((batch, cap, cfg.num_kv_heads, cfg.head_dim),
+                            dtype)}
+        if kind == "cross":
+            c["enc_k"] = jnp.zeros(
+                (batch, cfg.encoder_seq_len, cfg.num_kv_heads, cfg.head_dim),
+                dtype)
+            c["enc_v"] = jnp.zeros_like(c["enc_k"])
+        return c
+    if kind == "ssm":
+        conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        return {"conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim),
+                                  dtype),
+                "ssd": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                                  cfg.ssm_state), jnp.float32)}
+    if kind == "rec":
+        lw = cfg.lru_width or cfg.d_model
+        return {"conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, lw),
+                                  dtype),
+                "h": jnp.zeros((batch, lw), jnp.float32)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    pat, n, prefix, tail = stack_pattern(cfg)
+    cache = {}
+    for i, kind in enumerate(prefix):
+        cache[f"prefix{i}"] = _layer_cache_zeros(kind, cfg, batch, max_len,
+                                                 dtype)
+    if n > 0:
+        for s, kind in enumerate(pat):
+            one = _layer_cache_zeros(kind, cfg, batch, max_len, dtype)
+            cache[f"scan{s}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), one)
+    for i, kind in enumerate(tail):
+        cache[f"tail{i}"] = _layer_cache_zeros(kind, cfg, batch, max_len,
+                                               dtype)
+    # global scalars
+    cap = kv_cache_capacity(cfg, max_len,
+                            cfg.window or (cfg.local_window
+                                           if cfg.family == "hybrid"
+                                           else None))
+    cache["pos"] = jnp.zeros((), jnp.int32)
+    cache["slot_pos"] = empty_slot_pos(cap if cfg.family != "ssm" else 1)
+    return cache

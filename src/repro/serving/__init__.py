@@ -1,0 +1,1 @@
+from . import engine, generate  # noqa: F401

@@ -1,0 +1,87 @@
+"""Batched generation on top of model.prefill / model.decode_step.
+
+Two drivers:
+  * ``generate()`` — host-loop greedy decoding with early exit when every
+    sequence hit EOS (used by the serving engine; the host loop is what a
+    real-time scheduler interleaves with queue management).
+  * ``generate_scan()`` — fully-jitted lax.scan decode for a fixed number
+    of steps (used by benchmarks; no host round-trips).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import model as model_lib
+
+PAD_ID = 0
+
+
+def make_prefill_fn(cfg, max_len: int):
+    @functools.partial(jax.jit, static_argnames=())
+    def prefill_fn(params, batch):
+        return model_lib.prefill(params, cfg, batch, max_len)
+
+    return prefill_fn
+
+
+def make_decode_fn(cfg):
+    @jax.jit
+    def decode_fn(params, cache, token):
+        return model_lib.decode_step(params, cfg, cache, token)
+
+    return decode_fn
+
+
+def generate(params, cfg, batch: dict, *, max_new_tokens: int,
+             eos_id: int = 1, prefill_fn=None, decode_fn=None):
+    """Greedy-decode a batch. Returns (tokens (B, T<=max_new), lengths)."""
+    max_len = batch["tokens"].shape[1] + max_new_tokens + 8
+    if cfg.frontend == "vision":
+        max_len += cfg.num_patch_tokens
+    prefill_fn = prefill_fn or make_prefill_fn(cfg, max_len)
+    decode_fn = decode_fn or make_decode_fn(cfg)
+
+    cache, last_logits = prefill_fn(params, batch)
+    B = batch["tokens"].shape[0]
+    token = jnp.argmax(last_logits, -1).astype(jnp.int32)[:, None]
+    done = (token[:, 0] == eos_id)
+    out = [token]
+    lengths = jnp.ones((B,), jnp.int32)
+    for _ in range(max_new_tokens - 1):
+        if bool(done.all()):
+            break
+        token, _, cache = decode_fn(params, cache, token)
+        token = jnp.where(done[:, None], PAD_ID, token)
+        lengths = lengths + (~done).astype(jnp.int32)
+        done = done | (token[:, 0] == eos_id)
+        out.append(token)
+    return jnp.concatenate(out, axis=1), lengths
+
+
+def generate_scan(params, cfg, batch: dict, *, max_new_tokens: int):
+    """Fixed-length jitted decode (benchmarks / dry-run style)."""
+    max_len = batch["tokens"].shape[1] + max_new_tokens + 8
+    if cfg.frontend == "vision":
+        max_len += cfg.num_patch_tokens
+
+    @jax.jit
+    def run(params, batch):
+        cache, last_logits = model_lib.prefill(params, cfg, batch, max_len)
+        token = jnp.argmax(last_logits, -1).astype(jnp.int32)[:, None]
+
+        def body(carry, _):
+            token, cache = carry
+            nt, _, cache = model_lib.decode_step(params, cfg, cache, token)
+            return (nt, cache), token
+
+        (_, _), tokens = lax.scan(
+            body, (token, cache), None, length=max_new_tokens)
+        return tokens[:, :, 0].T                       # (B, T)
+
+    return run(params, batch)

@@ -1,0 +1,1 @@
+from . import context, policy  # noqa: F401

@@ -1,0 +1,40 @@
+"""Ambient sharding-policy context.
+
+Model code is written once, device-layout-free; when a
+:class:`repro.sharding.policy.ShardingPolicy` is active (``use_policy``),
+``constrain(x, axes)`` lowers to ``jax.lax.with_sharding_constraint`` with
+the policy's resolution of *logical* axis names to mesh axes; with no policy
+active (single-device smoke tests) it is the identity.  This mirrors the
+logical-axis-rules pattern of production JAX frameworks without threading a
+mesh argument through every layer.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+_state = threading.local()
+
+
+def current():
+    return getattr(_state, "policy", None)
+
+
+@contextlib.contextmanager
+def use_policy(policy):
+    prev = getattr(_state, "policy", None)
+    _state.policy = policy
+    try:
+        yield policy
+    finally:
+        _state.policy = prev
+
+
+def constrain(x, axes: Sequence[Optional[str]]):
+    """Constrain array ``x`` with per-dim *logical* axis names (or None)."""
+    policy = current()
+    if policy is None:
+        return x
+    return policy.constrain(x, axes)

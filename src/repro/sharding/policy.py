@@ -1,0 +1,329 @@
+"""Logical-axis sharding policy with divisibility fallbacks.
+
+Mesh layout (launch/mesh.py):
+    single pod : (16, 16)      axes ("data", "model")
+    multi-pod  : (2, 16, 16)   axes ("pod", "data", "model")
+
+Logical axes used by the models:
+    batch      -> sharded over ("pod", "data") greedily (B=1 stays replicated)
+    fsdp       -> parameter d_model/reduction dims over ("data", "pod")
+                  (ZeRO-3 style: GSPMD all-gathers per layer inside the scan)
+    heads      -> q heads over "model" (falls back to replicate: 24-head
+                  archs like minitron/starcoder2 do not divide 16)
+    kv_heads   -> kv heads over "model" (kv=8 archs fall back to replicate;
+                  the KV *cache* instead shards its sequence dim, below)
+    vocab      -> padded vocab over "model" (always divisible: padding to a
+                  2048 multiple, see ModelConfig.padded_vocab)
+    experts    -> MoE expert dim over "model" (mixtral's 8 experts fall back
+                  to sharding the expert d_ff instead)
+    mlp        -> d_ff over "model"
+    model      -> generic model-parallel dim (ssm heads, lru width, ...)
+
+KV caches prefer kv_heads -> "model"; when kv does not divide the axis they
+shard the *sequence/window* dim over "model" instead — decode attention over
+a sequence-sharded cache costs one small all-reduce of (B, H, 1, d) partial
+numerators/denominators, which GSPMD derives from the softmax reductions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# preference lists: logical axis -> candidate mesh axes (greedy prefix)
+_PREFS = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data", "pod"),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "mlp": ("model",),
+    "model": ("model",),
+    "seq": ("model",),          # sequence parallelism (opt-in flag)
+    "expert_ff": ("data", "pod"),  # serving layout: expert d_ff over data
+    "kv_seq": ("model",),       # decode-cache sequence dim (ungated: the
+                                # cache itself is stored this way whenever
+                                # kv heads don't divide the model axis)
+}
+
+
+@dataclasses.dataclass
+class ShardingPolicy:
+    mesh: Mesh
+    # fsdp=False turns off parameter sharding over the data axes (pure DP +
+    # TP) — used as a perf-iteration knob for small models where per-layer
+    # FSDP all-gathers dominate the collective term.
+    fsdp: bool = True
+    # §Perf iteration knobs (see EXPERIMENTS.md):
+    # seq_parallel: shard the residual stream's sequence dim over "model"
+    # between blocks (Korthikanti-style) — 16x less saved-activation
+    # memory; also enables sequence-sharded attention for archs whose
+    # head count does not divide the model axis (minitron/starcoder2).
+    seq_parallel: bool = False
+    # serving: weight layout for prefill/decode — expert d_ff sharded over
+    # the data axes instead of ZeRO-style d_model sharding, so decode
+    # never all-gathers expert weights (it token-replicates instead);
+    # combine with fsdp=False for dense params.
+    serving: bool = False
+
+    # ------------------------------------------------------------------
+    def resolve(self, dim: int, logical: Optional[str]):
+        """Greedy prefix of the preference list whose product divides dim."""
+        if logical is None:
+            return None
+        if not self.fsdp and logical == "fsdp":
+            return None
+        if not self.seq_parallel and logical == "seq":
+            return None
+        chosen = []
+        prod = 1
+        for ax in _PREFS[logical]:
+            if ax not in self.mesh.axis_names:
+                continue
+            size = self.mesh.shape[ax]
+            if size == 1:
+                continue  # size-1 axes add nothing; keep specs clean
+            if dim % (prod * size) == 0:
+                chosen.append(ax)
+                prod *= size
+        if not chosen:
+            return None
+        return chosen[0] if len(chosen) == 1 else tuple(chosen)
+
+    def spec(self, shape: Sequence[int],
+             axes: Sequence[Optional[str]]) -> P:
+        assert len(shape) == len(axes), (shape, axes)
+        resolved = [self.resolve(d, a) for d, a in zip(shape, axes)]
+        # drop duplicate mesh-axis usage (a mesh axis may shard one dim only)
+        used = set()
+        out = []
+        for r in resolved:
+            if r is None:
+                out.append(None)
+                continue
+            rt = (r,) if isinstance(r, str) else tuple(r)
+            rt = tuple(a for a in rt if a not in used)
+            used.update(rt)
+            if not rt:
+                out.append(None)
+            elif len(rt) == 1:
+                out.append(rt[0])
+            else:
+                out.append(rt)
+        return P(*out)
+
+    def named(self, shape, axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, axes))
+
+    def constrain(self, x, axes):
+        return lax.with_sharding_constraint(x, self.named(x.shape, axes))
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    # ------------------------------------------------------------------
+    # perf-iteration layout helpers
+    # ------------------------------------------------------------------
+    def moe_axes(self, which: str):
+        """Expert-weight logical axes. which: 'gate_up' | 'down'.
+
+        Train layout: ZeRO-style d_model sharding over data ("fsdp").
+        Serving layout: d_ff over data ("expert_ff") so decode can
+        token-replicate instead of all-gathering weights per layer.
+        """
+        if self.serving:
+            return (("experts", None, "expert_ff") if which == "gate_up"
+                    else ("experts", "expert_ff", None))
+        return (("experts", "fsdp", "mlp") if which == "gate_up"
+                else ("experts", "mlp", "fsdp"))
+
+    def attn_q_axes(self, seq_len: int, num_heads: int):
+        """Query activation sharding: heads when divisible; else the
+        sequence dim under seq_parallel (minitron/starcoder2's 24 heads
+        do not divide the 16-wide model axis — without this fallback
+        their attention runs fully replicated over "model")."""
+        if self.resolve(num_heads, "heads") is not None:
+            return ("batch", None, "heads", None)
+        if self.seq_parallel and self.resolve(seq_len, "seq") is not None:
+            return ("batch", "seq", None, None)
+        return ("batch", None, None, None)
+
+    def use_seq_attention(self, seq_len: int, num_heads: int) -> bool:
+        return (self.resolve(num_heads, "heads") is None
+                and self.seq_parallel
+                and self.resolve(seq_len, "seq") is not None)
+
+    # ------------------------------------------------------------------
+    # parameter shardings (path-pattern rules over the params pytree)
+    # ------------------------------------------------------------------
+    def _param_axes(self, path: Tuple[str, ...],
+                    ndim: int) -> Tuple[Optional[str], ...]:
+        """Logical axes for a parameter leaf, by its pytree path."""
+        name = path[-1]
+        under_moe = "moe" in path
+        under_shared = "shared" in path
+
+        if name == "embedding":
+            return ("vocab", None)
+        if name == "lm_head":
+            return (None, "vocab")
+        if name in ("wq",):
+            return ("fsdp", "heads", None)
+        if name in ("wk", "wv"):
+            return ("fsdp", "kv_heads", None)
+        if name == "wo":
+            return ("heads", None, "fsdp")
+        if name == "router":
+            return (None, "experts")
+        if under_moe and not under_shared:
+            if name in ("w_gate", "w_up"):      # (E, D, F)
+                return self.moe_axes("gate_up")
+            if name == "w_down":                # (E, F, D)
+                return self.moe_axes("down")
+        if name in ("w_gate", "w_up"):           # dense mlp (D, F)
+            return ("fsdp", "mlp")
+        if name == "w_down":                     # (F, D)
+            return ("mlp", "fsdp")
+        # --- ssm (mamba2) ---
+        if name == "in_proj":                    # (D, X) X has mixed slices
+            return ("fsdp", None)
+        if name == "out_proj":                   # (di, D)
+            return ("model", "fsdp")
+        if name == "conv_w":                     # (W, C)
+            return (None, "model")
+        if name in ("conv_b", "norm"):
+            return ("model",)
+        if name in ("A_log", "dt_bias", "D"):
+            return ("model",)
+        # --- rglru ---
+        if name in ("w_x", "w_gate_branch"):     # (D, lw)
+            return ("fsdp", "model")
+        if name in ("w_a", "w_i"):               # (lw, lw)
+            return (None, "model")
+        if name in ("b_a", "b_i", "Lambda"):
+            return ("model",)
+        if name == "w_out":                      # (lw, D)
+            return ("model", "fsdp")
+        # --- projector / everything else (norms, scalars) ---
+        if name in ("w1", "w2"):                 # (D, D)
+            return ("fsdp", None)
+        return (None,) * ndim
+
+    def param_shardings(self, params):
+        """NamedSharding pytree matching ``params``.
+
+        Leaves under a ``scan*`` key carry a leading stacked-layer dim which
+        is never sharded.
+        """
+        def one(path, leaf):
+            names = tuple(
+                p.key for p in path
+                if isinstance(p, (jax.tree_util.DictKey,)))
+            ndim = leaf.ndim
+            scanned = any(n.startswith("scan") for n in names) or \
+                names[-2:-1] == ("blocks",) or "blocks" in names
+            trailing = ndim - 1 if scanned else ndim
+            axes = self._param_axes(names, trailing)
+            if len(axes) != trailing:
+                axes = (None,) * trailing
+            if scanned:
+                axes = (None,) + tuple(axes)
+            return self.named(leaf.shape, axes)
+
+        return jax.tree_util.tree_map_with_path(one, params)
+
+    # ------------------------------------------------------------------
+    # input / cache shardings
+    # ------------------------------------------------------------------
+    def batch_shardings(self, batch_example):
+        """Shardings for a train/prefill batch pytree: dim0 = global batch."""
+        def one(leaf):
+            axes = ("batch",) + (None,) * (leaf.ndim - 1)
+            return self.named(leaf.shape, axes)
+        return jax.tree_util.tree_map(one, batch_example)
+
+    def _cache_leaf_axes(self, path, shape):
+        name = path[-1]
+        if name in ("pos",):
+            return ()
+        if name == "slot_pos":
+            return (None,)
+        # strip the stacked-layer dim for scanned caches
+        scanned = any(n.startswith("scan") for n in path)
+        core = shape[1:] if scanned else shape
+        if name in ("k", "v", "enc_k", "enc_v"):
+            # (B, S, KV, hd): kv heads if divisible, else sequence
+            kv_ok = self.resolve(core[2], "kv_heads") is not None
+            axes = ("batch", None, "kv_heads", None) if kv_ok else \
+                ("batch", "model", None, None)
+        elif name == "conv":
+            axes = ("batch", None, "model")
+        elif name == "ssd":
+            axes = ("batch", "model", None, None)
+        elif name == "h":
+            axes = ("batch", "model")
+        else:
+            axes = (None,) * len(core)
+        if scanned:
+            axes = (None,) + tuple(axes)
+        return axes
+
+    def opt_shardings(self, opt_state_example):
+        """Shardings for optimizer state pytrees.
+
+        AdamW moments ("mu"/"nu" subtrees) mirror the parameter shardings
+        (paths end with the same leaf names).  Adafactor factored stats
+        ("stats"/.../{r,c,v}) derive from the parameter's axes: r drops
+        the last dim, c drops the second-to-last, v mirrors.
+        """
+        def one(path, leaf):
+            names = tuple(
+                p.key for p in path
+                if isinstance(p, (jax.tree_util.DictKey,)))
+            if names[-1] in ("step",):
+                return self.replicated()
+            scanned = any(n.startswith("scan") for n in names) or \
+                "blocks" in names
+            if names[-1] in ("r", "c", "v"):
+                pnames = names[1:-1]
+                trailing = (leaf.ndim if names[-1] != "r" else leaf.ndim) \
+                    - (1 if scanned else 0)
+                # parameter trailing ndim: r -> +1, c -> +1, v -> +0
+                p_nd = trailing + (1 if names[-1] in ("r", "c") else 0)
+                axes = self._param_axes(pnames, p_nd)
+                if len(axes) != p_nd:
+                    axes = (None,) * p_nd
+                if names[-1] == "r":
+                    axes = axes[:-1]
+                elif names[-1] == "c":
+                    axes = axes[:-2] + axes[-1:]
+            else:
+                pnames = names[1:]
+                trailing = leaf.ndim - (1 if scanned else 0)
+                axes = self._param_axes(pnames, trailing)
+                if len(axes) != trailing:
+                    axes = (None,) * trailing
+            if scanned:
+                axes = (None,) + tuple(axes)
+            return self.named(leaf.shape, axes)
+
+        return jax.tree_util.tree_map_with_path(one, opt_state_example)
+
+    def cache_shardings(self, cache_example):
+        def one(path, leaf):
+            names = tuple(
+                p.key for p in path
+                if isinstance(p, (jax.tree_util.DictKey,)))
+            axes = self._cache_leaf_axes(names, leaf.shape)
+            return self.named(leaf.shape, axes)
+        return jax.tree_util.tree_map_with_path(one, cache_example)
+
+
+def make_policy(mesh: Mesh, fsdp: bool = True) -> ShardingPolicy:
+    return ShardingPolicy(mesh=mesh, fsdp=fsdp)

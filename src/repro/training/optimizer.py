@@ -1,0 +1,159 @@
+"""Optimizers in pure JAX (no optax offline): AdamW and Adafactor.
+
+Both follow the (init, update) functional convention:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+AdamW keeps two f32 moments per parameter (3x params memory in f32) —
+fine up to ~10B-scale models on a pod.  Adafactor factors the second
+moment of every matrix into row/col statistics (O(n+m) instead of O(nm))
+and keeps no first moment — this is what the 1T-parameter Kimi-K2 config
+uses (see configs/registry + launch/train.py: family "moe" defaults to
+adafactor).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p + u.astype(p.dtype)).astype(p.dtype),
+        params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def one(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * jnp.square(g)
+            upd = -lr * ((mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return upd, mu, nu
+
+        out = jax.tree.map(one, grads, state["mu"], state["nu"], params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), factored second moment, no momentum
+# ---------------------------------------------------------------------------
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              min_dim_size_to_factor: int = 128) -> Optimizer:
+    def _factored(shape) -> bool:
+        # canonical rule: factor only when both trailing dims are large —
+        # keeps stacked-per-layer norm vectors (L, D) un-factored instead
+        # of nonsensically factoring across the layer axis.
+        return (len(shape) >= 2
+                and min(shape[-2:]) >= min_dim_size_to_factor)
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                row = jnp.zeros(p.shape[:-1], jnp.float32)
+                col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                return {"r": row, "c": col}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"step": jnp.zeros((), jnp.int32),
+                "stats": jax.tree.map(one, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = jnp.maximum(step.astype(jnp.float32), 1.0)
+        beta = 1.0 - t ** (-decay)
+
+        def one(g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(g.shape):
+                r = beta * s["r"] + (1 - beta) * g2.mean(axis=-1)
+                c = beta * s["c"] + (1 - beta) * g2.mean(axis=-2)
+                rc = r / jnp.maximum(
+                    r.mean(axis=-1, keepdims=True), 1e-30)
+                v = rc[..., None] * c[..., None, :]
+                new_s = {"r": r, "c": c}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                new_s = {"v": v}
+            u = g / jnp.sqrt(jnp.maximum(v, 1e-30))
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            return -lr * u, new_s
+
+        out = jax.tree.map(one, grads, state["stats"])
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        stats = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"step": step, "stats": stats}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr: float) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr=lr)
+    if name == "adafactor":
+        return adafactor(lr=lr)
+    raise ValueError(name)
+
+
+def default_optimizer_name(cfg) -> str:
+    """Per-arch default: factored states for >=100B-param models."""
+    return "adafactor" if cfg.param_count() > 50e9 else "adamw"

@@ -1,0 +1,42 @@
+"""The jitted training step: loss -> grad -> clip -> optimizer update."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+
+from . import optimizer as opt_lib
+
+
+def make_train_step(cfg, opt: opt_lib.Optimizer, *, remat: bool = True,
+                    clip_norm: float = 1.0):
+    """Returns train_step(params, opt_state, batch) -> (params', opt_state',
+    metrics).  Pure function of its inputs — jit/pjit it at the call site
+    with the sharding policy's in/out shardings."""
+
+    def loss_fn(params, batch):
+        return model_lib.lm_loss(params, cfg, batch, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        grads, grad_norm = opt_lib.clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = opt_lib.apply_updates(params, updates)
+        metrics = dict(metrics, grad_norm=grad_norm)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        _, metrics = model_lib.lm_loss(params, cfg, batch, remat=False)
+        return metrics
+
+    return eval_step

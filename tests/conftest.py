@@ -1,0 +1,11 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see the single real CPU device; only launch/dryrun.py (and
+the dedicated dry-run subprocess tests) use 512 placeholder devices."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

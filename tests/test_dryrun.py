@@ -1,0 +1,79 @@
+"""Dry-run machinery: input specs per shape/family, and two real
+512-placeholder-device lower+compile runs in subprocesses (the module
+sets XLA_FLAGS before importing jax, so it must own the process)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.launch import specs
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+@pytest.mark.parametrize("shape_name", list(configs.INPUT_SHAPES))
+def test_input_specs_shapes(arch, shape_name):
+    cfg = configs.get_config(arch)
+    shape = configs.INPUT_SHAPES[shape_name]
+    ok, _ = configs.shape_applicable(cfg, shape)
+    if not ok:
+        pytest.skip("documented long_500k skip")
+    args, _ = specs.input_specs(cfg, shape)
+    if shape.kind == "train":
+        params, opt_state, batch = args
+        assert batch["tokens"].shape[0] == shape.global_batch
+        total = batch["tokens"].shape[1] + (
+            cfg.num_patch_tokens if cfg.frontend == "vision" else 0)
+        assert total == shape.seq_len
+        assert batch["labels"].dtype == jnp.int32
+        if cfg.family == "encdec":
+            assert batch["frames"].shape == (
+                shape.global_batch, cfg.encoder_seq_len, cfg.d_model)
+    elif shape.kind == "prefill":
+        params, batch = args
+        assert batch["tokens"].shape[0] == shape.global_batch
+    else:
+        params, cache, token = args
+        assert token.shape == (shape.global_batch, 1)
+        # decode cache state is bounded for subquadratic archs
+        if cfg.family in ("ssm",):
+            assert "scan0" in cache
+
+    # no leaf is a concrete array (ShapeDtypeStructs only)
+    import jax
+    for leaf in jax.tree.leaves(args):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("h2o-danube-3-4b", "long_500k"),
+    ("mamba2-1.3b", "decode_32k"),
+])
+def test_dryrun_subprocess_512dev(arch, shape, tmp_path):
+    """Real production-mesh lower+compile in a fresh process."""
+    out = os.path.join(tmp_path, "res.json")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--out", out],
+        capture_output=True, text=True, timeout=540, env=env, cwd=REPO)
+    assert r.returncode == 0, r.stderr[-2000:]
+    res = json.load(open(out))
+    assert res["status"] == "ok"
+    assert res["mesh"]["shape"] == [16, 16]
+    assert res["roofline"]["flops_per_dev"] > 0
+    assert res["memory"]["resident_bytes_per_device"] > 0
+
+
+def test_long500k_skips_quadratic_archs():
+    shape = configs.INPUT_SHAPES["long_500k"]
+    cfg = configs.get_config("yi-6b")
+    ok, reason = configs.shape_applicable(cfg, shape)
+    assert not ok and "quadratic" in reason

@@ -1,0 +1,91 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps in interpret
+mode (the kernel bodies execute in Python on CPU; on TPU the same bodies
+compile via Mosaic)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (decode_attention as fd, flash_attention as fa,
+                           ref, rmsnorm as rn)
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,S,H,KV,D,causal,window", [
+    (1, 64, 4, 2, 32, True, None),
+    (2, 48, 4, 1, 16, True, None),     # MQA + padding (48 % 32 != 0)
+    (1, 96, 8, 8, 64, True, 24),       # MHA sliding window
+    (1, 32, 2, 2, 128, False, None),   # bidirectional (encoder)
+])
+def test_flash_attention_sweep(B, S, H, KV, D, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32).astype(dtype)
+    out = fa.flash_attention(q, k, v, causal=causal, window=window,
+                             block_q=32, block_k=32, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               want.astype(jnp.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,S,H,KV,D,block_k", [
+    (2, 128, 4, 2, 32, 32),
+    (1, 100, 8, 1, 64, 64),     # padding (100 % 64)
+    (3, 64, 4, 4, 16, 16),
+    (1, 512, 8, 2, 128, 128),   # long cache
+])
+def test_flash_decode_sweep(B, S, H, KV, D, block_k, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32).astype(dtype)
+    kc = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32).astype(dtype)
+    vc = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32).astype(dtype)
+    mask = jax.random.bernoulli(ks[3], 0.8, (B, S)).at[:, 0].set(True)
+    out = fd.flash_decode_attention(q, kc, vc, mask, block_k=block_k,
+                                    interpret=True)
+    want = ref.decode_attention_ref(q, kc, vc, mask=mask)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               want.astype(jnp.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape,block_rows", [
+    ((8, 128), 4), ((3, 5, 256), 8), ((17, 64), 8), ((1, 1024), 1),
+])
+def test_rmsnorm_sweep(shape, block_rows, dtype):
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, shape, jnp.float32).astype(dtype)
+    w = (jax.random.normal(key, shape[-1:], jnp.float32) * 0.2).astype(dtype)
+    out = rn.rms_norm(x, w, block_rows=block_rows, interpret=True)
+    want = ref.rms_norm_ref(x, w)
+    assert out.shape == x.shape and out.dtype == dtype
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               want.astype(jnp.float32), **_tol(dtype))
+
+
+def test_ops_wrappers_dispatch():
+    """use_pallas=False falls back to the layers implementations."""
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (1, 32, 4, 16))
+    k = jax.random.normal(ks[1], (1, 32, 2, 16))
+    v = jax.random.normal(ks[2], (1, 32, 2, 16))
+    a = ops.flash_attention(q, k, v, use_pallas=True, interpret=True,
+                            block_q=16, block_k=16)
+    b = ops.flash_attention(q, k, v, use_pallas=False)
+    np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+    x = jax.random.normal(ks[0], (4, 64))
+    w = jnp.zeros(64)
+    np.testing.assert_allclose(
+        ops.rms_norm(x, w, use_pallas=True, interpret=True),
+        ops.rms_norm(x, w, use_pallas=False), atol=1e-5, rtol=1e-5)

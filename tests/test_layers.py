@@ -1,0 +1,88 @@
+"""Attention/layer primitives vs naive oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.models import layers
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,KV,D,window", [
+    (2, 17, 17, 4, 2, 16, None),
+    (1, 64, 64, 4, 1, 32, None),
+    (2, 33, 33, 6, 6, 8, 9),
+    (1, 128, 128, 4, 2, 32, 16),
+])
+def test_chunked_attention_matches_ref(B, Sq, Sk, H, KV, D, window):
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Sk, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Sk, KV, D), jnp.float32)
+    pos = jnp.arange(Sq)
+    out = layers.chunked_attention(q, k, v, q_positions=pos,
+                                   kv_positions=pos, causal=True,
+                                   window=window, q_chunk=16, kv_chunk=16)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+def test_windowed_attention_matches_chunked():
+    key = jax.random.PRNGKey(2)
+    B, S, H, KV, D, W = 2, 96, 4, 2, 16, 24
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
+    pos = jnp.arange(S)
+    got = layers.windowed_attention(q, k, v, q_positions=pos,
+                                    kv_positions=pos, window=W, q_chunk=32)
+    want = ref.attention_ref(q, k, v, causal=True, window=W)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_ring_cache_semantics():
+    """Ring-buffer slot positions (non-monotonic) mask correctly."""
+    key = jax.random.PRNGKey(3)
+    B, H, KV, D, cap = 1, 2, 1, 8, 8
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, cap, KV, D), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, cap, KV, D), jnp.float32)
+    # cache holds positions 4..11 in ring order (8,9,10,11,4,5,6,7)
+    slot_pos = jnp.array([8, 9, 10, 11, 4, 5, 6, 7])
+    q_position = jnp.int32(12)
+    out = layers.decode_attention(q, kc, vc, q_position=q_position,
+                                  kv_positions=slot_pos,
+                                  valid_len=jnp.int32(cap), window=8)
+    # oracle: window 8 from pos 12 keeps positions 5..12 -> masks slot 4
+    mask = (slot_pos <= 12) & ((12 - slot_pos) < 8)
+    want = ref.decode_attention_ref(q[:, 0], kc, vc, mask=mask)
+    np.testing.assert_allclose(out[:, 0], want, atol=2e-5, rtol=2e-5)
+
+
+def test_rope_preserves_norm_and_relativity():
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (1, 6, 2, 16), jnp.float32)
+    pos = jnp.arange(6)
+    y = layers.apply_rope(x, pos)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(y, axis=-1), jnp.linalg.norm(x, axis=-1),
+        atol=1e-5, rtol=1e-5)
+    # relativity: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(key, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(5), (1, 1, 1, 16))
+    def dot_at(i, j):
+        qi = layers.apply_rope(q, jnp.array([i]))
+        kj = layers.apply_rope(k, jnp.array([j]))
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-4
+
+
+def test_rms_norm_zero_weight_unit_scale():
+    x = jnp.array([[3.0, 4.0]])
+    out = layers.rms_norm(x, jnp.zeros(2))
+    np.testing.assert_allclose(
+        jnp.sqrt(jnp.mean(out ** 2, -1)), 1.0, atol=1e-4)

@@ -1,0 +1,64 @@
+"""Hypothesis property tests over system invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rulegen
+from repro.models import transformer
+from repro.serving.engine import hash_tokenize
+
+text_strategy = st.text(
+    alphabet=st.characters(codec="ascii"), min_size=0, max_size=300)
+
+
+@settings(max_examples=80, deadline=None)
+@given(text=text_strategy)
+def test_rulegen_total_on_arbitrary_text(text):
+    """RULEGEN never crashes and always returns finite non-negative
+    intensities — it sits on the request hot path."""
+    r = rulegen.rulegen(text)
+    assert r.shape == (6,)
+    assert np.isfinite(r).all()
+    assert (r >= 0).all()
+    f = rulegen.features(text)
+    assert f.shape == (rulegen.FEATURE_DIM,)
+    assert np.isfinite(f).all()
+    s = rulegen.single_rule_score(text)
+    assert np.isfinite(s) and s >= 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(text=text_strategy, vocab=st.integers(10, 50000),
+       max_len=st.integers(1, 64))
+def test_hash_tokenize_in_range(text, vocab, max_len):
+    toks = hash_tokenize(text, vocab, max_len)
+    assert 1 <= len(toks) <= max(max_len, 1)
+    assert all(2 <= t < vocab for t in toks)
+
+
+@settings(max_examples=40, deadline=None)
+@given(cap=st.integers(1, 64), seq=st.integers(0, 200))
+def test_prefill_slot_pos_invariants(cap, seq):
+    """Ring-buffer slot map: every kept position is one of the last `cap`
+    prefilled positions, each exactly once, at slot pos % cap."""
+    sp = np.asarray(transformer.prefill_slot_pos(cap, seq))
+    assert sp.shape == (cap,)
+    kept = sp[sp < 2 ** 29]
+    expect = np.arange(max(0, seq - cap), seq)
+    assert sorted(kept.tolist()) == expect.tolist()
+    for pos in kept:
+        assert sp[pos % cap] == pos
+
+
+@settings(max_examples=30, deadline=None)
+@given(cap=st.integers(1, 32), seq=st.integers(1, 80),
+       extra=st.integers(1, 40))
+def test_ring_cache_decode_continuation(cap, seq, extra):
+    """Writing tokens one-by-one after prefill keeps the slot map exactly
+    consistent with a fresh prefill of the longer sequence."""
+    sp = jnp.asarray(transformer.prefill_slot_pos(cap, seq))
+    for pos in range(seq, seq + extra):
+        sp = sp.at[pos % cap].set(pos)
+    want = transformer.prefill_slot_pos(cap, seq + extra)
+    np.testing.assert_array_equal(np.asarray(sp), np.asarray(want))

@@ -1,0 +1,85 @@
+"""RULEGEN rules on the paper's Table I examples + predictor learning."""
+
+import numpy as np
+import pytest
+
+from repro.core import datagen, personas, predictor, rulegen, scheduler
+
+TABLE_I = {
+    "structural": "John saw a boy in the park with a telescope.",
+    "syntactic": "Rice flies like sand.",
+    "semantic": "What's the best way to deal with bats?",
+    "vague": "Tell me about the history of art.",
+    "open_ended": ("What are the causes and consequences of poverty in "
+                   "developing countries?"),
+    "multi_part": ("How do cats and dogs differ in behavior, diet, and "
+                   "social interaction?"),
+}
+
+
+@pytest.mark.parametrize("utype", list(TABLE_I))
+def test_table1_examples_fire_their_rule(utype):
+    scores = rulegen.rulegen(TABLE_I[utype])
+    idx = rulegen.UNCERTAINTY_TYPES.index(utype)
+    assert scores[idx] > 0, (utype, scores)
+
+
+def test_plain_sentence_scores_low():
+    plain = rulegen.rulegen("i had pasta for dinner yesterday.")
+    loaded = rulegen.rulegen(TABLE_I["open_ended"])
+    assert plain.sum() < loaded.sum()
+
+
+def test_single_rule_fallback_is_input_length():
+    text = "the cat sat on the mat."
+    r = rulegen.rulegen(text)
+    if r.max() <= 0:
+        assert rulegen.single_rule_score(text) == rulegen.input_length(text)
+
+
+def test_features_shape():
+    f = rulegen.features("hello world")
+    assert f.shape == (rulegen.FEATURE_DIM,)
+    assert np.isfinite(f).all()
+
+
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    tasks = datagen.generate_corpus(
+        datagen.VARIANCE_MIXES["large"], 1200, seed=0)
+    return datagen.train_test_split(tasks)
+
+
+def test_predictor_learns_output_length(corpus):
+    train, test = corpus
+    pred = predictor.train_predictor(train, "dialogpt", epochs=60, seed=0)
+    assert pred.train_losses[-1] < 0.3 * pred.train_losses[0]
+    scores = pred.score_batch([t.text for t in test])
+    truth = np.array([t.out_lens["dialogpt"] for t in test], np.float32)
+    corr = np.corrcoef(scores, truth)[0, 1]
+    assert corr > 0.85, corr  # paper Fig. 2d: "almost linearly dependent"
+
+
+def test_weighted_rule_beats_single_rule(corpus):
+    """Fig. 2 ordering: weighted-rule correlation >= single-rule."""
+    train, test = corpus
+    w = predictor.fit_weighted_rule(train, "dialogpt")
+    truth = np.array([t.out_lens["dialogpt"] for t in test], np.float32)
+    single = np.array([rulegen.single_rule_score(t.text) for t in test])
+    weighted = np.array(
+        [float(np.r_[rulegen.features(t.text), 1.0] @ w) for t in test])
+    c_single = np.corrcoef(single, truth)[0, 1]
+    c_weighted = np.corrcoef(weighted, truth)[0, 1]
+    assert c_weighted >= c_single - 0.02, (c_single, c_weighted)
+
+
+def test_offline_profile_tau_is_quantile(corpus):
+    train, _ = corpus
+    persona = personas.get_persona("bart")
+    prof = scheduler.offline_profile(train, persona, epochs=15, k=0.9)
+    scores = prof.predictor.score_batch([t.text for t in train])
+    frac_above = float(np.mean(scores > prof.tau))
+    assert 0.05 < frac_above < 0.15

@@ -1,0 +1,145 @@
+"""Algorithm-1 behaviors: Fig. 4 prioritization example, consolidation
+segmentation, offload thresholding, queue conservation."""
+
+import pytest
+
+from repro.core import priority as prio, scheduler as sched
+from repro.core.personas import Persona
+
+PERSONA = Persona("test", batch_size=4, malicious_tau=20.0, eta=1.0,
+                  phi=0.0, base_output=0, uncertainty_gain=1, noise_std=0,
+                  setup_time=0.0, cpu_slowdown=3.0, item_time=0.0)
+
+
+def mk(u, r=0.0, d=10.0, out=None):
+    return prio.SimTask(task=None, u=u, r=r, d=d, input_len=1.0,
+                        true_out_len=int(out if out is not None else u))
+
+
+def pcfg(**kw):
+    return sched.PolicyConfig(u_scale=10.0, tau=kw.pop("tau", 1e18), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4: UP beats HPF and LUF on priority-point misses
+# ---------------------------------------------------------------------------
+
+
+def test_fig4_up_fewer_misses_than_hpf_luf():
+    """Five simultaneous tasks; serial execution (batch size 1)."""
+    persona = Persona("fig4", batch_size=1, malicious_tau=1e9, eta=1.0,
+                      phi=0.0, base_output=0, uncertainty_gain=1,
+                      noise_std=0, setup_time=0.0, cpu_slowdown=3.0,
+                      item_time=0.0)
+    # (exec_time, priority point): mixture where HPF runs a long job first
+    jobs = [(5.0, 6.0), (1.0, 9.0), (2.0, 4.0), (1.0, 13.0), (3.0, 12.0)]
+
+    def run(order):
+        t, missed = 0.0, 0
+        for i in order:
+            t += jobs[i][0]
+            missed += t > jobs[i][1]
+        return missed
+
+    hpf = sorted(range(5), key=lambda i: jobs[i][1])
+    luf = sorted(range(5), key=lambda i: jobs[i][0])
+    up = sorted(range(5), key=lambda i: (1 - jobs[i][0] / 5.0)
+                / max(jobs[i][1] - jobs[i][0], 1e-6), reverse=True)
+    assert run(up) <= run(hpf)
+    assert run(up) <= run(luf)
+
+
+# ---------------------------------------------------------------------------
+# consolidation / segmentation (Alg. 1 lines 18-25)
+# ---------------------------------------------------------------------------
+
+
+def test_consolidation_reaches_batch_size_despite_lambda():
+    """The lambda cut never starves the executor below C (line 22 is a
+    disjunction)."""
+    policy = sched.UPC(PERSONA, pcfg(lam=1.01, b=2.0))
+    queue = [mk(u) for u in (1, 3, 9, 27, 81, 243, 729, 2187)]
+    gpu, cpu, rest = policy.select(queue, now=0.0)
+    assert len(gpu) == PERSONA.batch_size
+    assert not cpu
+    assert len(rest) == len(queue) - len(gpu)
+
+
+def test_consolidation_extends_homogeneous_batches():
+    policy = sched.UPC(PERSONA, pcfg(lam=1.5, b=1.8))
+    queue = [mk(u) for u in (10, 10.1, 10.2, 10.3, 10.4, 10.5, 10.6)]
+    gpu, _, rest = policy.select(queue, now=0.0)
+    # b*C = 7.2 -> all 7 homogeneous tasks fit one consolidated batch
+    assert len(gpu) == 7
+
+
+def test_consolidation_cuts_at_lambda_gap_beyond_C():
+    policy = sched.UPC(PERSONA, pcfg(lam=1.5, b=2.0))
+    queue = [mk(u) for u in (1, 1.1, 1.2, 1.3, 1.35, 100, 110, 120)]
+    gpu, _, rest = policy.select(queue, now=0.0)
+    assert len(gpu) == 5           # C=4 guaranteed, 1.35 joins, 100 cut
+    assert {t.u for t in rest} == {100, 110, 120}
+
+
+def test_batch_sorted_ascending_uncertainty():
+    policy = sched.UPC(PERSONA, pcfg())
+    queue = [mk(u) for u in (7, 3, 11, 5, 2, 13)]
+    gpu, _, _ = policy.select(queue, now=0.0)
+    us = [t.u for t in gpu]
+    assert us == sorted(us)
+
+
+# ---------------------------------------------------------------------------
+# strategic offloading (Alg. 1 lines 15-16)
+# ---------------------------------------------------------------------------
+
+
+def test_offload_above_tau_when_congested():
+    policy = sched.RTLM(PERSONA, pcfg(tau=20.0, b=1.5))
+    queue = [mk(u) for u in (1, 2, 3, 25, 4, 30, 5, 6, 7, 8)]
+    gpu, cpu, rest = policy.select(queue, now=0.0)
+    assert {t.u for t in cpu} == {25, 30}
+    assert all(t.u <= 20 for t in gpu)
+
+
+def test_no_offload_when_uncongested():
+    policy = sched.RTLM(PERSONA, pcfg(tau=20.0, b=1.5))
+    queue = [mk(u) for u in (1, 25, 3)]        # below b*C backlog
+    gpu, cpu, rest = policy.select(queue, now=0.0)
+    assert not cpu
+
+
+def test_select_conserves_tasks():
+    for cls in (sched.Policy, sched.HPF, sched.LUF, sched.MUF,
+                sched.SlackEq2, sched.UP, sched.UPC, sched.RTLM):
+        policy = cls(PERSONA, pcfg(tau=6.0))
+        queue = [mk(float(u)) for u in range(1, 12)]
+        gpu, cpu, rest = policy.select(queue, now=0.0)
+        got = sorted(t.u for t in gpu + cpu + rest)
+        assert got == sorted(t.u for t in queue), cls.name
+        assert len(gpu) <= int(PERSONA.batch_size * policy.pcfg.b) + 1
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2 / Eq. 3
+# ---------------------------------------------------------------------------
+
+
+def test_eq3_prefers_short_jobs_same_slack():
+    p_small = prio.eq3_priority(d=10, r=0, u=1, eta=0.0, alpha=1.0,
+                                u_scale=10)
+    p_large = prio.eq3_priority(d=10, r=0, u=9, eta=0.0, alpha=1.0,
+                                u_scale=10)
+    assert p_small > p_large
+
+
+def test_eq3_alpha_zero_reduces_to_slack():
+    for u in (1.0, 5.0, 9.0):
+        assert prio.eq3_priority(10, 0, u, 0.5, 0.0, 10) == pytest.approx(
+            prio.eq2_priority(10, 0, u, 0.5))
+
+
+def test_priority_point_uses_deadline_when_given():
+    assert prio.priority_point(5.0, 10, 0.1, deadline=42.0) == 42.0
+    assert prio.priority_point(5.0, 10, 0.1, None, xi=2.0) == \
+        pytest.approx(5.0 + 2.0 + 1.0)

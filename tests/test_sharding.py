@@ -1,0 +1,121 @@
+"""Sharding policy: divisibility fallbacks, spec validity, opt mirroring.
+
+Runs in a subprocess-free way: a host mesh needs multiple devices, so
+these tests build meshes from however many CPU devices exist (1 is fine —
+resolve() then degenerates to replication, which is also asserted)."""
+
+import math
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch import specs
+from repro.sharding import policy as policy_lib
+
+
+class FakeMesh:
+    """Shape-only stand-in (policy.resolve/spec never touch devices)."""
+
+    def __init__(self, shape_dict):
+        self._shape = dict(shape_dict)
+
+    @property
+    def shape(self):
+        return self._shape
+
+    @property
+    def axis_names(self):
+        return tuple(self._shape)
+
+
+def make_policy(shape_dict, fsdp=True):
+    return policy_lib.ShardingPolicy(mesh=FakeMesh(shape_dict), fsdp=fsdp)
+
+
+POD = {"data": 16, "model": 16}
+MULTIPOD = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_resolve_divisibility_fallback():
+    p = make_policy(POD)
+    assert p.resolve(64, "heads") == "model"       # 64 % 16 == 0
+    assert p.resolve(24, "heads") is None          # minitron heads
+    assert p.resolve(8, "kv_heads") is None        # kv=8 vs 16
+    assert p.resolve(384, "experts") == "model"    # kimi
+    assert p.resolve(8, "experts") is None         # mixtral -> F fallback
+
+
+def test_resolve_batch_greedy_multipod():
+    p = make_policy(MULTIPOD)
+    assert p.resolve(256, "batch") == ("pod", "data")
+    assert p.resolve(32, "batch") == ("pod", "data")
+    assert p.resolve(1, "batch") is None
+    # batch=8 divides pod(2) but not pod*data(32) -> pod only
+    assert p.resolve(8, "batch") == "pod"
+
+
+def test_spec_dedups_mesh_axes():
+    p = make_policy(POD)
+    # experts takes "model"; mlp then cannot reuse it
+    spec = p.spec((384, 7168, 2048), ("experts", "fsdp", "mlp"))
+    assert spec == P("model", "data", None)
+    # mixtral: experts unresolvable -> mlp gets "model"
+    spec = p.spec((8, 6144, 16384), ("experts", "fsdp", "mlp"))
+    assert spec == P(None, "data", "model")
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+@pytest.mark.parametrize("mesh_shape", [POD, MULTIPOD])
+def test_param_shardings_cover_all_leaves(arch, mesh_shape):
+    cfg = configs.get_config(arch)
+    params = specs.params_specs(cfg)
+    p = make_policy(mesh_shape)
+
+    # NamedSharding needs a real mesh; validate the raw specs instead
+    def one(path, leaf):
+        names = tuple(q.key for q in path
+                      if isinstance(q, jax.tree_util.DictKey))
+        scanned = any(n.startswith("scan") for n in names) or \
+            "blocks" in names
+        trailing = leaf.ndim - 1 if scanned else leaf.ndim
+        axes = p._param_axes(names, trailing)
+        if len(axes) != trailing:
+            axes = (None,) * trailing
+        if scanned:
+            axes = (None,) + tuple(axes)
+        spec = p.spec(leaf.shape, axes)
+        # every sharded dim must divide by the axis product
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is None:
+                continue
+            axt = (ax,) if isinstance(ax, str) else ax
+            prod = math.prod(mesh_shape[a] for a in axt)
+            assert dim % prod == 0, (arch, names, leaf.shape, spec)
+        return spec
+
+    jax.tree_util.tree_map_with_path(one, params)
+
+
+def test_big_params_are_sharded_on_pod_mesh():
+    """The 1T-model expert weights must not be replicated."""
+    cfg = configs.get_config("kimi-k2-1t-a32b")
+    params = specs.params_specs(cfg)
+    p = make_policy(MULTIPOD)
+    wg = params["stack"]["scan0"]["moe"]["w_gate"]     # (60,384,7168,2048)
+    axes = p._param_axes(("stack", "scan0", "moe", "w_gate"), 3)
+    spec = p.spec(wg.shape, (None,) + axes)
+    shards = 1
+    for ax in spec:
+        if ax:
+            axt = (ax,) if isinstance(ax, str) else ax
+            shards *= math.prod(MULTIPOD[a] for a in axt)
+    per_dev = np.prod(wg.shape) * 2 / shards
+    assert per_dev < 16e9 / 4, f"expert weights {per_dev/2**30:.1f} GiB/dev"
+
+
+def test_single_device_policy_replicates():
+    p = make_policy({"data": 1, "model": 1})
+    assert p.spec((64, 64), ("batch", "heads")) == P(None, None)

@@ -1,0 +1,97 @@
+"""Discrete-event simulator invariants + hypothesis property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (datagen, personas, priority as prio,
+                        scheduler as sched, simulator, workload)
+
+PERSONA = personas.get_persona("dialogpt")
+
+
+def _sim_tasks(us, arrivals):
+    return [prio.SimTask(task=None, u=float(u), r=float(r),
+                         d=float(r) + 4.0, input_len=5.0,
+                         true_out_len=max(1, int(u)))
+            for u, r in zip(us, arrivals)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    us=st.lists(st.floats(0.5, 60.0), min_size=1, max_size=60),
+    seed=st.integers(0, 10),
+    policy=st.sampled_from(["fifo", "hpf", "luf", "muf", "up", "up+c",
+                            "rt-lm"]),
+)
+def test_simulation_invariants(us, seed, policy):
+    """No task lost or duplicated; response >= service; finite makespan."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(0.3, len(us)))
+    tasks = _sim_tasks(us, arrivals)
+    pcfg = sched.PolicyConfig(u_scale=30.0, tau=35.0)
+    res = simulator.run_policy(tasks, policy, PERSONA, pcfg)
+    assert len(res.tasks) == len(us)                    # conservation
+    ids = sorted(id(t) for t in res.tasks)
+    assert len(set(ids)) == len(ids)                    # no duplication
+    for t in res.tasks:
+        assert t.finish >= t.start >= 0
+        assert t.start + 1e-9 >= t.r                    # causality
+        min_service = PERSONA.setup_time + PERSONA.eta * t.true_out_len
+        slow = PERSONA.cpu_slowdown if t.lane == "cpu" else 1.0
+        assert t.finish - t.start + 1e-6 >= min_service * min(slow, 1.0)
+    assert np.isfinite(res.makespan)
+
+
+def test_fifo_order_preserved_within_lane():
+    tasks = _sim_tasks([5] * 20, np.arange(20) * 0.1)
+    pcfg = sched.PolicyConfig(u_scale=30.0, tau=1e18)
+    res = simulator.run_policy(tasks, "fifo", PERSONA, pcfg)
+    starts = [t.start for t in sorted(res.tasks, key=lambda t: t.r)]
+    assert all(a <= b + 1e-9 for a, b in zip(starts, starts[1:]))
+
+
+def test_rtlm_improves_large_variance_workload():
+    """End-to-end reproduction of the paper's headline direction:
+    on a large-uncertainty-variance saturated workload, RT-LM beats FIFO
+    on mean response time and max response time."""
+    corpus = datagen.generate_corpus(
+        datagen.VARIANCE_MIXES["large"], 1600, seed=0)
+    train, test = datagen.train_test_split(corpus, train_frac=0.3)
+    prof = sched.offline_profile(train, PERSONA, epochs=40)
+    arrivals = workload.poisson_trace(
+        len(test), betas=list(range(60, 301, 60)), seed=1)
+    tasks = sched.make_sim_tasks(test, prof, PERSONA, arrivals)
+    pcfg = prof.policy_config()
+    fifo = simulator.run_policy(tasks, "fifo", PERSONA, pcfg)
+    rtlm = simulator.run_policy(tasks, "rt-lm", PERSONA, pcfg)
+    assert rtlm.mean_response < fifo.mean_response
+    assert rtlm.max_response < fifo.max_response
+    assert rtlm.throughput_per_min >= 0.95 * fifo.throughput_per_min
+
+
+def test_malicious_resilience():
+    """Fig. 14: at 30% malicious ratio RT-LM's mean response stays far
+    below FIFO's."""
+    corpus = datagen.generate_corpus(
+        datagen.VARIANCE_MIXES["normal"], 1200, seed=2,
+        malicious_frac=0.3)
+    train, test = datagen.train_test_split(corpus, train_frac=0.3)
+    prof = sched.offline_profile(train, PERSONA, epochs=40)
+    arrivals = workload.poisson_trace(
+        len(test), betas=list(range(60, 301, 60)), seed=3)
+    tasks = sched.make_sim_tasks(test, prof, PERSONA, arrivals)
+    pcfg = prof.policy_config()
+    fifo = simulator.run_policy(tasks, "fifo", PERSONA, pcfg)
+    rtlm = simulator.run_policy(tasks, "rt-lm", PERSONA, pcfg)
+    assert rtlm.mean_response < 0.5 * fifo.mean_response
+
+
+@settings(max_examples=10, deadline=None)
+@given(beta=st.integers(10, 300), n=st.integers(5, 80),
+       seed=st.integers(0, 5))
+def test_poisson_trace_properties(beta, n, seed):
+    arr = workload.constant_rate_trace(n, beta, seed)
+    assert len(arr) == n
+    assert all(b >= a for a, b in zip(arr, arr[1:]))
+    assert arr[0] >= 0
