@@ -1,0 +1,135 @@
+"""Head-to-head: continuous (iteration-level) batching vs the paper's
+run-to-completion batch mode, on a heterogeneous-output-length workload.
+
+Two measurements of the same trace:
+
+  * ``sim``    — persona latency model, deterministic (the number the
+    acceptance gate asserts on: throughput ratio and per-request mean
+    response).
+  * ``engine`` — the REAL JAX engine (tiny config on CPU), wall-clock
+    per prefill/decode-step, demonstrating the same effect end-to-end.
+
+The workload is bimodal output lengths (short tail / long tail, EOS
+disabled so lengths are exact): run-to-completion pays the longest
+member of every formed batch, continuous batching recycles each slot
+the step its sequence finishes.
+
+    PYTHONPATH=src python -m benchmarks.continuous_vs_batch
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import datagen, personas, priority as prio
+from repro.core import scheduler as sched, simulator
+
+from . import common
+
+N_REQUESTS = 96
+SHORT, LONG = 4, 48
+LONG_FRAC = 0.25
+BATCH_SLOTS = 8
+SEED = 0
+
+
+def build_workload(n=N_REQUESTS, seed=SEED):
+    corpus = datagen.generate_corpus(
+        datagen.VARIANCE_MIXES["normal"], n + 64, seed=seed)
+    train, test = datagen.train_test_split(corpus, train_frac=0.4)
+    rng = np.random.default_rng(seed)
+    caps = np.where(rng.random(n) < LONG_FRAC, LONG, SHORT).astype(int)
+    # saturated regime: everything arrives inside the first batching
+    # window, so the comparison isolates execution-model differences
+    arrivals = np.sort(rng.uniform(0.0, 0.5, size=n))
+    return train, test[:n], caps.tolist(), arrivals.tolist()
+
+
+def persona_for_bench():
+    return dataclasses.replace(personas.get_persona("bart"),
+                               batch_size=BATCH_SLOTS)
+
+
+def sim_tasks_for(test, caps, arrivals, profile, persona, xi=2.0):
+    out = []
+    for i, (t, c, r) in enumerate(zip(test, caps, arrivals)):
+        u = profile.predictor.score(t.text)
+        d = prio.priority_point(r, len(t.text.split()), persona.phi,
+                                None, xi=xi)
+        st = prio.SimTask(task=t, u=float(max(u, 0.0)), r=float(r), d=d,
+                          input_len=float(len(t.text.split())),
+                          true_out_len=int(c))
+        out.append(st)
+    return out
+
+
+def run_sim(policy_name="fifo"):
+    persona = persona_for_bench()
+    train, test, caps, arrivals = build_workload()
+    profile = sched.offline_profile(train, persona, epochs=20)
+    tasks = sim_tasks_for(test, caps, arrivals, profile, persona)
+    pcfg = profile.policy_config()
+    rtc = simulator.run_policy(tasks, policy_name, persona, pcfg,
+                               mode="batch")
+    cont = simulator.run_policy(tasks, policy_name, persona, pcfg,
+                                mode="continuous")
+    return {
+        "batch": rtc.summary(),
+        "continuous": cont.summary(),
+        "throughput_ratio": cont.throughput_per_min / rtc.throughput_per_min,
+        "mean_response_ratio": cont.mean_response / rtc.mean_response,
+    }
+
+
+def run_engine(policy_name="fifo", n=32):
+    """Same trace on the real JAX engine (tiny config, wall-clock)."""
+    import jax
+    from repro import configs
+    from repro.models import model as model_lib
+    from repro.serving.engine import Request, ServingEngine
+
+    persona = persona_for_bench()
+    train, test, caps, arrivals = build_workload(n=n)
+    profile = sched.offline_profile(train, persona, epochs=20)
+    cfg = configs.get_smoke_config("starcoder2-3b")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    out = {}
+    for mode in ("batch", "continuous"):
+        policy = sched.POLICIES[policy_name](persona,
+                                             profile.policy_config())
+        eng = ServingEngine(params, cfg, policy, profile, input_bucket=8,
+                            max_new_tokens=LONG, mode=mode, eos_id=-1)
+        reqs = [Request(text=t.text, arrival=a, task_id=i,
+                        max_new_tokens=c)
+                for i, (t, c, a) in enumerate(zip(test, caps, arrivals))]
+        res = eng.serve(reqs)
+        out[mode] = {k: res[k] for k in
+                     ("mean_response_s", "max_response_s",
+                      "throughput_per_min", "scheduler_overhead_s")}
+    out["throughput_ratio"] = (out["continuous"]["throughput_per_min"]
+                               / out["batch"]["throughput_per_min"])
+    out["mean_response_ratio"] = (out["continuous"]["mean_response_s"]
+                                  / out["batch"]["mean_response_s"])
+    return out
+
+
+def main():
+    t0 = time.time()
+    sim = run_sim("fifo")
+    common.save("continuous_vs_batch_sim", sim)
+    common.emit("continuous_vs_batch_sim", time.time() - t0,
+                f"throughput_x={sim['throughput_ratio']:.2f},"
+                f"mean_response_x={sim['mean_response_ratio']:.2f}")
+    t0 = time.time()
+    eng = run_engine("fifo")
+    common.save("continuous_vs_batch_engine", eng)
+    common.emit("continuous_vs_batch_engine", time.time() - t0,
+                f"throughput_x={eng['throughput_ratio']:.2f},"
+                f"mean_response_x={eng['mean_response_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

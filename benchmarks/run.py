@@ -13,7 +13,8 @@ import argparse
 import time
 import traceback
 
-from . import common, kernel_bench, paper_tables, roofline_report
+from . import (common, continuous_vs_batch, kernel_bench, paper_tables,
+               roofline_report)
 
 
 def run_paper_tables(only=None):
@@ -75,6 +76,14 @@ def run_roofline(only=None):
                     f"compute_bound={s['compute_bound']};fits={s['fits']}")
 
 
+def run_continuous(only=None):
+    if only and only not in ("continuous_vs_batch_sim",
+                             "continuous_vs_batch_engine",
+                             "continuous_vs_batch"):
+        return
+    continuous_vs_batch.main()
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -82,6 +91,7 @@ def main(argv=None):
     print("name,us_per_call,derived")
     run_paper_tables(args.only)
     run_kernels(args.only)
+    run_continuous(args.only)
     run_roofline(args.only)
     return 0
 

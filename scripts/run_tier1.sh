@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 verify in one command: pins PYTHONPATH=src and runs the suite.
+#
+#   scripts/run_tier1.sh              # full suite
+#   scripts/run_tier1.sh -m "not slow"  # fast lane (skips >1-min tests)
+#
+# Extra args are passed straight to pytest.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q "$@"

@@ -1,9 +1,18 @@
 """UASCHED (Algorithm 1) and the four baseline policies.
 
-A *policy* is a batch-former: given the pending queue at a dispatch
-instant it returns (gpu_batch, cpu_batch, remaining_queue).  The
-discrete-event simulator (core/simulator.py) and the real serving engine
-(serving/engine.py) both drive policies through this interface.
+A *policy* is driven through two interfaces; the discrete-event
+simulator (core/simulator.py) and the real serving engine
+(serving/engine.py) support both:
+
+  * ``select(queue, now)`` — batch-former: at a dispatch instant return
+    (gpu_batch, cpu_batch, remaining_queue) and run the gpu batch to
+    completion (the paper's execution model).
+  * ``admit(queue, now, running)`` — incremental admission for
+    continuous (iteration-level) batching: choose ONE task for a decode
+    slot freed this step, given the tasks currently occupying the other
+    slots.  Uncertainty-aware policies consolidate against the RUNNING
+    batch (admit the candidate whose predicted length is homogeneous
+    with it) and keep Alg. 1's tau offload as a congestion relief valve.
 
   FIFO  — arrival order, fixed batch size, uncertainty-oblivious.
   HPF   — earliest priority point first (deadline-monotonic analogue).
@@ -56,6 +65,25 @@ class Policy:
         order = sorted(queue, key=self.assign_priority, reverse=True)
         C = self.persona.batch_size
         return order[:C], [], order[C:]
+
+    # ------------------------------------------------------------------
+    def max_batch(self) -> int:
+        """Largest GPU batch ``select`` can return — the row count the
+        engine preallocates its batch-mode executables with.
+        Consolidating policies extend past C_f up to b * C_f (Alg. 1)."""
+        return self.persona.batch_size
+
+    # ------------------------------------------------------------------
+    def admit(self, queue: Batch, now: float,
+              running: Sequence[prio.SimTask] = ()
+              ) -> Tuple[Optional[prio.SimTask], str, Batch]:
+        """Incremental admission (continuous batching): pick ONE task for
+        a freed decode slot.  Returns (task | None, lane, rest) where
+        lane is "gpu" (admit into the slot) or "cpu" (offload)."""
+        if not queue:
+            return None, "gpu", []
+        order = sorted(queue, key=self.assign_priority, reverse=True)
+        return order[0], "gpu", order[1:]
 
 
 class HPF(Policy):
@@ -129,7 +157,8 @@ class UPC(UP):
         # batch) — otherwise the slow lane only inflates tail latency.
         congested = len(order) > target
         for t in order:
-            if self.offload and congested and t.u > pcfg.tau:
+            if self.offload and congested and \
+                    self._consolidation_u(t) > pcfg.tau:
                 cpu_batch.append(t)           # Alg. 1 line 15-16
             elif len(tmp) < target:
                 tmp.append(t)                 # line 18
@@ -141,13 +170,14 @@ class UPC(UP):
         # queued, and dynamic consolidation may *extend* it (up to b*C)
         # while uncertainty stays homogeneous; the lambda cut never
         # starves the executor below C.
-        tmp.sort(key=lambda t: t.u)
+        tmp.sort(key=self._consolidation_u)
         count = 0
-        u_prev = tmp[0].u if tmp else 0.0
+        u_prev = self._consolidation_u(tmp[0]) if tmp else 0.0
         while count < len(tmp) and (
                 count < C
-                or tmp[count].u <= pcfg.lam * max(u_prev, 1e-9)):
-            u_prev = tmp[count].u
+                or self._consolidation_u(tmp[count])
+                <= pcfg.lam * max(u_prev, 1e-9)):
+            u_prev = self._consolidation_u(tmp[count])
             count += 1
         gpu_batch = tmp[:count]
         rest = tmp[count:] + rest
@@ -156,6 +186,47 @@ class UPC(UP):
         if not gpu_batch and not cpu_batch and rest:
             gpu_batch, rest = rest[:C], rest[C:]
         return gpu_batch, cpu_batch, rest
+
+    def max_batch(self) -> int:
+        C = self.persona.batch_size
+        return max(C, int(math.floor(self.pcfg.b * C)))
+
+    # ------------------------------------------------------------------
+    def _consolidation_u(self, t: prio.SimTask) -> float:
+        """The uncertainty key consolidation/offload decisions use (the
+        tail-aware variant overrides this with the P90 prediction)."""
+        return t.u
+
+    def admit(self, queue: Batch, now: float,
+              running: Sequence[prio.SimTask] = ()
+              ) -> Tuple[Optional[prio.SimTask], str, Batch]:
+        """Continuous-batching Alg. 1 analogue.  Priority (Eq. 3) ranks
+        the queue; the slot goes to whichever of the top-⌈b⌉ candidates
+        is most length-homogeneous with the RUNNING batch (dynamic
+        consolidation against live slots instead of a formed batch).
+        Under congestion, a predicted-malicious (u > tau) front-runner is
+        offloaded to the CPU lane exactly as in batch mode."""
+        if not queue:
+            return None, "gpu", []
+        pcfg, C = self.pcfg, self.persona.batch_size
+        for t in queue:
+            t.p = self.assign_priority(t)
+        order = sorted(queue, key=lambda t: t.p, reverse=True)
+        congested = len(order) > int(math.floor(pcfg.b * C))
+        if self.offload and congested and \
+                self._consolidation_u(order[0]) > pcfg.tau:
+            return order[0], "cpu", order[1:]
+        window = order[:max(1, int(math.ceil(pcfg.b)))]
+        if running:
+            anchor = (sum(self._consolidation_u(t) for t in running)
+                      / len(running))
+            pick = min(window,
+                       key=lambda t: abs(self._consolidation_u(t) - anchor))
+        else:
+            # empty engine: seed the batch with the least-uncertain of
+            # the candidates (Alg. 1's ascending-u re-sort analogue)
+            pick = min(window, key=self._consolidation_u)
+        return pick, "gpu", [t for t in order if t is not pick]
 
 
 class RTLM(UPC):
@@ -173,18 +244,10 @@ class RTLMQ(RTLM):
 
     name = "rt-lm-q"
 
-    def select(self, queue, now):
-        # temporarily expose u_hi as the consolidation key
-        saved = [(t, t.u) for t in queue]
-        for t in queue:
-            t.p = self.assign_priority(t)      # priority on mean u
-            t.u = t.u_hi                       # consolidation on tail u
-        try:
-            gpu, cpu, rest = super().select(queue, now)
-        finally:
-            for t, u in saved:
-                t.u = u
-        return gpu, cpu, rest
+    def _consolidation_u(self, t):
+        # consolidation/offload on tail u; priorities (assign_priority)
+        # keep using the mean prediction t.u
+        return t.u_hi
 
 
 POLICIES = {p.name: p for p in (Policy, HPF, LUF, MUF, SlackEq2,

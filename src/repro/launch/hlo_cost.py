@@ -146,8 +146,16 @@ def _dot_flops(comp: Computation, op: Op) -> float:
     lhs_dims_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
     if not (m and lhs_dims_m):
         return 0.0
-    lhs_name = m.group(1).split(",")[0].strip().lstrip("%")
-    lhs_shapes = comp.shape_of(lhs_name)
+    # Operands may be typed ("f32[64,128]{1,0} %Arg_0.1") or bare
+    # ("%Arg_0.1") depending on the HLO printer; layout braces contain
+    # commas, so splitting the operand list on "," is unsafe.  Take the
+    # first %name token as the lhs, and fall back to the inline operand
+    # shape when the name doesn't resolve (e.g. cross-computation refs).
+    operand_txt = m.group(1)
+    name_m = re.search(r"%([\w\.\-]+)", operand_txt)
+    lhs_shapes = comp.shape_of(name_m.group(1)) if name_m else []
+    if not lhs_shapes:
+        lhs_shapes = _parse_shapes(operand_txt.split("%")[0])
     if not lhs_shapes:
         return 2.0 * res  # unknown contraction — lower bound
     lhs_dims = lhs_shapes[0][1]

@@ -235,6 +235,10 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array, *,
     q: (B, 1, H, D); caches: (B, Smax, KV, D); valid_len: scalar int —
     number of populated cache slots; kv_positions: (Smax,) absolute
     positions of cache entries (ring buffers make these non-monotonic).
+
+    Per-slot (continuous-batching) form: q_position (B,), valid_len (B,)
+    and kv_positions (B, Smax) — every batch row tracks an independent
+    sequence, so the validity mask is computed per row.
     """
     B, _, H, D = q.shape
     _, Sm, KV, _ = k_cache.shape
@@ -262,10 +266,18 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array, *,
     if seq_sharded:
         s = policy.constrain(s, ("batch", None, None, "kv_seq"))
     idx = jnp.arange(Sm)
-    mask = (idx < valid_len) & (kv_positions <= q_position)
-    if window is not None:
-        mask &= (q_position - kv_positions) < window
-    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    q_pos = jnp.asarray(q_position)
+    if q_pos.ndim:                          # per-slot decode: (B,) state
+        mask = ((idx[None, :] < jnp.asarray(valid_len)[:, None])
+                & (kv_positions <= q_pos[:, None]))
+        if window is not None:
+            mask &= (q_pos[:, None] - kv_positions) < window
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    else:
+        mask = (idx < valid_len) & (kv_positions <= q_position)
+        if window is not None:
+            mask &= (q_position - kv_positions) < window
+        s = jnp.where(mask[None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)

@@ -225,6 +225,11 @@ def decode_step(params: dict, cfg, cache: dict, token: Array):
 
     token: (B, 1) i32 — the token sampled from the previous step's logits.
     Returns (next_token (B, 1) i32, logits (B, V) f32, new_cache).
+
+    Works on both cache layouts: batch-mode (scalar ``pos``, (W,)
+    ``slot_pos`` — every row at the same position) and per-slot
+    continuous-batching caches from ``transformer.init_slot_cache``
+    (``pos`` (B,), ``slot_pos`` (B, W) — independent sequences).
     """
     x = layers.embed(params["embed"], token, cfg)
     x = shctx.constrain(x, ("batch", None, None))
@@ -236,8 +241,25 @@ def decode_step(params: dict, cfg, cache: dict, token: Array):
     logits = logits.astype(jnp.float32)
     next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
     # global bookkeeping (per-layer caches already updated in the stack)
-    cap = cache["slot_pos"].shape[0]
+    cap = cache["slot_pos"].shape[-1]
     pos = cache["pos"]
     new_cache["pos"] = pos + 1
-    new_cache["slot_pos"] = cache["slot_pos"].at[pos % cap].set(pos)
+    if pos.ndim:
+        rows = jnp.arange(pos.shape[0])
+        new_cache["slot_pos"] = cache["slot_pos"].at[rows, pos % cap].set(pos)
+    else:
+        new_cache["slot_pos"] = cache["slot_pos"].at[pos % cap].set(pos)
     return next_token, logits, new_cache
+
+
+def prefill_into_slot(params: dict, cfg, cache: dict, batch: dict, slot,
+                      max_len: int, cache_dtype=jnp.bfloat16):
+    """Prefill ONE request (batch dim 1) and write its state into row
+    ``slot`` of a per-slot decode cache (continuous-batching admission).
+
+    The evicted slot's KV/recurrent state is fully replaced.  Returns
+    (new_cache, last_logits (V,)).  ``max_len`` must match the max_len
+    the slot cache was built with so the ring capacities line up.
+    """
+    one, last_logits = prefill(params, cfg, batch, max_len, cache_dtype)
+    return transformer.write_slot(cache, one, slot), last_logits[0]

@@ -117,9 +117,19 @@ def prefill_slot_pos(capacity: int, seq_len: int) -> Array:
 
 
 def decode_write_kv(cache_k, cache_v, k, v, pos):
-    """Write one token (B, 1, KV, D) at ring slot pos % W."""
+    """Write one token (B, 1, KV, D) at ring slot pos % W.
+
+    ``pos`` is either a scalar (batch-mode decode: every row sits at the
+    same position) or a (B,) vector (continuous batching: every slot
+    tracks an independent sequence), in which case each row scatters at
+    its own ring slot."""
     Wc = cache_k.shape[1]
     idx = (pos % Wc).astype(jnp.int32)
+    if idx.ndim:
+        rows = jnp.arange(cache_k.shape[0])
+        new_k = cache_k.at[rows, idx].set(k[:, 0].astype(cache_k.dtype))
+        new_v = cache_v.at[rows, idx].set(v[:, 0].astype(cache_v.dtype))
+        return new_k, new_v
     new_k = lax.dynamic_update_slice_in_dim(
         cache_k, k.astype(cache_k.dtype), idx, axis=1)
     new_v = lax.dynamic_update_slice_in_dim(
@@ -159,12 +169,22 @@ def _attn_seq(p, x, positions, cfg, window, kv_len_hint=None):
 
 
 def _attn_decode(p, x, cache_k, cache_v, pos, slot_pos, cfg, window):
-    """One-token self attention against the ring cache."""
+    """One-token self attention against the ring cache.
+
+    pos is a scalar with slot_pos (W,) in batch mode, or (B,) with
+    slot_pos (B, W) in per-slot (continuous-batching) mode — every batch
+    row then advances an independent sequence.
+    """
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
-    q, k, v = layers.attention_qkv(p["attn"], h, pos[None], cfg.rope_theta)
+    q, k, v = layers.attention_qkv(p["attn"], h, pos[..., None],
+                                   cfg.rope_theta)
     new_k, new_v = decode_write_kv(cache_k, cache_v, k, v, pos)
     Wc = cache_k.shape[1]
-    new_slot_pos = slot_pos.at[pos % Wc].set(pos)
+    if pos.ndim:
+        rows = jnp.arange(slot_pos.shape[0])
+        new_slot_pos = slot_pos.at[rows, pos % Wc].set(pos)
+    else:
+        new_slot_pos = slot_pos.at[pos % Wc].set(pos)
     valid = jnp.minimum(pos + 1, Wc)
     attn = layers.decode_attention(
         q, new_k, new_v, q_position=pos, kv_positions=new_slot_pos,
@@ -455,3 +475,48 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
     cache["pos"] = jnp.zeros((), jnp.int32)
     cache["slot_pos"] = empty_slot_pos(cap if cfg.family != "ssm" else 1)
     return cache
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: per-slot cache (independent sequence per batch row)
+# ---------------------------------------------------------------------------
+
+
+def init_slot_cache(cfg, num_slots: int, max_len: int,
+                    dtype=jnp.bfloat16) -> dict:
+    """A decode cache whose ``pos``/``slot_pos`` are tracked PER SLOT:
+    pos (C,) i32 and slot_pos (C, W) i32, so each batch row runs an
+    independent sequence (admitted/evicted at any decode step)."""
+    cache = init_cache(cfg, num_slots, max_len, dtype)
+    cap = cache["slot_pos"].shape[0]
+    cache["pos"] = jnp.zeros((num_slots,), jnp.int32)
+    cache["slot_pos"] = jnp.broadcast_to(
+        empty_slot_pos(cap), (num_slots, cap)).copy()
+    return cache
+
+
+def write_slot(cache: dict, one: dict, slot) -> dict:
+    """Scatter a freshly-prefilled single-sequence cache (batch dim 1,
+    scalar pos, (W,) slot_pos — exactly what ``model.prefill`` returns
+    for a (1, S) batch) into row ``slot`` of a per-slot decode cache.
+
+    Every per-layer KV/state row of the recycled slot is REPLACED and
+    its slot_pos row reset, so no state from the evicted sequence can
+    leak into the admitted one.  ``slot`` may be a traced index — the
+    whole update jit-compiles to dynamic-update-slices.
+    """
+    out = {}
+    for key, big in cache.items():
+        if key == "pos":
+            out[key] = big.at[slot].set(one["pos"].astype(big.dtype))
+        elif key == "slot_pos":
+            out[key] = big.at[slot].set(one["slot_pos"])
+        else:
+            # scanned layer caches carry a leading layer axis; batch is
+            # axis 1 there and axis 0 for prefix/tail layer caches.
+            ax = 1 if key.startswith("scan") else 0
+            out[key] = jax.tree.map(
+                lambda b, o: lax.dynamic_update_slice_in_dim(
+                    b, o.astype(b.dtype), slot, axis=ax),
+                big, one[key])
+    return out

@@ -2,9 +2,24 @@
 
 This is the end-to-end integration of the paper's ecosystem with the
 model substrate: requests (text + arrival time) flow through RULEGEN ->
-m_theta -> the UASCHED policy, and the formed batches run REAL batched
-prefill/greedy-decode on the JAX engine (tiny configs on CPU; the same
-code path jit-lowers for the production mesh).
+m_theta -> the UASCHED policy, and execution happens on the REAL batched
+prefill/greedy-decode JAX engine (tiny configs on CPU; the same code
+path jit-lowers for the production mesh).
+
+Two execution modes:
+
+  * ``mode="batch"`` — the paper's run-to-completion model: the policy
+    forms whole batches, each batch decodes until its LONGEST member
+    finishes (head-of-line blocking on output-length variance — exactly
+    the pathology RT-LM quantifies).
+  * ``mode="continuous"`` — iteration-level batching: a persistent
+    decode loop over C slots backed by one preallocated per-slot KV
+    cache (transformer.init_slot_cache).  Finished sequences are evicted
+    PER DECODE STEP and the policy's ``admit`` is consulted to fill each
+    freed slot (uncertainty-aware admission instead of batch formation).
+    Admission prefills the request into its slot through one jitted
+    executable (bucketed (1, input_bucket) shape, traced slot index);
+    the decode step reuses one jitted (C, 1) executable throughout.
 
 Adaptation note (DESIGN.md §2): a CPU-only container has no heterogeneous
 co-processor, so the "CPU lane" is a *bulk lane* — a second execution
@@ -12,8 +27,10 @@ queue drained only when the main lane is idle, emulating resource
 isolation of high-uncertainty tasks.  On a TPU pod the same lane maps to
 a dedicated low-priority replica slice.
 
-Batches are padded to (C, input_bucket) so the jitted prefill/decode
-executables are reused across batches.
+Batches are padded to (policy.max_batch(), input_bucket) — b * C for the
+consolidating UASCHED policies, C otherwise — so a dynamically
+consolidated batch executes as ONE batch (as the simulator models it)
+and the jitted prefill/decode executables are reused across batches.
 """
 
 from __future__ import annotations
@@ -30,7 +47,7 @@ import jax.numpy as jnp
 from repro.core import priority as prio
 from repro.core import scheduler as sched_lib
 from repro.core.personas import Persona
-from repro.models import model as model_lib
+from repro.models import transformer
 
 from . import generate
 
@@ -53,11 +70,16 @@ class Request:
     text: str
     arrival: float
     task_id: int
+    # optional per-request decode budget (None -> engine default); with
+    # EOS disabled this IS the output length — how the benchmarks build
+    # deterministic heterogeneous-output-length workloads.
+    max_new_tokens: Optional[int] = None
     # filled at completion:
     start: float = -1.0
     finish: float = -1.0
     lane: str = ""
     out_len: int = 0
+    slot: int = -1               # decode slot served in (continuous mode)
 
     @property
     def response_time(self) -> float:
@@ -65,12 +87,19 @@ class Request:
 
 
 class ServingEngine:
-    """Single-node engine with a pluggable batch-forming policy."""
+    """Single-node engine with a pluggable scheduling policy.
+
+    mode="batch": policy.select forms run-to-completion batches.
+    mode="continuous": policy.admit fills decode slots per step.
+    """
 
     def __init__(self, params, cfg, policy: sched_lib.Policy,
                  profile: sched_lib.OfflineProfile, *,
                  input_bucket: int = 32, max_new_tokens: int = 32,
-                 xi: float = 2.0):
+                 xi: float = 2.0, mode: str = "batch",
+                 eos_id: int = EOS_ID):
+        if mode not in ("batch", "continuous"):
+            raise ValueError(f"unknown mode {mode!r}")
         self.params = params
         self.cfg = cfg
         self.policy = policy
@@ -79,10 +108,22 @@ class ServingEngine:
         self.input_bucket = input_bucket
         self.max_new_tokens = max_new_tokens
         self.xi = xi
-        max_len = input_bucket + max_new_tokens + 8
-        self._prefill = generate.make_prefill_fn(cfg, max_len)
+        self.mode = mode
+        self.eos_id = eos_id
+        self.max_len = input_bucket + max_new_tokens + 8
+        # batch-mode executables are preallocated at the policy's max
+        # consolidated batch (b * C for UASCHED, C otherwise) so a
+        # consolidated batch runs as ONE batch, matching the simulator;
+        # padded rows are capped at a single token (see _run_batch).
+        self.batch_capacity = policy.max_batch()
+        self._prefill = generate.make_prefill_fn(cfg, self.max_len)
         self._decode = generate.make_decode_fn(cfg)
+        self._slot_prefill = generate.make_slot_prefill_fn(cfg, self.max_len)
         self.scheduler_overhead_s = 0.0
+        # exposed for the slot-recycling tests: per-slot cache after the
+        # last continuous serve, and the admission audit trail
+        self.slot_cache = None
+        self.admission_log: List[Dict] = []
 
     # ------------------------------------------------------------------
     def _to_sim_task(self, req: Request) -> prio.SimTask:
@@ -96,22 +137,38 @@ class ServingEngine:
                           true_out_len=0)
         return st
 
+    def _tokenize_padded(self, text: str) -> np.ndarray:
+        S = self.input_bucket
+        arr = np.zeros((S,), np.int32)
+        seq = hash_tokenize(text, self.cfg.vocab_size, S)
+        arr[S - len(seq):] = seq                        # left-pad
+        return arr
+
+    def _cap(self, req: Request) -> int:
+        cap = (req.max_new_tokens if req.max_new_tokens is not None
+               else self.max_new_tokens)
+        return max(1, min(cap, self.max_new_tokens))
+
     def _run_batch(self, batch: Sequence[prio.SimTask], lane: str,
                    now: float) -> float:
-        """Execute a batch on the JAX engine; returns finish time."""
-        C = self.persona.batch_size
-        toks = [hash_tokenize(t.task.text, self.cfg.vocab_size,
-                              self.input_bucket) for t in batch]
+        """Execute a run-to-completion batch; returns finish time."""
+        Cb = self.batch_capacity
         S = self.input_bucket
-        arr = np.zeros((C, S), np.int32)
-        for i, seq in enumerate(toks):
-            arr[i, S - len(seq):] = seq          # left-pad
+        arr = np.zeros((Cb, S), np.int32)
+        for i, t in enumerate(batch):
+            arr[i] = self._tokenize_padded(t.task.text)
         tokens = jnp.asarray(arr)
+        # padded rows stop after one token so they never extend the
+        # batch's decode horizon (the run-to-completion cost is set by
+        # the longest REAL member, as in the simulator's latency model)
+        caps = np.ones((Cb,), np.int32)
+        caps[:len(batch)] = [self._cap(t.task) for t in batch]
         t0 = time.perf_counter()
         out_tokens, lengths = generate.generate(
             self.params, self.cfg, {"tokens": tokens},
-            max_new_tokens=self.max_new_tokens, eos_id=EOS_ID,
-            prefill_fn=self._prefill, decode_fn=self._decode)
+            max_new_tokens=self.max_new_tokens, eos_id=self.eos_id,
+            prefill_fn=self._prefill, decode_fn=self._decode,
+            max_lens=caps)
         jax.block_until_ready(out_tokens)
         dur = time.perf_counter() - t0
         if lane == "cpu":
@@ -126,6 +183,25 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def serve(self, requests: Sequence[Request]) -> Dict:
         """Run a full trace (virtual-time arrivals, real execution)."""
+        if self.mode == "continuous":
+            return self._serve_continuous(requests)
+        return self._serve_batch(requests)
+
+    def _result(self, done: List[prio.SimTask], n: int) -> Dict:
+        rts = np.array([t.response_time for t in done])
+        return {
+            "mean_response_s": float(rts.mean()),
+            "max_response_s": float(rts.max()),
+            "throughput_per_min": 60.0 * n / max(
+                max(t.finish for t in done) - min(t.r for t in done), 1e-9),
+            "scheduler_overhead_s": self.scheduler_overhead_s,
+            "n_tasks": n,
+            "tasks": done,
+            "completion_order": [t.task.task_id for t in done],
+            "mode": self.mode,
+        }
+
+    def _serve_batch(self, requests: Sequence[Request]) -> Dict:
         pending = sorted(requests, key=lambda r: r.arrival)
         sim_tasks = [self._to_sim_task(r) for r in pending]
         queue: List[prio.SimTask] = []
@@ -148,15 +224,11 @@ class ServingEngine:
                 queue = list(rest)
                 bulk.extend(cpu_b)
                 if gpu_b:
-                    now = self._run_batch(gpu_b[:C], "gpu", now)
-                    done.extend(gpu_b[:C])
-                    queue.extend(gpu_b[C:])
+                    Cb = self.batch_capacity
+                    now = self._run_batch(gpu_b[:Cb], "gpu", now)
+                    done.extend(gpu_b[:Cb])
+                    queue.extend(gpu_b[Cb:])
                     continue
-            if bulk and not queue and i >= n:
-                batch, bulk = bulk[:C], bulk[C:]
-                now = self._run_batch(batch, "cpu", now)
-                done.extend(batch)
-                continue
             if bulk and not queue:
                 batch, bulk = bulk[:C], bulk[C:]
                 now = self._run_batch(batch, "cpu", now)
@@ -173,13 +245,105 @@ class ServingEngine:
                 now = min(future)
             else:
                 now += self.xi
-        rts = np.array([t.response_time for t in done])
-        return {
-            "mean_response_s": float(rts.mean()),
-            "max_response_s": float(rts.max()),
-            "throughput_per_min": 60.0 * n / max(
-                max(t.finish for t in done) - min(t.r for t in done), 1e-9),
-            "scheduler_overhead_s": self.scheduler_overhead_s,
-            "n_tasks": n,
-            "tasks": done,
-        }
+        return self._result(done, n)
+
+    # ------------------------------------------------------------------
+    # continuous batching: persistent decode loop with slot recycling
+    # ------------------------------------------------------------------
+
+    def _serve_continuous(self, requests: Sequence[Request]) -> Dict:
+        persona = self.persona
+        C = persona.batch_size
+        pending = sorted(requests, key=lambda r: r.arrival)
+        sim_tasks = [self._to_sim_task(r) for r in pending]
+        n = len(sim_tasks)
+        queue: List[prio.SimTask] = []
+        bulk: List[prio.SimTask] = []
+        done: List[prio.SimTask] = []
+        cache = transformer.init_slot_cache(self.cfg, C, self.max_len)
+        slot_task: List[Optional[prio.SimTask]] = [None] * C
+        slot_gen = [0] * C
+        slot_cap = [0] * C
+        tokens = np.zeros((C, 1), np.int32)     # host copy of next tokens
+        self.admission_log = []
+        now = 0.0
+        i = 0
+        step = 0
+        while len(done) < n:
+            while i < n and sim_tasks[i].r <= now + 1e-9:
+                queue.append(sim_tasks[i])
+                i += 1
+
+            # --- admissions: fill freed slots, one policy call per slot
+            while queue and None in slot_task:
+                running = [t for t in slot_task if t is not None]
+                t0 = time.perf_counter()
+                task, lane, rest = self.policy.admit(list(queue), now,
+                                                     running)
+                self.scheduler_overhead_s += time.perf_counter() - t0
+                if task is None:
+                    break
+                queue = list(rest)
+                if lane == "cpu":
+                    bulk.append(task)
+                    continue
+                slot = slot_task.index(None)
+                batch = {"tokens": jnp.asarray(
+                    self._tokenize_padded(task.task.text)[None, :])}
+                t0 = time.perf_counter()
+                cache, last_logits = self._slot_prefill(
+                    self.params, cache, batch, jnp.int32(slot))
+                first = int(jnp.argmax(last_logits))
+                now += time.perf_counter() - t0
+                task.start, task.lane = now, "gpu"
+                task.task.start, task.task.lane = now, "gpu"
+                task.task.slot = slot
+                self.admission_log.append(
+                    {"task_id": task.task.task_id, "slot": slot,
+                     "step": step, "now": now})
+                cap = self._cap(task.task)
+                if first == self.eos_id or cap <= 1:
+                    task.finish = now
+                    task.task.finish, task.task.out_len = now, 1
+                    done.append(task)
+                else:
+                    slot_task[slot] = task
+                    slot_gen[slot], slot_cap[slot] = 1, cap
+                    tokens[slot, 0] = first
+
+            active = [s for s in range(C) if slot_task[s] is not None]
+            if active:
+                # --- one decode step over ALL slots (single executable)
+                t0 = time.perf_counter()
+                next_tok, _, cache = self._decode(
+                    self.params, cache, jnp.asarray(tokens))
+                next_host = np.array(jax.block_until_ready(next_tok))
+                now += time.perf_counter() - t0
+                step += 1
+                for s in active:                 # evict per step, in order
+                    slot_gen[s] += 1
+                    tokens[s, 0] = int(next_host[s, 0])
+                    task = slot_task[s]
+                    if (int(next_host[s, 0]) == self.eos_id
+                            or slot_gen[s] >= slot_cap[s]):
+                        task.finish = now
+                        task.task.finish = now
+                        task.task.out_len = slot_gen[s]
+                        done.append(task)
+                        slot_task[s] = None
+                        tokens[s, 0] = generate.PAD_ID
+                continue
+
+            if bulk and not queue:
+                batch, bulk = bulk[:C], bulk[C:]
+                now = self._run_batch(batch, "cpu", now)
+                done.extend(batch)
+                continue
+
+            # idle: advance to the next arrival
+            if i < n:
+                now = max(now, sim_tasks[i].r)
+            else:
+                now += self.xi
+        self.slot_cache = cache
+        return self._result(done, n)

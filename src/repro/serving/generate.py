@@ -38,9 +38,29 @@ def make_decode_fn(cfg):
     return decode_fn
 
 
+def make_slot_prefill_fn(cfg, max_len: int):
+    """Jitted continuous-batching admission: prefill one (1, S) request
+    into slot ``slot`` of a per-slot decode cache.  The slot index is a
+    traced operand, so ONE executable serves every slot."""
+    @jax.jit
+    def slot_prefill_fn(params, cache, batch, slot):
+        return model_lib.prefill_into_slot(params, cfg, cache, batch,
+                                           slot, max_len)
+
+    return slot_prefill_fn
+
+
 def generate(params, cfg, batch: dict, *, max_new_tokens: int,
-             eos_id: int = 1, prefill_fn=None, decode_fn=None):
-    """Greedy-decode a batch. Returns (tokens (B, T<=max_new), lengths)."""
+             eos_id: int = 1, prefill_fn=None, decode_fn=None,
+             max_lens=None):
+    """Greedy-decode a batch. Returns (tokens (B, T<=max_new), lengths).
+
+    max_lens: optional (B,) per-sequence output-length caps — a sequence
+    stops contributing once it has produced its cap, but the batch keeps
+    stepping until its LONGEST member finishes (the head-of-line effect
+    run-to-completion batching suffers from, and the baseline the
+    continuous-batching engine is measured against).
+    """
     max_len = batch["tokens"].shape[1] + max_new_tokens + 8
     if cfg.frontend == "vision":
         max_len += cfg.num_patch_tokens
@@ -51,8 +71,11 @@ def generate(params, cfg, batch: dict, *, max_new_tokens: int,
     B = batch["tokens"].shape[0]
     token = jnp.argmax(last_logits, -1).astype(jnp.int32)[:, None]
     done = (token[:, 0] == eos_id)
-    out = [token]
     lengths = jnp.ones((B,), jnp.int32)
+    if max_lens is not None:
+        max_lens = jnp.asarray(max_lens, jnp.int32)
+        done = done | (lengths >= max_lens)
+    out = [token]
     for _ in range(max_new_tokens - 1):
         if bool(done.all()):
             break
@@ -60,6 +83,8 @@ def generate(params, cfg, batch: dict, *, max_new_tokens: int,
         token = jnp.where(done[:, None], PAD_ID, token)
         lengths = lengths + (~done).astype(jnp.int32)
         done = done | (token[:, 0] == eos_id)
+        if max_lens is not None:
+            done = done | (lengths >= max_lens)
         out.append(token)
     return jnp.concatenate(out, axis=1), lengths
 

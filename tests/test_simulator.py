@@ -1,13 +1,20 @@
-"""Discrete-event simulator invariants + hypothesis property tests."""
+"""Discrete-event simulator invariants (both execution modes).
+
+Deterministic seeded sweeps only — the hypothesis-powered versions of
+these invariants live in tests/test_properties.py, which skips cleanly
+on environments without the `hypothesis` dev dependency
+(requirements-dev.txt).
+"""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (datagen, personas, priority as prio,
                         scheduler as sched, simulator, workload)
 
 PERSONA = personas.get_persona("dialogpt")
+
+ALL_POLICIES = ["fifo", "hpf", "luf", "muf", "up", "up+c", "rt-lm"]
 
 
 def _sim_tasks(us, arrivals):
@@ -17,30 +24,40 @@ def _sim_tasks(us, arrivals):
             for u, r in zip(us, arrivals)]
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    us=st.lists(st.floats(0.5, 60.0), min_size=1, max_size=60),
-    seed=st.integers(0, 10),
-    policy=st.sampled_from(["fifo", "hpf", "luf", "muf", "up", "up+c",
-                            "rt-lm"]),
-)
-def test_simulation_invariants(us, seed, policy):
-    """No task lost or duplicated; response >= service; finite makespan."""
+def _random_workload(seed, n=40):
     rng = np.random.default_rng(seed)
-    arrivals = np.cumsum(rng.exponential(0.3, len(us)))
-    tasks = _sim_tasks(us, arrivals)
-    pcfg = sched.PolicyConfig(u_scale=30.0, tau=35.0)
-    res = simulator.run_policy(tasks, policy, PERSONA, pcfg)
-    assert len(res.tasks) == len(us)                    # conservation
+    us = rng.uniform(0.5, 60.0, size=n)
+    arrivals = np.cumsum(rng.exponential(0.3, n))
+    return _sim_tasks(us, arrivals)
+
+
+def _check_invariants(tasks, res, mode):
+    assert len(res.tasks) == len(tasks)                 # conservation
     ids = sorted(id(t) for t in res.tasks)
     assert len(set(ids)) == len(ids)                    # no duplication
     for t in res.tasks:
         assert t.finish >= t.start >= 0
         assert t.start + 1e-9 >= t.r                    # causality
-        min_service = PERSONA.setup_time + PERSONA.eta * t.true_out_len
-        slow = PERSONA.cpu_slowdown if t.lane == "cpu" else 1.0
-        assert t.finish - t.start + 1e-6 >= min_service * min(slow, 1.0)
+        if mode == "batch":
+            min_service = PERSONA.setup_time + PERSONA.eta * t.true_out_len
+            slow = PERSONA.cpu_slowdown if t.lane == "cpu" else 1.0
+            assert t.finish - t.start + 1e-6 >= min_service * min(slow, 1.0)
+        elif t.lane == "gpu":
+            # continuous: a task occupies its slot for out_len - 1 steps
+            assert t.finish - t.start + 1e-6 >= \
+                PERSONA.eta * (t.true_out_len - 1)
     assert np.isfinite(res.makespan)
+
+
+@pytest.mark.parametrize("mode", ["batch", "continuous"])
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_simulation_invariants(seed, policy, mode):
+    """No task lost or duplicated; response >= service; finite makespan."""
+    tasks = _random_workload(seed)
+    pcfg = sched.PolicyConfig(u_scale=30.0, tau=35.0)
+    res = simulator.run_policy(tasks, policy, PERSONA, pcfg, mode=mode)
+    _check_invariants(tasks, res, mode)
 
 
 def test_fifo_order_preserved_within_lane():
@@ -49,6 +66,16 @@ def test_fifo_order_preserved_within_lane():
     res = simulator.run_policy(tasks, "fifo", PERSONA, pcfg)
     starts = [t.start for t in sorted(res.tasks, key=lambda t: t.r)]
     assert all(a <= b + 1e-9 for a, b in zip(starts, starts[1:]))
+
+
+def test_fifo_completion_order_continuous_homogeneous():
+    """Equal lengths + FIFO admission -> completion follows arrival."""
+    tasks = _sim_tasks([5] * 20, np.arange(20) * 0.1)
+    pcfg = sched.PolicyConfig(u_scale=30.0, tau=1e18)
+    res = simulator.run_policy(tasks, "fifo", PERSONA, pcfg,
+                               mode="continuous")
+    finishes = [t.finish for t in sorted(res.tasks, key=lambda t: t.r)]
+    assert all(a <= b + 1e-9 for a, b in zip(finishes, finishes[1:]))
 
 
 def test_rtlm_improves_large_variance_workload():
@@ -87,9 +114,8 @@ def test_malicious_resilience():
     assert rtlm.mean_response < 0.5 * fifo.mean_response
 
 
-@settings(max_examples=10, deadline=None)
-@given(beta=st.integers(10, 300), n=st.integers(5, 80),
-       seed=st.integers(0, 5))
+@pytest.mark.parametrize("beta,n,seed", [(10, 5, 0), (120, 40, 3),
+                                         (300, 80, 5)])
 def test_poisson_trace_properties(beta, n, seed):
     arr = workload.constant_rate_trace(n, beta, seed)
     assert len(arr) == n
