@@ -14,6 +14,14 @@ disabled so lengths are exact): run-to-completion pays the longest
 member of every formed batch, continuous batching recycles each slot
 the step its sequence finishes.
 
+A third column (``run_paged``) compares the two CONTINUOUS KV layouts
+at an EQUAL KV-memory budget: C contiguous slots of max_len tokens vs
+the same token budget as a paged block pool (repro.kvcache) with the
+slot count raised — paging admits strictly more concurrent sequences
+because short requests reserve ceil((S + cap - 1)/block) blocks instead
+of a whole max_len slot.  Results land in
+experiments/bench/paged_vs_contiguous.json.
+
     PYTHONPATH=src python -m benchmarks.continuous_vs_batch
 """
 
@@ -34,6 +42,11 @@ SHORT, LONG = 4, 48
 LONG_FRAC = 0.25
 BATCH_SLOTS = 8
 SEED = 0
+
+# paged-vs-contiguous column: equal KV budget, more slots for paged
+INPUT_BUCKET = 8
+KV_BLOCK = 16
+PAGED_SLOTS = 3 * BATCH_SLOTS
 
 
 def build_workload(n=N_REQUESTS, seed=SEED):
@@ -116,6 +129,96 @@ def run_engine(policy_name="fifo", n=32):
     return out
 
 
+def _kv_summary(res: dict) -> dict:
+    return {k: res[k] for k in
+            ("mean_response_s", "throughput_per_min", "peak_concurrency",
+             "kv_util_peak", "kv_util_mean", "rejected_for_memory", "kv")}
+
+
+def run_paged(policy_name="fifo", n_engine=32):
+    """Contiguous vs paged continuous engines at EQUAL KV-memory budget.
+
+    Budget = what the contiguous engine reserves (BATCH_SLOTS * max_len
+    tokens); the paged engine gets that budget as blocks plus a larger
+    slot count, so the block pool — not worst-case length — bounds
+    concurrency.  Outputs the acceptance numbers: peak concurrency
+    (paged strictly higher), throughput, KV utilization, rejections.
+    """
+    import jax
+    from repro import configs
+    from repro.models import model as model_lib
+    from repro.serving.engine import Request, ServingEngine
+
+    from repro.kvcache.paged import default_num_blocks
+
+    persona = persona_for_bench()
+    max_len = INPUT_BUCKET + LONG + 8
+    budget_blocks = default_num_blocks(BATCH_SLOTS, max_len, KV_BLOCK)
+
+    # --- deterministic sim column (full trace) ---
+    train, test, caps, arrivals = build_workload()
+    profile = sched.offline_profile(train, persona, epochs=20)
+    tasks = sim_tasks_for(test, caps, arrivals, profile, persona)
+    pcfg = profile.policy_config()
+    cont = simulator.run_policy(tasks, policy_name, persona, pcfg,
+                                mode="continuous")
+    paged = simulator.run_policy(tasks, policy_name, persona, pcfg,
+                                 mode="continuous",
+                                 num_slots=PAGED_SLOTS,
+                                 kv_block_size=KV_BLOCK,
+                                 kv_num_blocks=budget_blocks,
+                                 prompt_len=INPUT_BUCKET)
+    sim = {
+        "contiguous": dict(cont.summary(),
+                           peak_concurrency=cont.peak_concurrency,
+                           kv_util_peak=cont.kv_util_peak,
+                           kv_util_mean=cont.kv_util_mean),
+        "paged": dict(paged.summary(),
+                      peak_concurrency=paged.peak_concurrency,
+                      kv_util_peak=paged.kv_util_peak,
+                      kv_util_mean=paged.kv_util_mean,
+                      kv_rejected=paged.kv_rejected),
+        "concurrency_gain": paged.peak_concurrency / cont.peak_concurrency,
+        "throughput_ratio": (paged.throughput_per_min
+                             / cont.throughput_per_min),
+    }
+
+    # --- real JAX engine column (tiny config, wall-clock) ---
+    train, test, caps, arrivals = build_workload(n=n_engine)
+    profile = sched.offline_profile(train, persona, epochs=20)
+    cfg = configs.get_smoke_config("starcoder2-3b")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    eng = {}
+    for kv, kw in (("contiguous", {}),
+                   ("paged", dict(num_slots=PAGED_SLOTS,
+                                  kv_block_size=KV_BLOCK,
+                                  kv_num_blocks=budget_blocks))):
+        policy = sched.POLICIES[policy_name](persona,
+                                             profile.policy_config())
+        e = ServingEngine(params, cfg, policy, profile,
+                          input_bucket=INPUT_BUCKET, max_new_tokens=LONG,
+                          mode="continuous", eos_id=-1, kv=kv, **kw)
+        reqs = [Request(text=t.text, arrival=a, task_id=i,
+                        max_new_tokens=c)
+                for i, (t, c, a) in enumerate(zip(test, caps, arrivals))]
+        eng[kv] = _kv_summary(e.serve(reqs))
+        if kv == "paged":
+            e.allocator.check_no_leaks()
+    eng["concurrency_gain"] = (eng["paged"]["peak_concurrency"]
+                               / eng["contiguous"]["peak_concurrency"])
+    eng["throughput_ratio"] = (eng["paged"]["throughput_per_min"]
+                               / eng["contiguous"]["throughput_per_min"])
+    return {
+        "kv_block_size": KV_BLOCK,
+        "budget_blocks": budget_blocks,
+        "budget_tokens": budget_blocks * KV_BLOCK,
+        "contiguous_slots": BATCH_SLOTS,
+        "paged_slots": PAGED_SLOTS,
+        "sim": sim,
+        "engine": eng,
+    }
+
+
 def main():
     t0 = time.time()
     sim = run_sim("fifo")
@@ -129,6 +232,15 @@ def main():
     common.emit("continuous_vs_batch_engine", time.time() - t0,
                 f"throughput_x={eng['throughput_ratio']:.2f},"
                 f"mean_response_x={eng['mean_response_ratio']:.2f}")
+    t0 = time.time()
+    paged = run_paged("fifo")
+    common.save("paged_vs_contiguous", paged)
+    common.emit("paged_vs_contiguous", time.time() - t0,
+                f"sim_concurrency_x={paged['sim']['concurrency_gain']:.2f},"
+                f"engine_concurrency_x="
+                f"{paged['engine']['concurrency_gain']:.2f},"
+                f"engine_throughput_x="
+                f"{paged['engine']['throughput_ratio']:.2f}")
 
 
 if __name__ == "__main__":

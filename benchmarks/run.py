@@ -79,7 +79,8 @@ def run_roofline(only=None):
 def run_continuous(only=None):
     if only and only not in ("continuous_vs_batch_sim",
                              "continuous_vs_batch_engine",
-                             "continuous_vs_batch"):
+                             "continuous_vs_batch",
+                             "paged_vs_contiguous"):
         return
     continuous_vs_batch.main()
 

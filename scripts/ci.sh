@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# CI entry point (also runnable locally): the fast lane first for quick
+# signal, then the full tier-1 suite.
+#
+#   scripts/ci.sh          # fast lane + full tier-1
+#   CI_FAST_ONLY=1 scripts/ci.sh   # fast lane only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== fast lane (-m 'not slow') =="
+scripts/run_tier1.sh -m "not slow"
+
+if [[ "${CI_FAST_ONLY:-0}" != "1" ]]; then
+  echo "== full tier-1 =="
+  scripts/run_tier1.sh
+fi

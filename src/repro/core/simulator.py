@@ -46,6 +46,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.kvcache import blocks_for_tokens
+
 from . import scheduler as sched_lib
 from .personas import Persona
 from .priority import SimTask
@@ -56,6 +58,12 @@ class SimResult:
     tasks: List[SimTask]
     makespan: float
     overhead_s: float = 0.0
+    # block-budget admission model (continuous mode with a paged KV
+    # cache): engine-side mirrors in ServingEngine._result
+    kv_rejected: int = 0
+    kv_util_peak: float = 0.0
+    kv_util_mean: float = 0.0
+    peak_concurrency: int = 0
 
     # ---- paper metrics ------------------------------------------------
     @property
@@ -184,7 +192,11 @@ def simulate(tasks: Sequence[SimTask], policy: sched_lib.Policy, *,
 def simulate_continuous(tasks: Sequence[SimTask],
                         policy: sched_lib.Policy, *,
                         xi: float = 2.0,
-                        per_task_overhead_s: float = 0.0) -> SimResult:
+                        per_task_overhead_s: float = 0.0,
+                        num_slots: Optional[int] = None,
+                        kv_block_size: Optional[int] = None,
+                        kv_num_blocks: Optional[int] = None,
+                        prompt_len: int = 0) -> SimResult:
     """Iteration-level (continuous) batching over C decode slots.
 
     Mirrors the real engine's step loop exactly (serving/engine.py
@@ -193,19 +205,45 @@ def simulate_continuous(tasks: Sequence[SimTask],
     every active slot by one decode step; slots whose sequence finished
     are evicted the same step.  SimResult.tasks is completion-ordered —
     the engine-vs-sim parity tests compare exactly that order.
+
+    Block-budget admission (the paged-KV memory model): when
+    ``kv_block_size``/``kv_num_blocks`` are given, admitting a task
+    additionally requires its worst-case block reservation
+    ``blocks_for_tokens(prompt_len + true_out_len - 1, block_size)`` to
+    fit in ``kv_num_blocks`` minus the reservations of every running
+    slot — the same gate the paged engine applies (it uses the request
+    cap where the sim uses true_out_len; the parity traces make them
+    equal).  A non-fitting front-runner is left queued; ``kv_rejected``
+    counts DISTINCT tasks deferred at least once (a blocked task is
+    retried every step); allocation is modeled lazily (blocks cover written
+    positions) for the utilization metrics.  ``num_slots`` decouples
+    decode width from the persona batch size, as the paged engine does.
     """
     persona = policy.persona
     pending = sorted(tasks, key=lambda t: t.r)
     n_total = len(pending)
-    C = persona.batch_size
+    C = num_slots if num_slots is not None else persona.batch_size
+    kv_model = kv_block_size is not None and kv_num_blocks is not None
+    if kv_model:
+        worst = max((blocks_for_tokens(
+            prompt_len + max(1, t.true_out_len) - 1, kv_block_size)
+            for t in pending), default=0)
+        if worst > kv_num_blocks:
+            raise ValueError(
+                f"kv_num_blocks={kv_num_blocks} cannot hold the largest "
+                f"task ({worst} blocks) — admission would deadlock")
     slots: List[Optional[SimTask]] = [None] * C
     produced = [0] * C
+    reserved = [0] * C
     queue: List[SimTask] = []
     cpu_queue: List[SimTask] = []
     done: List[SimTask] = []
     cpu = Lane(persona.cpu_slowdown)
     now = 0.0
     overhead_total = 0.0
+    rejected_ids: set = set()       # distinct tasks deferred for memory
+    kv_util: List[float] = []
+    peak_conc = 0
     i = 0
 
     while len(done) < n_total:
@@ -217,10 +255,19 @@ def simulate_continuous(tasks: Sequence[SimTask],
         # admissions into freed slots (uncertainty-aware, one at a time)
         while queue and None in slots:
             running = [t for t in slots if t is not None]
+            prev_queue = list(queue)
             task, lane, rest = policy.admit(list(queue), now, running)
             if task is None:
                 break
             queue = list(rest)
+            if kv_model and lane != "cpu":
+                need = blocks_for_tokens(
+                    prompt_len + max(1, task.true_out_len) - 1,
+                    kv_block_size)
+                if need > kv_num_blocks - sum(reserved):
+                    queue = prev_queue         # leave it queued
+                    rejected_ids.add(id(task))
+                    break
             overhead_total += per_task_overhead_s
             now += per_task_overhead_s
             if lane == "cpu":
@@ -237,10 +284,24 @@ def simulate_continuous(tasks: Sequence[SimTask],
                 s = slots.index(None)
                 slots[s] = task
                 produced[s] = 1                # prefill emits token 1
+                if kv_model:
+                    reserved[s] = need
             progressed = True
 
         if any(t is not None for t in slots):
+            active = [s for s in range(C) if slots[s] is not None]
+            peak_conc = max(peak_conc, len(active))
             now += persona.eta                 # one decode step, all slots
+            if kv_model:
+                # lazy-allocation model: this step writes logical
+                # position prompt + produced - 1, so each slot holds
+                # blocks_for(prompt + produced) physical blocks
+                kv_util.append(sum(
+                    blocks_for_tokens(prompt_len + produced[s],
+                                      kv_block_size)
+                    for s in active) / kv_num_blocks)
+            else:
+                kv_util.append(len(active) / C)
             for s in range(C):
                 if slots[s] is None:
                     continue
@@ -249,6 +310,7 @@ def simulate_continuous(tasks: Sequence[SimTask],
                     slots[s].finish = now      # evicted THIS step
                     done.append(slots[s])
                     slots[s] = None
+                    reserved[s] = 0
             progressed = True
 
         if cpu.free_at <= now + 1e-12 and cpu_queue:
@@ -268,8 +330,13 @@ def simulate_continuous(tasks: Sequence[SimTask],
         now = min(future) if future else now + xi
 
     makespan = max(t.finish for t in done) - min(t.r for t in done)
+    util = np.array(kv_util) if kv_util else np.zeros(1)
     return SimResult(tasks=done, makespan=makespan,
-                     overhead_s=overhead_total)
+                     overhead_s=overhead_total,
+                     kv_rejected=len(rejected_ids),
+                     kv_util_peak=float(util.max()),
+                     kv_util_mean=float(util.mean()),
+                     peak_concurrency=peak_conc)
 
 
 # ---------------------------------------------------------------------------
@@ -280,10 +347,19 @@ def simulate_continuous(tasks: Sequence[SimTask],
 def run_policy(tasks: Sequence[SimTask], policy_name: str,
                persona: Persona, pcfg: sched_lib.PolicyConfig, *,
                xi: float = 2.0, per_task_overhead_s: float = 0.0,
-               mode: str = "batch") -> SimResult:
+               mode: str = "batch", **continuous_kwargs) -> SimResult:
+    """``continuous_kwargs`` (num_slots / kv_block_size / kv_num_blocks /
+    prompt_len) forward to ``simulate_continuous`` — the block-budget
+    admission model of the paged KV cache."""
     import copy
     policy = sched_lib.POLICIES[policy_name](persona, pcfg)
     tasks = [copy.copy(t) for t in tasks]    # fresh timing fields
-    sim_fn = simulate_continuous if mode == "continuous" else simulate
-    return sim_fn(tasks, policy, xi=xi,
-                  per_task_overhead_s=per_task_overhead_s)
+    if mode != "continuous":
+        if continuous_kwargs:
+            raise ValueError("kv/slot options only apply to continuous "
+                             "mode")
+        return simulate(tasks, policy, xi=xi,
+                        per_task_overhead_s=per_task_overhead_s)
+    return simulate_continuous(tasks, policy, xi=xi,
+                               per_task_overhead_s=per_task_overhead_s,
+                               **continuous_kwargs)

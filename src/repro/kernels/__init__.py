@@ -6,10 +6,14 @@ deployment tiles by hand; each has a pl.pallas_call implementation with
 explicit VMEM BlockSpecs, a jitted wrapper (ops.py) and a pure-jnp
 oracle (ref.py):
 
-  flash_attention   — FA2-style prefill attention (causal / sliding
-                      window), online softmax in VMEM scratch
-  decode_attention  — flash-decode GQA attention over long KV caches
-  rmsnorm           — fused normalization (one HBM round-trip)
+  flash_attention          — FA2-style prefill attention (causal /
+                             sliding window), online softmax in VMEM
+  decode_attention         — flash-decode GQA attention over long KV
+                             caches
+  paged_decode_attention   — flash-decode over a block table (paged KV
+                             cache; indirect page gather via
+                             scalar-prefetch BlockSpec index_map)
+  rmsnorm                  — fused normalization (one HBM round-trip)
 
 Validated in interpret mode on CPU (tests/test_kernels.py sweeps
 shapes/dtypes against ref.py); compiled on TPU targets.

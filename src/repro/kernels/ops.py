@@ -21,7 +21,8 @@ import jax.numpy as jnp
 
 from repro.models import layers as jlayers
 
-from . import decode_attention as _fd, flash_attention as _fa, rmsnorm as _rn
+from . import (decode_attention as _fd, flash_attention as _fa,
+               paged_decode_attention as _pfd, ref as _ref, rmsnorm as _rn)
 
 
 def _default_interpret() -> bool:
@@ -67,6 +68,25 @@ def flash_decode_attention(q, k_cache, v_cache, mask, *, block_k: int = 512,
     interp = _default_interpret() if interpret is None else interpret
     return _fd.flash_decode_attention(q, k_cache, v_cache, mask,
                                       block_k=block_k, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
+                           use_pallas: bool = True,
+                           interpret: Optional[bool] = None):
+    """One-token decode attention over a paged KV cache.
+
+    q: (B,H,D); pages: (N,bs,KV,D); block_tables: (B,nb) i32;
+    seq_lens: (B,) i32.  ``use_pallas=False`` gathers the contiguous
+    view in pure jnp (the path the model's paged decode lowers on CPU).
+    """
+    if not use_pallas:
+        return _ref.paged_decode_attention_ref(q, k_pages, v_pages,
+                                               block_tables, seq_lens)
+    interp = _default_interpret() if interpret is None else interpret
+    return _pfd.paged_flash_decode_attention(q, k_pages, v_pages,
+                                             block_tables, seq_lens,
+                                             interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=(

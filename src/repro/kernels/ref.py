@@ -61,6 +61,23 @@ def decode_attention_ref(q, k_cache, v_cache, *, mask):
     return out.astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, seq_lens):
+    """q: (B, H, D); pages: (N, bs, KV, D); block_tables: (B, nb) i32;
+    seq_lens: (B,) i32.  Pure-jnp fallback: materialize each sequence's
+    contiguous view via the block table, then ordinary decode attention.
+    """
+    N, bs = k_pages.shape[:2]
+    B, nb = block_tables.shape
+    idx = (block_tables[:, :, None] * bs
+           + jnp.arange(bs)[None, None, :]).reshape(B, nb * bs)
+    k = jnp.take(k_pages.reshape((N * bs,) + k_pages.shape[2:]), idx,
+                 axis=0)
+    v = jnp.take(v_pages.reshape((N * bs,) + v_pages.shape[2:]), idx,
+                 axis=0)
+    mask = jnp.arange(nb * bs)[None, :] < seq_lens[:, None]
+    return decode_attention_ref(q, k, v, mask=mask)
+
+
 def rms_norm_ref(x, weight, eps: float = 1e-6):
     """x: (..., D); weight: (D,) — matches models.layers.rms_norm."""
     xf = x.astype(jnp.float32)

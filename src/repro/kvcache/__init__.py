@@ -1,0 +1,27 @@
+"""Paged KV-cache subsystem (vLLM-style block tables).
+
+PR 1's continuous engine reserves a contiguous ``(slots, max_len)`` KV
+cache, so concurrency is pinned to the worst-case output length — the
+exact uncertainty-inflated bound RT-LM identifies.  This package
+decouples the two: KV memory is a pool of fixed-size blocks, sequences
+own *block tables*, and memory scales with live tokens instead of slots.
+
+  allocator.BlockAllocator — host-side free-list allocator with
+      per-sequence block tables and used/free accounting.
+  allocator.blocks_for_tokens — the shared memory formula
+      ``ceil(tokens / block_size)`` used by the engine's admission gate
+      and the simulator's block-budget model (they must agree exactly
+      for engine-vs-sim parity).
+  paged.PagedKVCache — device-side paged K/V store (one
+      ``(num_blocks, block_size, kv_heads, head_dim)`` array pair per
+      layer) plus the pure-jnp gather/scatter primitives the model's
+      paged decode path and the Pallas paged kernel are built on.
+
+Wiring: models/transformer.py (``init_paged_cache`` / ``write_paged`` /
+paged decode attention), serving/engine.py (``kv="paged"`` for
+``mode="continuous"``), core/simulator.py (block-budget admission),
+kernels/paged_decode_attention.py (TPU flash-decode over a block table).
+"""
+
+from .allocator import BlockAllocator, blocks_for_tokens  # noqa: F401
+from .paged import PagedKVCache  # noqa: F401

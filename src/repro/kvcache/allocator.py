@@ -1,0 +1,115 @@
+"""Host-side block allocator: free list + per-sequence block tables.
+
+The allocator is deliberately dumb and exact — a list of free physical
+block ids and a ``seq_id -> [block ids]`` table map.  All policy
+(reservation-based admission, lazy boundary-crossing allocation) lives
+in the serving engine / simulator; the allocator only enforces the two
+hard invariants the property tests pin down:
+
+  * a live block is owned by exactly one sequence (never double
+    allocated until freed);
+  * ``free_sequence`` returns every block of the sequence to the free
+    list (no leaks — after a full ``serve()`` the pool is whole again).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+
+def blocks_for_tokens(num_tokens: int, block_size: int) -> int:
+    """Memory formula: blocks needed to hold ``num_tokens`` KV entries.
+
+    Shared by the engine's admission gate and the simulator's
+    block-budget model — both must compute reservations identically or
+    engine-vs-sim parity breaks.
+    """
+    if num_tokens <= 0:
+        return 0
+    return -(-num_tokens // block_size)
+
+
+class OutOfBlocksError(RuntimeError):
+    """Raised when an allocation is requested from an empty free list.
+
+    With reservation-based admission this is a bug, not backpressure:
+    the engine reserves a sequence's worst case up front, so a boundary
+    crossing must never find the pool empty.
+    """
+
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` physical KV blocks."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks <= 0 or block_size <= 0:
+            raise ValueError("num_blocks and block_size must be positive")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # popped from the end so blocks hand out in ascending id order
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._tables: Dict[int, List[int]] = {}
+        self._owner: Dict[int, int] = {}
+
+    # -- accounting ----------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    @property
+    def live_sequences(self) -> int:
+        return len(self._tables)
+
+    def utilization(self) -> float:
+        return self.num_used / self.num_blocks
+
+    def blocks_for(self, num_tokens: int) -> int:
+        return blocks_for_tokens(num_tokens, self.block_size)
+
+    # -- alloc / free --------------------------------------------------
+    def allocate(self, seq_id: int) -> int:
+        """Append one block to ``seq_id``'s table; returns the block id."""
+        if not self._free:
+            raise OutOfBlocksError(
+                f"no free KV blocks (all {self.num_blocks} in use)")
+        blk = self._free.pop()
+        assert blk not in self._owner, f"block {blk} double-allocated"
+        self._owner[blk] = seq_id
+        self._tables.setdefault(seq_id, []).append(blk)
+        return blk
+
+    def allocate_n(self, seq_id: int, n: int) -> List[int]:
+        if n > self.num_free:
+            raise OutOfBlocksError(
+                f"need {n} KV blocks, only {self.num_free} free")
+        return [self.allocate(seq_id) for _ in range(n)]
+
+    def table(self, seq_id: int) -> List[int]:
+        """The sequence's block table (copy), empty if unknown."""
+        return list(self._tables.get(seq_id, ()))
+
+    def free_sequence(self, seq_id: int) -> int:
+        """Return ALL of ``seq_id``'s blocks to the pool; returns count.
+
+        Idempotent: freeing an unknown (or already-freed) sequence is a
+        no-op — eviction paths need not track whether a sequence ever
+        received blocks.
+        """
+        blocks = self._tables.pop(seq_id, None)
+        if not blocks:
+            return 0
+        for blk in blocks:
+            assert self._owner.pop(blk) == seq_id
+            self._free.append(blk)
+        return len(blocks)
+
+    def check_no_leaks(self) -> None:
+        """Assert the pool is whole (used by tests after a full serve)."""
+        assert not self._tables and not self._owner, (
+            f"leaked {self.num_used} blocks across "
+            f"{self.live_sequences} sequences")
+        assert sorted(self._free) == list(range(self.num_blocks))

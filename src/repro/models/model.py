@@ -252,6 +252,43 @@ def decode_step(params: dict, cfg, cache: dict, token: Array):
     return next_token, logits, new_cache
 
 
+def decode_step_paged(params: dict, cfg, cache: dict, token: Array,
+                      tables: Array):
+    """One greedy decode step against a paged KV cache.
+
+    cache: from ``transformer.init_paged_cache`` (per-layer page pools
+    + per-slot ``pos`` (B,)); tables: (B, nb) i32 block tables (host
+    state of the engine's allocator, passed per step so boundary
+    crossings need no cache rebuild).  Same contract as ``decode_step``:
+    returns (next_token (B, 1) i32, logits (B, V) f32, new_cache).
+    """
+    x = layers.embed(params["embed"], token, cfg)
+    x = shctx.constrain(x, ("batch", None, None))
+    ctx = {"pos": cache["pos"], "tables": tables}
+    x, new_cache, _ = transformer.apply_stack(
+        params["stack"], x, ctx, cfg, cache=cache, mode="decode")
+    x = layers.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = layers.logits(params["embed"], x, cfg)[:, 0]
+    logits = logits.astype(jnp.float32)
+    next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    new_cache["pos"] = cache["pos"] + 1
+    return next_token, logits, new_cache
+
+
+def prefill_into_paged(params: dict, cfg, cache: dict, batch: dict, slot,
+                       table_row, max_len: int, cache_dtype=jnp.bfloat16):
+    """Prefill ONE request (batch dim 1) and scatter its KV into the
+    paged cache's blocks ``table_row`` (nb,) i32, marking ``slot``'s
+    position (paged continuous-batching admission).  Returns
+    (new_cache, last_logits (V,)).  Requires ``paged_supported(cfg)``
+    (full attention, positions 0..S-1 land at prefill rows 0..S-1).
+    """
+    one, last_logits = prefill(params, cfg, batch, max_len, cache_dtype)
+    S = batch["tokens"].shape[1]
+    new_cache = transformer.write_paged(cache, one, slot, table_row, S)
+    return new_cache, last_logits[0]
+
+
 def prefill_into_slot(params: dict, cfg, cache: dict, batch: dict, slot,
                       max_len: int, cache_dtype=jnp.bfloat16):
     """Prefill ONE request (batch dim 1) and write its state into row

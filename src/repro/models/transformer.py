@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kvcache import paged as paged_lib
 from repro.sharding import context as shctx
 
 from . import layers, moe as moe_lib, rglru, ssm
@@ -193,6 +194,32 @@ def _attn_decode(p, x, cache_k, cache_v, pos, slot_pos, cfg, window):
             new_slot_pos)
 
 
+def _attn_decode_paged(p, x, pages_k, pages_v, pos, tables, cfg):
+    """One-token self attention against a paged (block-table) KV cache.
+
+    pos: (B,) per-slot logical positions; tables: (B, nb) i32 physical
+    page ids; pages_k/v: (N, bs, KV, D).  The new token scatters into
+    page ``tables[s, pos[s]//bs]`` and attention runs over the gathered
+    logical view — positions 0..pos are bit-identical to the contiguous
+    slot cache's layout (absolute-position order, masked tail), so the
+    paged engine matches the contiguous engine token for token.
+    """
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = layers.attention_qkv(p["attn"], h, pos[..., None],
+                                   cfg.rope_theta)
+    new_k = paged_lib.scatter_token(pages_k, k[:, 0], tables, pos)
+    new_v = paged_lib.scatter_token(pages_v, v[:, 0], tables, pos)
+    k_seq = paged_lib.gather_tokens(new_k, tables)      # (B, nb*bs, KV, D)
+    v_seq = paged_lib.gather_tokens(new_v, tables)
+    L = k_seq.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32),
+                              (x.shape[0], L))
+    attn = layers.decode_attention(
+        q, k_seq, v_seq, q_position=pos, kv_positions=kv_pos,
+        valid_len=pos + 1, window=None)
+    return x + layers.attention_out(p["attn"], attn), new_k, new_v
+
+
 def _project_enc_kv(p, enc_out):
     """Per-layer K/V projections of the shared encoder memory (no rope)."""
     enc_k = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wk"])
@@ -278,12 +305,16 @@ def apply_block_seq(kind, p, x, ctx, cfg, cache=None):
 
 def apply_block_decode(kind, p, x, ctx, cfg, cache):
     pos = ctx["pos"]
-    slot_pos = ctx["slot_pos"]
+    tables = ctx.get("tables")         # paged decode: (B, nb) block table
     aux = ZERO_AUX
     x = shctx.constrain(x, ("batch", None, None))
     if kind in ("dense", "moe", "cross"):
-        x, nk, nv, _ = _attn_decode(p, x, cache["k"], cache["v"], pos,
-                                    slot_pos, cfg, cfg.window)
+        if tables is not None:
+            x, nk, nv = _attn_decode_paged(p, x, cache["k"], cache["v"],
+                                           pos, tables, cfg)
+        else:
+            x, nk, nv, _ = _attn_decode(p, x, cache["k"], cache["v"], pos,
+                                        ctx["slot_pos"], cfg, cfg.window)
         if kind == "cross":
             x = _cross_attn(p, x, cache["enc_k"], cache["enc_v"], cfg)
         if kind == "moe":
@@ -293,7 +324,7 @@ def apply_block_decode(kind, p, x, ctx, cfg, cache):
         return x, dict(cache, k=nk, v=nv), aux
     if kind == "attn_local":
         x, nk, nv, _ = _attn_decode(p, x, cache["k"], cache["v"], pos,
-                                    slot_pos, cfg, cfg.local_window)
+                                    ctx["slot_pos"], cfg, cfg.local_window)
         return _mlp_part(p, x, cfg), dict(cache, k=nk, v=nv), aux
     if kind == "ssm":
         h = rms_norm(x, p["ln"], cfg.norm_eps)
@@ -493,6 +524,94 @@ def init_slot_cache(cfg, num_slots: int, max_len: int,
     cache["slot_pos"] = jnp.broadcast_to(
         empty_slot_pos(cap), (num_slots, cap)).copy()
     return cache
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (block-table indirection; see repro.kvcache)
+# ---------------------------------------------------------------------------
+
+
+def paged_supported(cfg) -> tuple[bool, str]:
+    """Whether the paged KV path applies to this config.
+
+    Paging stores tokens by absolute position, so it requires full
+    (non-windowed) attention layers and no recurrent/conv state; the
+    sliding-window ring, SSM and RG-LRU states are O(window)/O(1)
+    already — paging them buys nothing.
+    """
+    if cfg.family not in ("dense", "moe"):
+        return False, (f"family {cfg.family!r} carries recurrent/cross "
+                       "state the paged cache does not cover")
+    if cfg.window is not None:
+        return False, "sliding-window ring cache is already bounded"
+    if cfg.frontend:
+        return False, "multimodal prefix tokens not paged yet"
+    return True, ""
+
+
+def init_paged_cache(cfg, num_slots: int, num_blocks: int,
+                     block_size: int, dtype=jnp.bfloat16) -> dict:
+    """A paged decode cache: per-layer K/V page pools shared by ALL
+    slots (``(num_blocks, block_size, KV, D)``; scanned layer groups
+    carry a leading layer axis) plus per-slot ``pos`` (num_slots,) i32.
+    Block tables ride as a separate operand of the decode step — they
+    are host-managed by the engine's allocator.
+    """
+    ok, why = paged_supported(cfg)
+    if not ok:
+        raise NotImplementedError(f"paged KV cache: {why}")
+    pat, n, prefix, tail = stack_pattern(cfg)
+
+    def pages():
+        return {"k": jnp.zeros((num_blocks, block_size, cfg.num_kv_heads,
+                                cfg.head_dim), dtype),
+                "v": jnp.zeros((num_blocks, block_size, cfg.num_kv_heads,
+                                cfg.head_dim), dtype)}
+
+    cache = {}
+    for i, _ in enumerate(prefix):
+        cache[f"prefix{i}"] = pages()
+    if n > 0:
+        for s, _ in enumerate(pat):
+            one = pages()
+            cache[f"scan{s}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), one)
+    for i, _ in enumerate(tail):
+        cache[f"tail{i}"] = pages()
+    cache["pos"] = jnp.zeros((num_slots,), jnp.int32)
+    return cache
+
+
+def write_paged(cache: dict, one: dict, slot, table_row,
+                seq_len: int) -> dict:
+    """Scatter a freshly-prefilled single-sequence cache (batch dim 1,
+    what ``model.prefill`` returns for a (1, S) batch with window=None:
+    positions 0..S-1 at cache rows 0..S-1) into the page pool at the
+    blocks named by ``table_row`` (nb,) i32, and set ``pos[slot]`` to
+    ``seq_len``.  ``slot``/``table_row`` may be traced; ``seq_len`` is
+    static (the admission prefill bucket), so one jitted executable
+    serves every slot/table.
+    """
+    out = {}
+    for key, big in cache.items():
+        if key == "pos":
+            out[key] = big.at[slot].set(jnp.asarray(seq_len, big.dtype))
+        else:
+            if key.startswith("scan"):
+                # leading layer axis: scatter each layer's pages with
+                # the same (shared) table row
+                out[key] = jax.tree.map(
+                    lambda pages, o: jax.vmap(
+                        lambda pg, sq: paged_lib.scatter_prefill(
+                            pg, sq, table_row, seq_len)
+                    )(pages, o[:, 0]),
+                    big, one[key])
+            else:
+                out[key] = jax.tree.map(
+                    lambda pages, o: paged_lib.scatter_prefill(
+                        pages, o[0], table_row, seq_len),
+                    big, one[key])
+    return out
 
 
 def write_slot(cache: dict, one: dict, slot) -> dict:

@@ -21,6 +21,25 @@ Two execution modes:
     executable (bucketed (1, input_bucket) shape, traced slot index);
     the decode step reuses one jitted (C, 1) executable throughout.
 
+Continuous mode takes a KV-cache layout, ``kv="contiguous"`` (default)
+or ``kv="paged"``:
+
+  * contiguous — each slot owns a private (max_len,) KV ring; memory is
+    pinned to ``num_slots * max_len`` regardless of live tokens.
+  * paged — one pool of ``kv_num_blocks`` fixed-size blocks shared by
+    all slots (repro.kvcache): a sequence holds a block table, admission
+    reserves its worst case ``ceil((S + cap - 1)/block_size)`` blocks
+    (deadlock-free: a boundary crossing can never find the pool empty),
+    physical blocks are allocated lazily when decode crosses a block
+    boundary, and eviction returns every block to the free list.  A
+    request whose reservation does not fit is REJECTED for memory
+    (left queued; counted in the results) — the admission gate the
+    simulator's block-budget model mirrors exactly.  Decode runs the
+    same (C, 1) executable against gathered block-table views, so paged
+    output is token-for-token identical to contiguous; with
+    ``num_slots`` raised above the persona batch size at the same KV
+    budget, paging admits strictly more concurrent sequences.
+
 Adaptation note (DESIGN.md §2): a CPU-only container has no heterogeneous
 co-processor, so the "CPU lane" is a *bulk lane* — a second execution
 queue drained only when the main lane is idle, emulating resource
@@ -47,6 +66,8 @@ import jax.numpy as jnp
 from repro.core import priority as prio
 from repro.core import scheduler as sched_lib
 from repro.core.personas import Persona
+from repro.kvcache import BlockAllocator, blocks_for_tokens
+from repro.kvcache.paged import PagedKVCache
 from repro.models import transformer
 
 from . import generate
@@ -80,6 +101,9 @@ class Request:
     lane: str = ""
     out_len: int = 0
     slot: int = -1               # decode slot served in (continuous mode)
+    # generated token ids (greedy); the paged-vs-contiguous parity test
+    # asserts these match token for token
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def response_time(self) -> float:
@@ -97,9 +121,16 @@ class ServingEngine:
                  profile: sched_lib.OfflineProfile, *,
                  input_bucket: int = 32, max_new_tokens: int = 32,
                  xi: float = 2.0, mode: str = "batch",
-                 eos_id: int = EOS_ID):
+                 eos_id: int = EOS_ID, kv: str = "contiguous",
+                 num_slots: Optional[int] = None,
+                 kv_block_size: int = 16,
+                 kv_num_blocks: Optional[int] = None):
         if mode not in ("batch", "continuous"):
             raise ValueError(f"unknown mode {mode!r}")
+        if kv not in ("contiguous", "paged"):
+            raise ValueError(f"unknown kv layout {kv!r}")
+        if kv == "paged" and mode != "continuous":
+            raise ValueError('kv="paged" requires mode="continuous"')
         self.params = params
         self.cfg = cfg
         self.policy = policy
@@ -110,7 +141,31 @@ class ServingEngine:
         self.xi = xi
         self.mode = mode
         self.eos_id = eos_id
+        self.kv = kv
         self.max_len = input_bucket + max_new_tokens + 8
+        # continuous-mode decode width; paged engines raise it above the
+        # persona batch size so the BLOCK BUDGET (not worst-case slot
+        # length) bounds concurrency
+        self.num_slots = (num_slots if num_slots is not None
+                          else self.persona.batch_size)
+        self.kv_block_size = kv_block_size
+        # default budget: the worst-case reservation fits in every slot
+        # (no rejections) — benchmarks pass an explicit tighter budget
+        self.kv_num_blocks = (
+            kv_num_blocks if kv_num_blocks is not None
+            else self.num_slots * blocks_for_tokens(self.max_len,
+                                                    kv_block_size))
+        if kv == "paged":
+            ok, why = transformer.paged_supported(cfg)
+            if not ok:
+                raise NotImplementedError(f"paged KV cache: {why}")
+            worst = blocks_for_tokens(input_bucket + max_new_tokens - 1,
+                                      kv_block_size)
+            if worst > self.kv_num_blocks:
+                raise ValueError(
+                    f"kv_num_blocks={self.kv_num_blocks} cannot hold one "
+                    f"worst-case sequence ({worst} blocks) — admission "
+                    "would deadlock")
         # batch-mode executables are preallocated at the policy's max
         # consolidated batch (b * C for UASCHED, C otherwise) so a
         # consolidated batch runs as ONE batch, matching the simulator;
@@ -119,11 +174,22 @@ class ServingEngine:
         self._prefill = generate.make_prefill_fn(cfg, self.max_len)
         self._decode = generate.make_decode_fn(cfg)
         self._slot_prefill = generate.make_slot_prefill_fn(cfg, self.max_len)
+        if kv == "paged":
+            self._paged_prefill = generate.make_paged_prefill_fn(
+                cfg, self.max_len)
+            self._paged_decode = generate.make_paged_decode_fn(cfg)
         self.scheduler_overhead_s = 0.0
         # exposed for the slot-recycling tests: per-slot cache after the
         # last continuous serve, and the admission audit trail
         self.slot_cache = None
         self.admission_log: List[Dict] = []
+        # paged-KV state (populated by a paged continuous serve)
+        self.paged_cache: Optional[PagedKVCache] = None
+        self.allocator: Optional[BlockAllocator] = None
+        # memory-efficiency accounting (reset per serve)
+        self.kv_util_samples: List[float] = []
+        self._rejected_ids: set = set()
+        self.peak_concurrency = 0
 
     # ------------------------------------------------------------------
     def _to_sim_task(self, req: Request) -> prio.SimTask:
@@ -174,21 +240,34 @@ class ServingEngine:
         if lane == "cpu":
             dur *= self.persona.cpu_slowdown   # bulk-lane emulation
         finish = now + dur
+        if self.mode == "batch":
+            # batch-mode memory metric: rows used of the preallocated
+            # executable; the continuous bulk lane must NOT sample here,
+            # its KV metrics track the decode slots / block pool only
+            self.kv_util_samples.append(len(batch) / Cb)
+            self.peak_concurrency = max(self.peak_concurrency, len(batch))
+        toks = np.asarray(out_tokens)
         for i, t in enumerate(batch):
             t.start, t.finish, t.lane = now, finish, lane
             t.task.start, t.task.finish, t.task.lane = now, finish, lane
             t.task.out_len = int(lengths[i]) if i < len(lengths) else 0
+            t.task.out_tokens = toks[i, :t.task.out_len].tolist()
         return finish
 
     # ------------------------------------------------------------------
     def serve(self, requests: Sequence[Request]) -> Dict:
         """Run a full trace (virtual-time arrivals, real execution)."""
+        self.kv_util_samples = []
+        self._rejected_ids = set()
+        self.peak_concurrency = 0
         if self.mode == "continuous":
             return self._serve_continuous(requests)
         return self._serve_batch(requests)
 
     def _result(self, done: List[prio.SimTask], n: int) -> Dict:
         rts = np.array([t.response_time for t in done])
+        util = (np.array(self.kv_util_samples)
+                if self.kv_util_samples else np.zeros(1))
         return {
             "mean_response_s": float(rts.mean()),
             "max_response_s": float(rts.max()),
@@ -199,6 +278,22 @@ class ServingEngine:
             "tasks": done,
             "completion_order": [t.task.task_id for t in done],
             "mode": self.mode,
+            # memory-efficiency metrics: KV utilization is the fraction
+            # of the reserved KV memory in use, sampled per decode step
+            # (paged: allocated/total blocks; contiguous continuous:
+            # occupied/total slots — a slot pins max_len KV whether its
+            # sequence is short or long; batch: rows used / capacity).
+            # rejected_for_memory counts DISTINCT requests deferred at
+            # least once by the block-budget gate (a blocked request is
+            # retried every step; counting events would scale with
+            # decode-step count, not workload)
+            "kv_util_peak": float(util.max()),
+            "kv_util_mean": float(util.mean()),
+            "rejected_for_memory": len(self._rejected_ids),
+            "peak_concurrency": self.peak_concurrency,
+            "kv": {"kind": self.kv, "num_slots": self.num_slots,
+                   "block_size": self.kv_block_size,
+                   "num_blocks": self.kv_num_blocks},
         }
 
     def _serve_batch(self, requests: Sequence[Request]) -> Dict:
@@ -253,14 +348,24 @@ class ServingEngine:
 
     def _serve_continuous(self, requests: Sequence[Request]) -> Dict:
         persona = self.persona
-        C = persona.batch_size
+        C = self.num_slots
+        S = self.input_bucket
+        paged = self.kv == "paged"
         pending = sorted(requests, key=lambda r: r.arrival)
         sim_tasks = [self._to_sim_task(r) for r in pending]
         n = len(sim_tasks)
         queue: List[prio.SimTask] = []
         bulk: List[prio.SimTask] = []
         done: List[prio.SimTask] = []
-        cache = transformer.init_slot_cache(self.cfg, C, self.max_len)
+        if paged:
+            kvc = PagedKVCache(self.cfg, C, self.kv_num_blocks,
+                               self.kv_block_size, self.max_len)
+            alloc = BlockAllocator(self.kv_num_blocks, self.kv_block_size)
+            reserved = [0] * C       # per-slot worst-case block holdback
+            cache = kvc.state
+            self.paged_cache, self.allocator = kvc, alloc
+        else:
+            cache = transformer.init_slot_cache(self.cfg, C, self.max_len)
         slot_task: List[Optional[prio.SimTask]] = [None] * C
         slot_gen = [0] * C
         slot_cap = [0] * C
@@ -277,6 +382,7 @@ class ServingEngine:
             # --- admissions: fill freed slots, one policy call per slot
             while queue and None in slot_task:
                 running = [t for t in slot_task if t is not None]
+                prev_queue = list(queue)
                 t0 = time.perf_counter()
                 task, lane, rest = self.policy.admit(list(queue), now,
                                                      running)
@@ -287,25 +393,50 @@ class ServingEngine:
                 if lane == "cpu":
                     bulk.append(task)
                     continue
+                cap = self._cap(task.task)
+                if paged:
+                    # admission gate: reserve the sequence's worst case
+                    # (prompt + cap - 1 written positions) so boundary
+                    # crossings can never exhaust the pool.  The
+                    # simulator's block-budget model mirrors this check
+                    # bit for bit (simulate_continuous).
+                    need = blocks_for_tokens(S + cap - 1,
+                                             self.kv_block_size)
+                    if need > self.kv_num_blocks - sum(reserved):
+                        queue = prev_queue       # leave it queued
+                        self._rejected_ids.add(task.task.task_id)
+                        break
                 slot = slot_task.index(None)
                 batch = {"tokens": jnp.asarray(
                     self._tokenize_padded(task.task.text)[None, :])}
                 t0 = time.perf_counter()
-                cache, last_logits = self._slot_prefill(
-                    self.params, cache, batch, jnp.int32(slot))
+                if paged:
+                    reserved[slot] = need
+                    kvc.set_table(slot, alloc.allocate_n(
+                        task.task.task_id, alloc.blocks_for(S)))
+                    cache, last_logits = self._paged_prefill(
+                        self.params, cache, batch, jnp.int32(slot),
+                        kvc.table_row(slot))
+                else:
+                    cache, last_logits = self._slot_prefill(
+                        self.params, cache, batch, jnp.int32(slot))
                 first = int(jnp.argmax(last_logits))
                 now += time.perf_counter() - t0
                 task.start, task.lane = now, "gpu"
                 task.task.start, task.task.lane = now, "gpu"
                 task.task.slot = slot
+                task.task.out_tokens = [first]
                 self.admission_log.append(
                     {"task_id": task.task.task_id, "slot": slot,
                      "step": step, "now": now})
-                cap = self._cap(task.task)
                 if first == self.eos_id or cap <= 1:
                     task.finish = now
                     task.task.finish, task.task.out_len = now, 1
                     done.append(task)
+                    if paged:
+                        alloc.free_sequence(task.task.task_id)
+                        kvc.clear_table(slot)
+                        reserved[slot] = 0
                 else:
                     slot_task[slot] = task
                     slot_gen[slot], slot_cap[slot] = 1, cap
@@ -313,17 +444,37 @@ class ServingEngine:
 
             active = [s for s in range(C) if slot_task[s] is not None]
             if active:
+                self.peak_concurrency = max(self.peak_concurrency,
+                                            len(active))
                 # --- one decode step over ALL slots (single executable)
                 t0 = time.perf_counter()
-                next_tok, _, cache = self._decode(
-                    self.params, cache, jnp.asarray(tokens))
+                if paged:
+                    # boundary crossings: this step writes position
+                    # S + slot_gen - 1; allocate its block lazily (the
+                    # admission reservation guarantees one is free)
+                    for s in active:
+                        tid = slot_task[s].task.task_id
+                        have = len(alloc.table(tid))
+                        if alloc.blocks_for(S + slot_gen[s]) > have:
+                            kvc.extend_table(s, have, alloc.allocate(tid))
+                    next_tok, _, cache = self._paged_decode(
+                        self.params, cache, jnp.asarray(tokens),
+                        kvc.tables_device())
+                else:
+                    next_tok, _, cache = self._decode(
+                        self.params, cache, jnp.asarray(tokens))
                 next_host = np.array(jax.block_until_ready(next_tok))
                 now += time.perf_counter() - t0
                 step += 1
+                if paged:
+                    self.kv_util_samples.append(alloc.utilization())
+                else:
+                    self.kv_util_samples.append(len(active) / C)
                 for s in active:                 # evict per step, in order
                     slot_gen[s] += 1
                     tokens[s, 0] = int(next_host[s, 0])
                     task = slot_task[s]
+                    task.task.out_tokens.append(int(next_host[s, 0]))
                     if (int(next_host[s, 0]) == self.eos_id
                             or slot_gen[s] >= slot_cap[s]):
                         task.finish = now
@@ -332,6 +483,10 @@ class ServingEngine:
                         done.append(task)
                         slot_task[s] = None
                         tokens[s, 0] = generate.PAD_ID
+                        if paged:
+                            alloc.free_sequence(task.task.task_id)
+                            kvc.clear_table(s)
+                            reserved[s] = 0
                 continue
 
             if bulk and not queue:
@@ -345,5 +500,8 @@ class ServingEngine:
                 now = max(now, sim_tasks[i].r)
             else:
                 now += self.xi
-        self.slot_cache = cache
+        if paged:
+            kvc.state = cache
+        else:
+            self.slot_cache = cache
         return self._result(done, n)

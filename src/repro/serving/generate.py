@@ -50,6 +50,29 @@ def make_slot_prefill_fn(cfg, max_len: int):
     return slot_prefill_fn
 
 
+def make_paged_prefill_fn(cfg, max_len: int):
+    """Jitted paged admission: prefill one (1, S) request into the page
+    pool at the blocks named by ``table_row``.  Slot index and table
+    are traced operands, so ONE executable serves every admission."""
+    @jax.jit
+    def paged_prefill_fn(params, cache, batch, slot, table_row):
+        return model_lib.prefill_into_paged(params, cfg, cache, batch,
+                                            slot, table_row, max_len)
+
+    return paged_prefill_fn
+
+
+def make_paged_decode_fn(cfg):
+    """Jitted paged decode step; block tables ride as a per-call operand
+    (the engine extends them host-side on block-boundary crossings)."""
+    @jax.jit
+    def paged_decode_fn(params, cache, token, tables):
+        return model_lib.decode_step_paged(params, cfg, cache, token,
+                                           tables)
+
+    return paged_decode_fn
+
+
 def generate(params, cfg, batch: dict, *, max_new_tokens: int,
              eos_id: int = 1, prefill_fn=None, decode_fn=None,
              max_lens=None):

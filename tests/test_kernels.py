@@ -8,7 +8,8 @@ import numpy as np
 import pytest
 
 from repro.kernels import (decode_attention as fd, flash_attention as fa,
-                           ref, rmsnorm as rn)
+                           paged_decode_attention as pfd, ref,
+                           rmsnorm as rn)
 
 DTYPES = [jnp.float32, jnp.bfloat16]
 
@@ -59,6 +60,83 @@ def test_flash_decode_sweep(B, S, H, KV, D, block_k, dtype):
 
 
 @pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,H,KV,D,block_size,nb", [
+    (2, 4, 2, 32, 16, 4),       # GQA, 4-entry tables
+    (1, 8, 1, 64, 32, 3),       # MQA
+    (3, 4, 4, 16, 64, 2),       # MHA, big pages
+    (2, 8, 2, 128, 16, 5),      # long table, wide heads
+])
+def test_paged_decode_sweep(B, H, KV, D, block_size, nb, dtype):
+    """Paged flash-decode vs the block-table gather oracle across block
+    sizes and RAGGED per-sequence lengths (tables deliberately permuted
+    so physical order != logical order)."""
+    N = B * nb + 3               # spare pages: stale/garbage content
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32).astype(dtype)
+    kp = jax.random.normal(ks[1], (N, block_size, KV, D),
+                           jnp.float32).astype(dtype)
+    vp = jax.random.normal(ks[2], (N, block_size, KV, D),
+                           jnp.float32).astype(dtype)
+    rng = np.random.default_rng(B * 131 + block_size)
+    tables = jnp.asarray(np.stack(
+        [rng.permutation(N)[:nb] for _ in range(B)]).astype(np.int32))
+    lens = jnp.asarray(
+        rng.integers(1, nb * block_size + 1, (B,)).astype(np.int32))
+    out = pfd.paged_flash_decode_attention(q, kp, vp, tables, lens,
+                                           interpret=True)
+    want = ref.paged_decode_attention_ref(q, kp, vp, tables, lens)
+    assert out.shape == (B, H, D) and out.dtype == dtype
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               want.astype(jnp.float32), **_tol(dtype))
+
+
+def test_paged_decode_matches_contiguous_decode():
+    """Triangle closure: a paged cache holding the same logical KV as a
+    contiguous cache gives the same attention output (paged ref vs the
+    contiguous decode oracle)."""
+    B, H, KV, D, bs, nb = 2, 4, 2, 32, 16, 4
+    S = nb * bs
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kc = jax.random.normal(ks[1], (B, S, KV, D))
+    vc = jax.random.normal(ks[2], (B, S, KV, D))
+    lens = jnp.asarray([S - 7, 9], jnp.int32)
+    # lay the contiguous caches out into per-sequence pages
+    kp = kc.reshape(B * nb, bs, KV, D)
+    vp = vc.reshape(B * nb, bs, KV, D)
+    tables = jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
+    mask = jnp.arange(S)[None, :] < lens[:, None]
+    want = ref.decode_attention_ref(q, kc, vc, mask=mask)
+    got = ref.paged_decode_attention_ref(q, kp, vp, tables, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    got_kernel = pfd.paged_flash_decode_attention(q, kp, vp, tables, lens,
+                                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(got_kernel), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_decode_empty_row_returns_zeros():
+    """A seq_len == 0 row (nothing valid to attend to) must yield zeros,
+    not an average of garbage page contents; other rows are unaffected."""
+    B, H, KV, D, bs, nb = 2, 4, 2, 32, 16, 3
+    N = B * nb
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kp = jax.random.normal(ks[1], (N, bs, KV, D))
+    vp = jax.random.normal(ks[2], (N, bs, KV, D))
+    tables = jnp.arange(N, dtype=jnp.int32).reshape(B, nb)
+    lens = jnp.asarray([0, 11], jnp.int32)
+    out = pfd.paged_flash_decode_attention(q, kp, vp, tables, lens,
+                                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(out[0]),
+                                  np.zeros((H, D), np.float32))
+    want = ref.paged_decode_attention_ref(q, kp, vp, tables, lens)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(want[1]),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("shape,block_rows", [
     ((8, 128), 4), ((3, 5, 256), 8), ((17, 64), 8), ((1, 1024), 1),
 ])
@@ -89,3 +167,14 @@ def test_ops_wrappers_dispatch():
     np.testing.assert_allclose(
         ops.rms_norm(x, w, use_pallas=True, interpret=True),
         ops.rms_norm(x, w, use_pallas=False), atol=1e-5, rtol=1e-5)
+    qd = jax.random.normal(ks[0], (2, 4, 16))
+    kp = jax.random.normal(ks[1], (6, 8, 2, 16))
+    vp = jax.random.normal(ks[2], (6, 8, 2, 16))
+    tables = jnp.asarray([[0, 2, 4], [1, 3, 5]], jnp.int32)
+    lens = jnp.asarray([17, 9], jnp.int32)
+    np.testing.assert_allclose(
+        ops.paged_decode_attention(qd, kp, vp, tables, lens,
+                                   use_pallas=True, interpret=True),
+        ops.paged_decode_attention(qd, kp, vp, tables, lens,
+                                   use_pallas=False),
+        atol=1e-4, rtol=1e-4)

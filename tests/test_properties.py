@@ -15,6 +15,10 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (personas, priority as prio, rulegen,  # noqa: E402
                         scheduler as sched, simulator, workload)
+from repro.kvcache import BlockAllocator, blocks_for_tokens  # noqa: E402
+from repro.kvcache.allocator import OutOfBlocksError  # noqa: E402
+from repro.kvcache.paged import (gather_tokens,  # noqa: E402
+                                 scatter_prefill, scatter_token)
 from repro.models import transformer  # noqa: E402
 from repro.serving.engine import hash_tokenize  # noqa: E402
 
@@ -135,6 +139,92 @@ def test_continuous_no_regression_homogeneous_fifo(out_len, n, rate, seed):
     assert set(rt_batch) == set(rt_cont)
     for i in rt_batch:
         assert rt_cont[i] <= rt_batch[i] + 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(num_blocks=st.integers(1, 32),
+       commands=st.lists(
+           st.tuples(st.sampled_from(["alloc", "free"]),
+                     st.integers(0, 5)),
+           max_size=60))
+def test_allocator_never_double_allocates(num_blocks, commands):
+    """kvcache.BlockAllocator: a live block is owned by exactly one
+    sequence at every point of an arbitrary alloc/free interleaving,
+    accounting always balances, and frees are complete (no leaks)."""
+    a = BlockAllocator(num_blocks, 16)
+    live = {}                                 # seq -> set(blocks)
+    for op, seq in commands:
+        if op == "alloc":
+            if a.num_free == 0:
+                with pytest.raises(OutOfBlocksError):
+                    a.allocate(seq)
+                continue
+            blk = a.allocate(seq)
+            for blocks in live.values():
+                assert blk not in blocks, "double-allocated live block"
+            live.setdefault(seq, set()).add(blk)
+        else:
+            freed = a.free_sequence(seq)
+            assert freed == len(live.pop(seq, set()))
+        assert a.num_free + a.num_used == num_blocks
+        assert a.num_used == sum(len(b) for b in live.values())
+    for seq in list(live):
+        a.free_sequence(seq)
+    a.check_no_leaks()
+
+
+@settings(max_examples=30, deadline=None)
+@given(bs=st.integers(1, 16), nb=st.integers(1, 6),
+       spare=st.integers(0, 4), data=st.data())
+def test_page_gather_roundtrips_writes(bs, nb, spare, data):
+    """kvcache paging: block-table gather round-trips
+    scatter_prefill/scatter_token contents for every (block_size, table
+    length, ragged sequence length) combination."""
+    S = data.draw(st.integers(1, nb * bs))
+    N = nb + spare
+    rng = np.random.default_rng(S * 31 + bs)
+    table = jnp.asarray(rng.permutation(N)[:nb].astype(np.int32))
+    seq = jnp.asarray(rng.normal(size=(S, 3)).astype(np.float32))
+    pages = jnp.asarray(rng.normal(size=(N, bs, 3)).astype(np.float32))
+    n_prefill = S // 2
+    if n_prefill:
+        pages = scatter_prefill(pages, seq[:n_prefill], table, n_prefill)
+    for pos in range(n_prefill, S):
+        pages = scatter_token(pages, seq[pos][None], table[None, :],
+                              jnp.asarray([pos]))
+    got = gather_tokens(pages, table[None, :])[0, :S]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(seq))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    us=st.lists(st.floats(0.5, 60.0), min_size=1, max_size=40),
+    seed=st.integers(0, 10),
+    policy=st.sampled_from(["fifo", "hpf", "rt-lm"]),
+    bs=st.integers(1, 8),
+    headroom=st.integers(0, 24),
+)
+def test_block_budget_sim_invariants(us, seed, policy, bs, headroom):
+    """simulate_continuous with the block-budget admission model: no
+    task lost/duplicated, reservations never exceed the budget, and the
+    whole trace still completes (reservation admission is deadlock-free
+    by construction)."""
+    prompt = 8
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(0.3, len(us)))
+    tasks = _sim_tasks(us, arrivals)
+    worst = max(blocks_for_tokens(prompt + max(1, t.true_out_len) - 1, bs)
+                for t in tasks)
+    pcfg = sched.PolicyConfig(u_scale=30.0, tau=35.0)
+    pol = sched.POLICIES[policy](PERSONA, pcfg)
+    res = simulator.simulate_continuous(
+        tasks, pol, num_slots=4, kv_block_size=bs,
+        kv_num_blocks=worst + headroom, prompt_len=prompt)
+    assert len(res.tasks) == len(us)
+    ids = sorted(id(t) for t in res.tasks)
+    assert len(set(ids)) == len(ids)
+    assert 0.0 <= res.kv_util_mean <= res.kv_util_peak <= 1.0 + 1e-9
+    assert res.peak_concurrency <= 4
 
 
 @settings(max_examples=30, deadline=None)
