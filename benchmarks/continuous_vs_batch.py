@@ -49,21 +49,24 @@ KV_BLOCK = 16
 PAGED_SLOTS = 3 * BATCH_SLOTS
 
 
-def build_workload(n=N_REQUESTS, seed=SEED):
+def build_workload(n=N_REQUESTS, seed=SEED, *, short=SHORT, long_len=LONG,
+                   long_frac=LONG_FRAC, window=0.5):
+    """Bimodal-output workload shared by the serving benchmarks
+    (prefill_interference.py re-parameterizes it)."""
     corpus = datagen.generate_corpus(
         datagen.VARIANCE_MIXES["normal"], n + 64, seed=seed)
     train, test = datagen.train_test_split(corpus, train_frac=0.4)
     rng = np.random.default_rng(seed)
-    caps = np.where(rng.random(n) < LONG_FRAC, LONG, SHORT).astype(int)
+    caps = np.where(rng.random(n) < long_frac, long_len, short).astype(int)
     # saturated regime: everything arrives inside the first batching
     # window, so the comparison isolates execution-model differences
-    arrivals = np.sort(rng.uniform(0.0, 0.5, size=n))
+    arrivals = np.sort(rng.uniform(0.0, window, size=n))
     return train, test[:n], caps.tolist(), arrivals.tolist()
 
 
-def persona_for_bench():
+def persona_for_bench(batch_size=BATCH_SLOTS):
     return dataclasses.replace(personas.get_persona("bart"),
-                               batch_size=BATCH_SLOTS)
+                               batch_size=batch_size)
 
 
 def sim_tasks_for(test, caps, arrivals, profile, persona, xi=2.0):
@@ -79,10 +82,10 @@ def sim_tasks_for(test, caps, arrivals, profile, persona, xi=2.0):
     return out
 
 
-def run_sim(policy_name="fifo"):
+def run_sim(policy_name="fifo", seed=SEED):
     persona = persona_for_bench()
-    train, test, caps, arrivals = build_workload()
-    profile = sched.offline_profile(train, persona, epochs=20)
+    train, test, caps, arrivals = build_workload(seed=seed)
+    profile = sched.offline_profile(train, persona, epochs=20, seed=seed)
     tasks = sim_tasks_for(test, caps, arrivals, profile, persona)
     pcfg = profile.policy_config()
     rtc = simulator.run_policy(tasks, policy_name, persona, pcfg,
@@ -97,7 +100,7 @@ def run_sim(policy_name="fifo"):
     }
 
 
-def run_engine(policy_name="fifo", n=32):
+def run_engine(policy_name="fifo", n=32, seed=SEED):
     """Same trace on the real JAX engine (tiny config, wall-clock)."""
     import jax
     from repro import configs
@@ -105,8 +108,8 @@ def run_engine(policy_name="fifo", n=32):
     from repro.serving.engine import Request, ServingEngine
 
     persona = persona_for_bench()
-    train, test, caps, arrivals = build_workload(n=n)
-    profile = sched.offline_profile(train, persona, epochs=20)
+    train, test, caps, arrivals = build_workload(n=n, seed=seed)
+    profile = sched.offline_profile(train, persona, epochs=20, seed=seed)
     cfg = configs.get_smoke_config("starcoder2-3b")
     params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
     out = {}
@@ -135,7 +138,7 @@ def _kv_summary(res: dict) -> dict:
              "kv_util_peak", "kv_util_mean", "rejected_for_memory", "kv")}
 
 
-def run_paged(policy_name="fifo", n_engine=32):
+def run_paged(policy_name="fifo", n_engine=32, seed=SEED):
     """Contiguous vs paged continuous engines at EQUAL KV-memory budget.
 
     Budget = what the contiguous engine reserves (BATCH_SLOTS * max_len
@@ -156,8 +159,8 @@ def run_paged(policy_name="fifo", n_engine=32):
     budget_blocks = default_num_blocks(BATCH_SLOTS, max_len, KV_BLOCK)
 
     # --- deterministic sim column (full trace) ---
-    train, test, caps, arrivals = build_workload()
-    profile = sched.offline_profile(train, persona, epochs=20)
+    train, test, caps, arrivals = build_workload(seed=seed)
+    profile = sched.offline_profile(train, persona, epochs=20, seed=seed)
     tasks = sim_tasks_for(test, caps, arrivals, profile, persona)
     pcfg = profile.policy_config()
     cont = simulator.run_policy(tasks, policy_name, persona, pcfg,
@@ -184,8 +187,8 @@ def run_paged(policy_name="fifo", n_engine=32):
     }
 
     # --- real JAX engine column (tiny config, wall-clock) ---
-    train, test, caps, arrivals = build_workload(n=n_engine)
-    profile = sched.offline_profile(train, persona, epochs=20)
+    train, test, caps, arrivals = build_workload(n=n_engine, seed=seed)
+    profile = sched.offline_profile(train, persona, epochs=20, seed=seed)
     cfg = configs.get_smoke_config("starcoder2-3b")
     params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
     eng = {}
@@ -219,21 +222,21 @@ def run_paged(policy_name="fifo", n_engine=32):
     }
 
 
-def main():
+def main(seed=SEED):
     t0 = time.time()
-    sim = run_sim("fifo")
+    sim = run_sim("fifo", seed=seed)
     common.save("continuous_vs_batch_sim", sim)
     common.emit("continuous_vs_batch_sim", time.time() - t0,
                 f"throughput_x={sim['throughput_ratio']:.2f},"
                 f"mean_response_x={sim['mean_response_ratio']:.2f}")
     t0 = time.time()
-    eng = run_engine("fifo")
+    eng = run_engine("fifo", seed=seed)
     common.save("continuous_vs_batch_engine", eng)
     common.emit("continuous_vs_batch_engine", time.time() - t0,
                 f"throughput_x={eng['throughput_ratio']:.2f},"
                 f"mean_response_x={eng['mean_response_ratio']:.2f}")
     t0 = time.time()
-    paged = run_paged("fifo")
+    paged = run_paged("fifo", seed=seed)
     common.save("paged_vs_contiguous", paged)
     common.emit("paged_vs_contiguous", time.time() - t0,
                 f"sim_concurrency_x={paged['sim']['concurrency_gain']:.2f},"
@@ -244,4 +247,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=SEED)
+    main(seed=ap.parse_args().seed)

@@ -2,9 +2,13 @@
 microbenches + the roofline report.
 
     PYTHONPATH=src python -m benchmarks.run [--only table3_max_response]
+                                           [--seed N]
 
 Prints ``name,us_per_call,derived`` CSV lines (harness contract) and
-writes full payloads to experiments/bench/*.json.
+writes full payloads to experiments/bench/*.json.  ``--seed`` threads
+through the serving benchmarks (continuous_vs_batch,
+prefill_interference) so the recorded JSONs are deterministic and
+reproducible for any seed.
 """
 
 from __future__ import annotations
@@ -14,7 +18,7 @@ import time
 import traceback
 
 from . import (common, continuous_vs_batch, kernel_bench, paper_tables,
-               roofline_report)
+               prefill_interference, roofline_report)
 
 
 def run_paper_tables(only=None):
@@ -76,23 +80,27 @@ def run_roofline(only=None):
                     f"compute_bound={s['compute_bound']};fits={s['fits']}")
 
 
-def run_continuous(only=None):
-    if only and only not in ("continuous_vs_batch_sim",
-                             "continuous_vs_batch_engine",
-                             "continuous_vs_batch",
-                             "paged_vs_contiguous"):
-        return
-    continuous_vs_batch.main()
+def run_continuous(only=None, seed=0):
+    if only is None or only in ("continuous_vs_batch_sim",
+                                "continuous_vs_batch_engine",
+                                "continuous_vs_batch",
+                                "paged_vs_contiguous"):
+        continuous_vs_batch.main(seed=seed)
+    if only is None or only in ("chunked_prefill", "prefill_interference"):
+        prefill_interference.main(seed=seed)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload/profile seed for the serving "
+                         "benchmarks (deterministic JSONs per seed)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     run_paper_tables(args.only)
     run_kernels(args.only)
-    run_continuous(args.only)
+    run_continuous(args.only, seed=args.seed)
     run_roofline(args.only)
     return 0
 

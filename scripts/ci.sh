@@ -1,14 +1,18 @@
 #!/usr/bin/env bash
-# CI entry point (also runnable locally): the fast lane first for quick
-# signal, then the full tier-1 suite.
+# CI entry point (also runnable locally): quickest signal first (the
+# chunked-prefill subsystem module), then the fast lane, then the full
+# tier-1 suite.
 #
-#   scripts/ci.sh          # fast lane + full tier-1
-#   CI_FAST_ONLY=1 scripts/ci.sh   # fast lane only
+#   scripts/ci.sh          # prefill module + fast lane + full tier-1
+#   CI_FAST_ONLY=1 scripts/ci.sh   # prefill module + fast lane only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+echo "== chunked-prefill subsystem (quick signal) =="
+scripts/run_tier1.sh -m "not slow" tests/test_chunked_prefill.py
+
 echo "== fast lane (-m 'not slow') =="
-scripts/run_tier1.sh -m "not slow"
+scripts/run_tier1.sh -m "not slow" --ignore=tests/test_chunked_prefill.py
 
 if [[ "${CI_FAST_ONLY:-0}" != "1" ]]; then
   echo "== full tier-1 =="

@@ -47,10 +47,16 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.kvcache import blocks_for_tokens
+from repro.prefill import ChunkScheduler
 
 from . import scheduler as sched_lib
 from .personas import Persona
 from .priority import SimTask
+
+
+def _pct(samples, q: float) -> float:
+    return float(np.quantile(np.asarray(samples), q)) if len(samples) \
+        else 0.0
 
 
 @dataclasses.dataclass
@@ -64,6 +70,17 @@ class SimResult:
     kv_util_peak: float = 0.0
     kv_util_mean: float = 0.0
     peak_concurrency: int = 0
+    # tail-latency metrics (engine-side mirrors in _result): TTFT per
+    # task, pooled inter-token latencies — p99 ITL is where stall
+    # prefill shows up as decode jitter.  batch mode models streaming
+    # linearly across the batch's decode horizon.
+    ttft_p50: float = 0.0
+    ttft_p99: float = 0.0
+    itl_p50: float = 0.0
+    itl_p99: float = 0.0
+    # chunked-prefill mode: per-iteration (decode_tokens,
+    # prefill_tokens) — the engine records the identical trace
+    budget_trace: List = dataclasses.field(default_factory=list)
 
     # ---- paper metrics ------------------------------------------------
     @property
@@ -94,6 +111,10 @@ class SimResult:
             "throughput_per_min": self.throughput_per_min,
             "miss_rate": self.miss_rate,
             "n_tasks": len(self.tasks),
+            "ttft_p50": self.ttft_p50,
+            "ttft_p99": self.ttft_p99,
+            "itl_p50": self.itl_p50,
+            "itl_p99": self.itl_p99,
         }
 
 
@@ -104,13 +125,23 @@ class Lane:
         self.busy_time = 0.0
 
     def run_batch(self, batch: List[SimTask], now: float,
-                  persona: Persona, lane_name: str) -> float:
+                  persona: Persona, lane_name: str,
+                  ttfts: Optional[list] = None,
+                  itls: Optional[list] = None) -> float:
         start = max(now, self.free_at)
         dur = persona.batch_latency(
             [t.true_out_len for t in batch]) * self.slowdown
         finish = start + dur
+        # linear streaming model for the tail metrics: the batch decodes
+        # max(out_len) steps over ``dur``, so token j of every member is
+        # emitted at a linear fraction of the horizon (uniform ITL)
+        horizon = max(max((t.true_out_len for t in batch), default=1), 1)
         for t in batch:
             t.start, t.finish, t.lane = start, finish, lane_name
+            if ttfts is not None:
+                ttfts.append(start + dur / horizon - t.r)
+            if itls is not None and t.true_out_len > 1:
+                itls.extend([dur / horizon] * (t.true_out_len - 1))
         self.free_at = finish
         self.busy_time += dur
         return finish
@@ -133,6 +164,8 @@ def simulate(tasks: Sequence[SimTask], policy: sched_lib.Policy, *,
     cpu = Lane(persona.cpu_slowdown)
     now = 0.0
     overhead_total = 0.0
+    ttfts: List[float] = []
+    itls: List[float] = []
     i = 0
     C = persona.batch_size
 
@@ -161,12 +194,13 @@ def simulate(tasks: Sequence[SimTask], policy: sched_lib.Policy, *,
             if gpu_batch:
                 oh = per_task_overhead_s * len(gpu_batch)
                 overhead_total += oh
-                gpu.run_batch(gpu_batch, now + oh, persona, "gpu")
+                gpu.run_batch(gpu_batch, now + oh, persona, "gpu",
+                              ttfts, itls)
                 done.extend(gpu_batch)
                 progressed = True
         if cpu.free_at <= now + 1e-12 and cpu_queue:
             batch, cpu_queue = cpu_queue[:C], cpu_queue[C:]
-            cpu.run_batch(batch, now, persona, "cpu")
+            cpu.run_batch(batch, now, persona, "cpu", ttfts, itls)
             done.extend(batch)
             progressed = True
 
@@ -186,7 +220,9 @@ def simulate(tasks: Sequence[SimTask], policy: sched_lib.Policy, *,
 
     makespan = max(t.finish for t in done) - min(t.r for t in done)
     return SimResult(tasks=done, makespan=makespan,
-                     overhead_s=overhead_total)
+                     overhead_s=overhead_total,
+                     ttft_p50=_pct(ttfts, 0.50), ttft_p99=_pct(ttfts, 0.99),
+                     itl_p50=_pct(itls, 0.50), itl_p99=_pct(itls, 0.99))
 
 
 def simulate_continuous(tasks: Sequence[SimTask],
@@ -196,7 +232,10 @@ def simulate_continuous(tasks: Sequence[SimTask],
                         num_slots: Optional[int] = None,
                         kv_block_size: Optional[int] = None,
                         kv_num_blocks: Optional[int] = None,
-                        prompt_len: int = 0) -> SimResult:
+                        prompt_len: int = 0,
+                        prefill: str = "stall",
+                        chunk_size: Optional[int] = None,
+                        token_budget: Optional[int] = None) -> SimResult:
     """Iteration-level (continuous) batching over C decode slots.
 
     Mirrors the real engine's step loop exactly (serving/engine.py
@@ -218,12 +257,34 @@ def simulate_continuous(tasks: Sequence[SimTask],
     retried every step); allocation is modeled lazily (blocks cover written
     positions) for the utilization metrics.  ``num_slots`` decouples
     decode width from the persona batch size, as the paged engine does.
+
+    Chunked prefill (``prefill="chunked"`` — the cost model of the
+    engine's chunked mode): admission enqueues the padded prompt into a
+    ``repro.prefill.ChunkScheduler`` — the SAME packer the real engine
+    drives — instead of materializing the first token at admission.
+    Each iteration packs the token budget with decode tokens first plus
+    prefill chunks in the policy's priority order; a chunk of T tokens
+    costs ``item_time * T / prompt_len`` (a whole prompt still totals
+    the stall model's amortized ``item_time``), and the first token
+    materializes when the last chunk completes.  ``budget_trace``
+    records the engine-identical per-iteration (decode_tokens,
+    prefill_tokens) pairs the parity tests compare entry for entry.
     """
     persona = policy.persona
     pending = sorted(tasks, key=lambda t: t.r)
     n_total = len(pending)
     C = num_slots if num_slots is not None else persona.batch_size
     kv_model = kv_block_size is not None and kv_num_blocks is not None
+    if prefill not in ("stall", "chunked"):
+        raise ValueError(f"unknown prefill mode {prefill!r}")
+    chunked = prefill == "chunked"
+    if chunked:
+        if prompt_len <= 0:
+            raise ValueError('prefill="chunked" needs prompt_len > 0')
+        if chunk_size is None or token_budget is None:
+            raise ValueError('prefill="chunked" needs chunk_size and '
+                             'token_budget')
+        sched = ChunkScheduler(chunk_size, token_budget)
     if kv_model:
         worst = max((blocks_for_tokens(
             prompt_len + max(1, t.true_out_len) - 1, kv_block_size)
@@ -243,8 +304,43 @@ def simulate_continuous(tasks: Sequence[SimTask],
     overhead_total = 0.0
     rejected_ids: set = set()       # distinct tasks deferred for memory
     kv_util: List[float] = []
+    budget_trace: List = []
+    ttfts: List[float] = []
+    itls: List[float] = []
+    last_tok = [0.0] * C            # last token emission time per slot
     peak_conc = 0
     i = 0
+
+    def _admit_one(running):
+        """Shared admission prologue: one ``policy.admit`` consultation
+        plus the block-reservation gate, overhead / setup charges and
+        the CPU-lane fork — identical for the stall and chunked
+        branches (the engine mirrors it bit for bit).  Returns
+        ("stop", None, 0) to end the admission loop, ("cpu", None, 0)
+        when the task was offloaded, or ("gpu", task, need)."""
+        nonlocal queue, now, overhead_total
+        prev_queue = list(queue)
+        task, lane, rest = policy.admit(list(queue), now, running)
+        if task is None:
+            return "stop", None, 0
+        queue = list(rest)
+        need = 0
+        if kv_model and lane != "cpu":
+            need = blocks_for_tokens(
+                prompt_len + max(1, task.true_out_len) - 1,
+                kv_block_size)
+            if need > kv_num_blocks - sum(reserved):
+                queue = prev_queue             # leave it queued
+                rejected_ids.add(id(task))
+                return "stop", None, 0
+        overhead_total += per_task_overhead_s
+        now += per_task_overhead_s
+        if lane == "cpu":
+            cpu_queue.append(task)
+            return "cpu", None, 0
+        if not running:
+            now += persona.setup_time          # engine restart from idle
+        return "gpu", task, need
 
     while len(done) < n_total:
         while i < n_total and pending[i].r <= now + 1e-12:
@@ -252,41 +348,74 @@ def simulate_continuous(tasks: Sequence[SimTask],
             i += 1
 
         progressed = False
-        # admissions into freed slots (uncertainty-aware, one at a time)
-        while queue and None in slots:
-            running = [t for t in slots if t is not None]
-            prev_queue = list(queue)
-            task, lane, rest = policy.admit(list(queue), now, running)
-            if task is None:
-                break
-            queue = list(rest)
-            if kv_model and lane != "cpu":
-                need = blocks_for_tokens(
-                    prompt_len + max(1, task.true_out_len) - 1,
-                    kv_block_size)
-                if need > kv_num_blocks - sum(reserved):
-                    queue = prev_queue         # leave it queued
-                    rejected_ids.add(id(task))
+        if chunked:
+            # admissions enqueue a chunk job; the slot is held by the
+            # job (not decoding yet) until its last chunk completes
+            in_prefill = set(sched.slots_in_prefill())
+            free = [s for s in range(C)
+                    if slots[s] is None and s not in in_prefill]
+            while queue and free:
+                running = ([t for t in slots if t is not None]
+                           + [j.task for j in sorted(sched.jobs,
+                                                     key=lambda j: j.seq)])
+                status, task, need = _admit_one(running)
+                if status == "stop":
                     break
-            overhead_total += per_task_overhead_s
-            now += per_task_overhead_s
-            if lane == "cpu":
-                cpu_queue.append(task)
-                continue
-            if not running:
-                now += persona.setup_time      # engine restart from idle
-            now += persona.item_time           # per-member bandwidth term
-            task.start, task.lane = now, "gpu"
-            if task.true_out_len <= 1:         # first token already EOS
-                task.finish = now
-                done.append(task)
-            else:
-                s = slots.index(None)
-                slots[s] = task
-                produced[s] = 1                # prefill emits token 1
+                if status == "cpu":
+                    continue
+                s = free.pop(0)
                 if kv_model:
                     reserved[s] = need
-            progressed = True
+                sched.add(task, s, prompt_len,
+                          policy.assign_priority(task))
+                progressed = True
+
+            # chunk phase: pack the budget, decode tokens first
+            active0 = [s for s in range(C) if slots[s] is not None]
+            plans = sched.schedule(len(active0)) if sched.has_jobs else []
+            for plan in plans:
+                now += persona.item_time * plan.length / prompt_len
+                if plan.finishes:
+                    task, s = plan.job.task, plan.job.slot
+                    task.start, task.lane = now, "gpu"
+                    ttfts.append(now - task.r)
+                    if task.true_out_len <= 1:  # first token already EOS
+                        task.finish = now
+                        done.append(task)
+                        reserved[s] = 0
+                    else:
+                        slots[s] = task         # joins THIS step's decode
+                        produced[s] = 1         # prefill emits token 1
+                        last_tok[s] = now
+            if plans:
+                progressed = True
+            if plans or any(t is not None for t in slots):
+                budget_trace.append(
+                    (len(active0), sum(p.length for p in plans)))
+        else:
+            # admissions into freed slots (uncertainty-aware, stalling
+            # the loop for one amortized prefill per admission)
+            while queue and None in slots:
+                running = [t for t in slots if t is not None]
+                status, task, need = _admit_one(running)
+                if status == "stop":
+                    break
+                if status == "cpu":
+                    continue
+                now += persona.item_time       # per-member bandwidth term
+                task.start, task.lane = now, "gpu"
+                ttfts.append(now - task.r)
+                if task.true_out_len <= 1:     # first token already EOS
+                    task.finish = now
+                    done.append(task)
+                else:
+                    s = slots.index(None)
+                    slots[s] = task
+                    produced[s] = 1            # prefill emits token 1
+                    last_tok[s] = now
+                    if kv_model:
+                        reserved[s] = need
+                progressed = True
 
         if any(t is not None for t in slots):
             active = [s for s in range(C) if slots[s] is not None]
@@ -295,17 +424,25 @@ def simulate_continuous(tasks: Sequence[SimTask],
             if kv_model:
                 # lazy-allocation model: this step writes logical
                 # position prompt + produced - 1, so each slot holds
-                # blocks_for(prompt + produced) physical blocks
-                kv_util.append(sum(
-                    blocks_for_tokens(prompt_len + produced[s],
-                                      kv_block_size)
-                    for s in active) / kv_num_blocks)
+                # blocks_for(prompt + produced) physical blocks; slots
+                # mid-chunked-prefill hold their whole prompt's blocks
+                # (allocated at admission, as in the engine)
+                held = sum(blocks_for_tokens(prompt_len + produced[s],
+                                             kv_block_size)
+                           for s in active)
+                if chunked:
+                    held += (len(sched.slots_in_prefill())
+                             * blocks_for_tokens(prompt_len,
+                                                 kv_block_size))
+                kv_util.append(held / kv_num_blocks)
             else:
                 kv_util.append(len(active) / C)
             for s in range(C):
                 if slots[s] is None:
                     continue
                 produced[s] += 1
+                itls.append(now - last_tok[s])
+                last_tok[s] = now
                 if produced[s] >= slots[s].true_out_len:
                     slots[s].finish = now      # evicted THIS step
                     done.append(slots[s])
@@ -315,7 +452,7 @@ def simulate_continuous(tasks: Sequence[SimTask],
 
         if cpu.free_at <= now + 1e-12 and cpu_queue:
             batch, cpu_queue = cpu_queue[:C], cpu_queue[C:]
-            cpu.run_batch(batch, now, persona, "cpu")
+            cpu.run_batch(batch, now, persona, "cpu", ttfts, itls)
             done.extend(batch)
             progressed = True
 
@@ -336,7 +473,10 @@ def simulate_continuous(tasks: Sequence[SimTask],
                      kv_rejected=len(rejected_ids),
                      kv_util_peak=float(util.max()),
                      kv_util_mean=float(util.mean()),
-                     peak_concurrency=peak_conc)
+                     peak_concurrency=peak_conc,
+                     ttft_p50=_pct(ttfts, 0.50), ttft_p99=_pct(ttfts, 0.99),
+                     itl_p50=_pct(itls, 0.50), itl_p99=_pct(itls, 0.99),
+                     budget_trace=budget_trace)
 
 
 # ---------------------------------------------------------------------------
@@ -349,8 +489,9 @@ def run_policy(tasks: Sequence[SimTask], policy_name: str,
                xi: float = 2.0, per_task_overhead_s: float = 0.0,
                mode: str = "batch", **continuous_kwargs) -> SimResult:
     """``continuous_kwargs`` (num_slots / kv_block_size / kv_num_blocks /
-    prompt_len) forward to ``simulate_continuous`` — the block-budget
-    admission model of the paged KV cache."""
+    prompt_len / prefill / chunk_size / token_budget) forward to
+    ``simulate_continuous`` — the block-budget admission model of the
+    paged KV cache and the chunked-prefill cost model."""
     import copy
     policy = sched_lib.POLICIES[policy_name](persona, pcfg)
     tasks = [copy.copy(t) for t in tasks]    # fresh timing fields

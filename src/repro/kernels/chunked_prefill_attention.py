@@ -1,0 +1,142 @@
+"""Chunked-prefill attention: a T-token chunk over a paged KV prefix.
+
+The chunked-prefill engine (serving/engine.py ``prefill="chunked"``)
+splits each admitted prompt into chunks and runs them inside the decode
+loop; a chunk's queries must attend FULLY over the already-written
+paged context (positions ``0 .. ctx_len-1``) and CAUSALLY within the
+in-flight chunk (query ``t`` sees positions ``<= ctx_len + t``).  The
+chunk's own K/V are scattered into the page pool *before* this kernel
+runs (``kvcache.paged.scatter_chunk``), so the whole problem is one
+masked attention over the block table — the same indirection as
+``paged_decode_attention`` with a (T, G) query tile instead of (1, G).
+
+Structure mirrors ``paged_decode_attention.py``: the block table rides
+in as a scalar-prefetch operand (``PrefetchScalarGridSpec``) and the
+innermost sequential grid dimension walks a sequence's logical blocks
+while the BlockSpec index_map DMAs the *physical* page
+``tables[b, i]`` into VMEM — no ``(B, max_len)`` contiguous view is
+ever materialized (the pure-jnp oracle in ``kernels/ref.py``
+materializes exactly that view; it is the semantic reference and the
+CPU fallback path).
+
+  grid = (B, KV, nb) — innermost sequential over table entries;
+  per step: q tile (T*G, D) x page (block_size, D) on the MXU, masked
+  by ``logical_pos <= ctx_len[b] + t`` (t = query row // G; padding
+  table entries resolve to fully masked pages); running (m, l, acc)
+  scratch identical to the decode kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _cp_kernel(tables_ref, clens_ref, q_ref, k_ref, v_ref, o_ref,
+               m_scr, l_scr, acc_scr, *, scale: float, block_size: int,
+               groups: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (T*G, D)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bs, D) — page tables[b,ki]
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale    # (T*G, bs)
+    # query row t*G + g sits at logical position ctx_len + t; this table
+    # entry covers logical positions ki*bs .. ki*bs + bs - 1.  Causal
+    # within the chunk, full over the prefix, padding entries all-masked.
+    kv_pos = (ki * block_size
+              + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1))
+    q_off = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // groups
+    valid = kv_pos <= clens_ref[b] + q_off
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    # re-mask after the shift (see paged_decode_attention: an all-masked
+    # row would otherwise average garbage page contents)
+    p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def chunked_prefill_attention(q, k_pages, v_pages, block_tables,
+                              ctx_lens, *, interpret: bool = False):
+    """q: (B, T, H, D) chunk queries; pages: (N, bs, KV, D);
+    block_tables: (B, nb) i32 physical page ids (pad with any valid
+    id); ctx_lens: (B,) i32 prior-context lengths — the pages must
+    already hold each row's chunk K/V at logical positions
+    ``ctx_lens[b] .. ctx_lens[b] + T - 1``.  Returns (B, T, H, D).
+
+    ``ctx_lens[b] == 0`` is the first-chunk edge: pure causal attention
+    within the chunk (query 0 sees exactly one position).
+    """
+    B, T, H, D = q.shape
+    N, bs, KV, _ = k_pages.shape
+    _, nb = block_tables.shape
+    G = H // KV
+    scale = 1.0 / (D ** 0.5)
+
+    # row layout t-major: row = t * G + g, so row // G recovers t
+    qt = (q.reshape(B, T, KV, G, D).transpose(0, 2, 1, 3, 4)
+          .reshape(B, KV, T * G, D))
+    kt = k_pages.transpose(2, 0, 1, 3)           # (KV, N, bs, D)
+    vt = v_pages.transpose(2, 0, 1, 3)
+    tables = block_tables.astype(jnp.int32)
+    clens = ctx_lens.astype(jnp.int32)
+
+    kernel = functools.partial(_cp_kernel, scale=scale, block_size=bs,
+                               groups=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # block_tables, ctx_lens
+        grid=(B, KV, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, T * G, D),
+                         lambda b, h, i, t, c: (b, h, 0, 0)),
+            # the indirection: page tables[b, i] streams into VMEM
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, i, t, c: (h, t[b, i], 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, i, t, c: (h, t[b, i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, T * G, D),
+                               lambda b, h, i, t, c: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T * G,), jnp.float32),
+            pltpu.VMEM((T * G,), jnp.float32),
+            pltpu.VMEM((T * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, T * G, D), q.dtype),
+        interpret=interpret,
+    )(tables, clens, qt, kt, vt)
+    return (out.reshape(B, KV, T, G, D).transpose(0, 2, 1, 3, 4)
+            .reshape(B, T, H, D))

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 
 from repro.models import layers as jlayers
 
-from . import (decode_attention as _fd, flash_attention as _fa,
+from . import (chunked_prefill_attention as _cpa,
+               decode_attention as _fd, flash_attention as _fa,
                paged_decode_attention as _pfd, ref as _ref, rmsnorm as _rn)
 
 
@@ -87,6 +88,27 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
     return _pfd.paged_flash_decode_attention(q, k_pages, v_pages,
                                              block_tables, seq_lens,
                                              interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def chunked_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
+                              *, use_pallas: bool = True,
+                              interpret: Optional[bool] = None):
+    """Chunked-prefill attention over a paged KV prefix.
+
+    q: (B,T,H,D) chunk queries; pages: (N,bs,KV,D); block_tables:
+    (B,nb) i32; ctx_lens: (B,) i32 prior-context lengths (pages already
+    hold the chunk's K/V at ``ctx_lens .. ctx_lens+T-1``).
+    ``use_pallas=False`` gathers the contiguous view in pure jnp (the
+    path the model's chunked prefill lowers on CPU).
+    """
+    if not use_pallas:
+        return _ref.chunked_prefill_attention_ref(q, k_pages, v_pages,
+                                                  block_tables, ctx_lens)
+    interp = _default_interpret() if interpret is None else interpret
+    return _cpa.chunked_prefill_attention(q, k_pages, v_pages,
+                                          block_tables, ctx_lens,
+                                          interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=(

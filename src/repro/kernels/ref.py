@@ -78,6 +78,45 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, seq_lens):
     return decode_attention_ref(q, k, v, mask=mask)
 
 
+def chunked_prefill_attention_ref(q, k_pages, v_pages, block_tables,
+                                  ctx_lens):
+    """q: (B, T, H, D) chunk queries; pages: (N, bs, KV, D);
+    block_tables: (B, nb) i32; ctx_lens: (B,) i32 prior-context
+    lengths.  Pages must already hold each row's chunk K/V at logical
+    positions ``ctx_lens[b] .. ctx_lens[b] + T - 1``.
+
+    Pure-jnp fallback: materialize each sequence's contiguous view via
+    the block table, then masked attention — query ``t`` attends
+    logical positions ``<= ctx_lens[b] + t`` (full over the prefix,
+    causal within the chunk; ``ctx_lens == 0`` is the first-chunk
+    edge).  Semantic oracle for the Pallas kernel in
+    ``chunked_prefill_attention.py``.
+    """
+    N, bs = k_pages.shape[:2]
+    B, nb = block_tables.shape
+    T = q.shape[1]
+    idx = (block_tables[:, :, None] * bs
+           + jnp.arange(bs)[None, None, :]).reshape(B, nb * bs)
+    k = jnp.take(k_pages.reshape((N * bs,) + k_pages.shape[2:]), idx,
+                 axis=0)
+    v = jnp.take(v_pages.reshape((N * bs,) + v_pages.shape[2:]), idx,
+                 axis=0)
+    KV = k.shape[2]
+    G = q.shape[2] // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (q.shape[-1] ** 0.5)
+    kv_pos = jnp.arange(nb * bs)
+    mask = (kv_pos[None, None, :]
+            <= ctx_lens[:, None, None] + jnp.arange(T)[None, :, None])
+    s = jnp.where(mask[:, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def rms_norm_ref(x, weight, eps: float = 1e-6):
     """x: (..., D); weight: (D,) — matches models.layers.rms_norm."""
     xf = x.astype(jnp.float32)

@@ -76,6 +76,29 @@ def scatter_token(pages: Array, values: Array, tables: Array,
     return out.reshape(pages.shape)
 
 
+def scatter_chunk(pages: Array, seq: Array, table_row: Array,
+                  start: Array) -> Array:
+    """Write one sequence's prefill CHUNK at a traced position offset.
+
+    pages: (N, bs, *feat); seq: (T, *feat) the chunk's K/V; table_row:
+    (nb,) i32; start: scalar i32 — the chunk covers logical positions
+    ``start .. start + T - 1``.  Unlike ``scatter_prefill`` (static
+    offset 0, unrolled dynamic-update-slices) the offset is traced, so
+    one jitted executable serves every chunk of a prompt; like
+    ``scatter_token`` the block lookup clamps to the table width so a
+    trash-table row degrades to trash-page writes instead of indexing
+    out of bounds.
+    """
+    bs = pages.shape[1]
+    T = seq.shape[0]
+    pos = start + jnp.arange(T, dtype=jnp.int32)
+    blk_idx = jnp.minimum(pos // bs, table_row.shape[0] - 1)
+    blk = jnp.take(table_row, blk_idx)
+    flat_idx = blk * bs + pos % bs
+    out = _flat(pages).at[flat_idx].set(seq.astype(pages.dtype))
+    return out.reshape(pages.shape)
+
+
 def scatter_prefill(pages: Array, seq: Array, table_row: Array,
                     seq_len: int) -> Array:
     """Write a freshly prefilled sequence into its table's blocks.

@@ -253,7 +253,7 @@ def decode_step(params: dict, cfg, cache: dict, token: Array):
 
 
 def decode_step_paged(params: dict, cfg, cache: dict, token: Array,
-                      tables: Array):
+                      tables: Array, *, use_pallas: bool = False):
     """One greedy decode step against a paged KV cache.
 
     cache: from ``transformer.init_paged_cache`` (per-layer page pools
@@ -261,10 +261,15 @@ def decode_step_paged(params: dict, cfg, cache: dict, token: Array,
     state of the engine's allocator, passed per step so boundary
     crossings need no cache rebuild).  Same contract as ``decode_step``:
     returns (next_token (B, 1) i32, logits (B, V) f32, new_cache).
+
+    ``use_pallas`` (static) routes each layer's attention through the
+    Pallas ``paged_decode_attention`` kernel instead of the transient
+    contiguous gather — the production TPU path (interpret-mode
+    emulation elsewhere); outputs match the gather path.
     """
     x = layers.embed(params["embed"], token, cfg)
     x = shctx.constrain(x, ("batch", None, None))
-    ctx = {"pos": cache["pos"], "tables": tables}
+    ctx = {"pos": cache["pos"], "tables": tables, "use_pallas": use_pallas}
     x, new_cache, _ = transformer.apply_stack(
         params["stack"], x, ctx, cfg, cache=cache, mode="decode")
     x = layers.rms_norm(x, params["final_ln"], cfg.norm_eps)
@@ -287,6 +292,42 @@ def prefill_into_paged(params: dict, cfg, cache: dict, batch: dict, slot,
     S = batch["tokens"].shape[1]
     new_cache = transformer.write_paged(cache, one, slot, table_row, S)
     return new_cache, last_logits[0]
+
+
+def prefill_chunk(params: dict, cfg, cache: dict, batch: dict, slot,
+                  table_row, ctx_len, *, use_pallas: bool = False):
+    """Run ONE chunk of a request's prompt against the paged cache.
+
+    batch: {"tokens": (1, T)} — the chunk's token slice; ctx_len: traced
+    i32 scalar, how many prompt tokens were already prefilled (the chunk
+    occupies absolute positions ``ctx_len .. ctx_len + T - 1``);
+    table_row: (nb,) i32 the sequence's block table (all of the prompt's
+    blocks are allocated at admission, so every chunk position is
+    backed).  Each attention layer scatters the chunk's K/V into the
+    page pool at the correct position offset and attends full over the
+    already-written prefix, causal within the chunk — per-position
+    numerics match the stall-admission full prefill, so the final
+    chunk's ``last_logits`` produce the identical first token.
+
+    Returns (new_cache, last_logits (V,) f32) with ``pos[slot]`` set to
+    ``ctx_len + T``; only the FINAL chunk's logits are meaningful to
+    the sampler (they sit at the prompt's last position).  Requires
+    ``transformer.paged_supported(cfg)``.
+    """
+    tokens = batch["tokens"]
+    T = tokens.shape[1]
+    x = layers.embed(params["embed"], tokens, cfg)
+    x = shctx.constrain(x, ("batch", None, None))
+    positions = (jnp.asarray(ctx_len, jnp.int32)
+                 + jnp.arange(T, dtype=jnp.int32))
+    x, new_cache, _ = transformer.prefill_chunk_paged(
+        params["stack"], x, positions, table_row, cfg, cache,
+        use_pallas=use_pallas)
+    x = layers.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    last = x[:, -1]
+    last_logits = layers.logits(params["embed"], last[:, None], cfg)[:, 0]
+    new_cache["pos"] = cache["pos"].at[slot].set(positions[-1] + 1)
+    return new_cache, last_logits[0].astype(jnp.float32)
 
 
 def prefill_into_slot(params: dict, cfg, cache: dict, batch: dict, slot,

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels import chunked_prefill_attention as cpa_kernel
+from repro.kernels import paged_decode_attention as pfd_kernel
 from repro.kvcache import paged as paged_lib
 from repro.sharding import context as shctx
 
@@ -194,29 +196,79 @@ def _attn_decode(p, x, cache_k, cache_v, pos, slot_pos, cfg, window):
             new_slot_pos)
 
 
-def _attn_decode_paged(p, x, pages_k, pages_v, pos, tables, cfg):
+def _attn_decode_paged(p, x, pages_k, pages_v, pos, tables, cfg,
+                       use_pallas: bool = False):
     """One-token self attention against a paged (block-table) KV cache.
 
     pos: (B,) per-slot logical positions; tables: (B, nb) i32 physical
     page ids; pages_k/v: (N, bs, KV, D).  The new token scatters into
-    page ``tables[s, pos[s]//bs]`` and attention runs over the gathered
-    logical view — positions 0..pos are bit-identical to the contiguous
-    slot cache's layout (absolute-position order, masked tail), so the
-    paged engine matches the contiguous engine token for token.
+    page ``tables[s, pos[s]//bs]`` and attention runs over the paged
+    pool — positions 0..pos are bit-identical to the contiguous slot
+    cache's layout (absolute-position order, masked tail), so the paged
+    engine matches the contiguous engine token for token.
+
+    ``use_pallas`` routes the attention through the Pallas
+    ``paged_decode_attention`` kernel, which streams pages through VMEM
+    via scalar-prefetch block-table indirection (the production TPU
+    path); the default jnp path gathers a transient contiguous view —
+    exact, but O(slots * max_len) scratch per layer.  On non-TPU
+    backends the kernel body runs in interpret mode (correct, slow) —
+    the engine auto-selects per backend (``generate.make_paged_decode_fn``).
     """
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     q, k, v = layers.attention_qkv(p["attn"], h, pos[..., None],
                                    cfg.rope_theta)
     new_k = paged_lib.scatter_token(pages_k, k[:, 0], tables, pos)
     new_v = paged_lib.scatter_token(pages_v, v[:, 0], tables, pos)
-    k_seq = paged_lib.gather_tokens(new_k, tables)      # (B, nb*bs, KV, D)
-    v_seq = paged_lib.gather_tokens(new_v, tables)
-    L = k_seq.shape[1]
-    kv_pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32),
-                              (x.shape[0], L))
-    attn = layers.decode_attention(
-        q, k_seq, v_seq, q_position=pos, kv_positions=kv_pos,
-        valid_len=pos + 1, window=None)
+    if use_pallas:
+        attn = pfd_kernel.paged_flash_decode_attention(
+            q[:, 0], new_k, new_v, tables, pos + 1,
+            interpret=jax.default_backend() != "tpu")[:, None]
+    else:
+        k_seq = paged_lib.gather_tokens(new_k, tables)  # (B, nb*bs, KV, D)
+        v_seq = paged_lib.gather_tokens(new_v, tables)
+        L = k_seq.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32),
+                                  (x.shape[0], L))
+        attn = layers.decode_attention(
+            q, k_seq, v_seq, q_position=pos, kv_positions=kv_pos,
+            valid_len=pos + 1, window=None)
+    return x + layers.attention_out(p["attn"], attn), new_k, new_v
+
+
+def _attn_chunk_paged(p, x, pages_k, pages_v, positions, table_row, cfg,
+                      use_pallas: bool = False):
+    """Chunked-prefill self attention for ONE sequence (batch dim 1).
+
+    x: (1, T, D) the in-flight chunk; positions: (T,) its absolute
+    positions ``ctx_len .. ctx_len + T - 1`` (traced); table_row: (nb,)
+    i32 the sequence's block table.  The chunk's K/V scatter into the
+    page pool at those positions FIRST, then the queries attend over
+    the gathered logical view — full over the already-written prefix,
+    causal within the chunk.  The jnp path runs the same
+    ``layers.chunked_attention`` recipe as the stall prefill
+    (``_attn_seq``), so per-position outputs — and therefore the KV the
+    chunk writes and the final-chunk logits — match the stall-admission
+    engine token for token; ``use_pallas`` routes through the
+    ``chunked_prefill_attention`` kernel (block-table scalar-prefetch,
+    no contiguous view materialized).
+    """
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = layers.attention_qkv(p["attn"], h, positions[None, :],
+                                   cfg.rope_theta)
+    new_k = paged_lib.scatter_chunk(pages_k, k[0], table_row, positions[0])
+    new_v = paged_lib.scatter_chunk(pages_v, v[0], table_row, positions[0])
+    if use_pallas:
+        attn = cpa_kernel.chunked_prefill_attention(
+            q, new_k, new_v, table_row[None, :], positions[:1],
+            interpret=jax.default_backend() != "tpu")
+    else:
+        k_seq = paged_lib.gather_tokens(new_k, table_row[None, :])
+        v_seq = paged_lib.gather_tokens(new_v, table_row[None, :])
+        L = k_seq.shape[1]
+        attn = layers.chunked_attention(
+            q, k_seq, v_seq, q_positions=positions,
+            kv_positions=jnp.arange(L, dtype=jnp.int32), causal=True)
     return x + layers.attention_out(p["attn"], attn), new_k, new_v
 
 
@@ -303,6 +355,28 @@ def apply_block_seq(kind, p, x, ctx, cfg, cache=None):
     raise ValueError(kind)
 
 
+def apply_block_chunk(kind, p, x, ctx, cfg, cache):
+    """Chunked-prefill application of one block against a paged cache.
+
+    ctx: dict(positions (T,) traced absolute positions, table_row (nb,)
+    i32, use_pallas bool).  Only the paged-eligible kinds apply
+    (``paged_supported`` gates the engine to dense/moe stacks).
+    """
+    aux = ZERO_AUX
+    x = shctx.constrain(x, ("batch", None, None))
+    if kind in ("dense", "moe"):
+        x, nk, nv = _attn_chunk_paged(
+            p, x, cache["k"], cache["v"], ctx["positions"],
+            ctx["table_row"], cfg, ctx.get("use_pallas", False))
+        if kind == "moe":
+            x, aux = _moe_part(p, x, cfg)
+        else:
+            x = _mlp_part(p, x, cfg)
+        return x, dict(cache, k=nk, v=nv), aux
+    raise NotImplementedError(
+        f"chunked prefill requires a paged-eligible stack (got {kind!r})")
+
+
 def apply_block_decode(kind, p, x, ctx, cfg, cache):
     pos = ctx["pos"]
     tables = ctx.get("tables")         # paged decode: (B, nb) block table
@@ -311,7 +385,8 @@ def apply_block_decode(kind, p, x, ctx, cfg, cache):
     if kind in ("dense", "moe", "cross"):
         if tables is not None:
             x, nk, nv = _attn_decode_paged(p, x, cache["k"], cache["v"],
-                                           pos, tables, cfg)
+                                           pos, tables, cfg,
+                                           ctx.get("use_pallas", False))
         else:
             x, nk, nv, _ = _attn_decode(p, x, cache["k"], cache["v"], pos,
                                         ctx["slot_pos"], cfg, cfg.window)
@@ -405,7 +480,8 @@ def apply_stack(params: dict, x: Array, ctx: dict, cfg, cache=None,
     pat, n, prefix, tail = stack_pattern(cfg)
     aux = dict(ZERO_AUX)
     new_cache = {} if cache is not None else None
-    apply_fn = apply_block_decode if mode == "decode" else apply_block_seq
+    apply_fn = {"decode": apply_block_decode,
+                "chunk": apply_block_chunk}.get(mode, apply_block_seq)
 
     for i, kind in enumerate(prefix):
         c = None if cache is None else cache[f"prefix{i}"]
@@ -612,6 +688,24 @@ def write_paged(cache: dict, one: dict, slot, table_row,
                         pages, o[0], table_row, seq_len),
                     big, one[key])
     return out
+
+
+def prefill_chunk_paged(params: dict, x: Array, positions: Array,
+                        table_row: Array, cfg, cache: dict,
+                        use_pallas: bool = False):
+    """Run ONE prompt chunk through the stack against the paged cache.
+
+    x: (1, T, D) embedded chunk; positions: (T,) its absolute positions
+    ``ctx_len .. ctx_len + T - 1`` (traced); table_row: (nb,) i32.
+    Every attention layer scatters the chunk's K/V into its page pool
+    at those positions and attends full-over-prefix / causal-in-chunk
+    (``_attn_chunk_paged``).  Returns (x, new_cache, aux) — the caller
+    (``model.prefill_chunk``) owns the final norm / logits / ``pos``
+    bookkeeping.
+    """
+    ctx = {"positions": positions, "table_row": table_row,
+           "use_pallas": use_pallas}
+    return apply_stack(params, x, ctx, cfg, cache=cache, mode="chunk")
 
 
 def write_slot(cache: dict, one: dict, slot) -> dict:

@@ -1,0 +1,10 @@
+"""Chunked-prefill scheduling (token-budgeted prefill/decode interleave).
+
+See scheduler.ChunkScheduler — the host-side core shared by the real
+serving engine (``ServingEngine(prefill="chunked")``) and the simulator
+(``simulate_continuous(prefill="chunked")``).
+"""
+
+from .scheduler import ChunkJob, ChunkPlan, ChunkScheduler
+
+__all__ = ["ChunkJob", "ChunkPlan", "ChunkScheduler"]

@@ -1,0 +1,136 @@
+"""Chunked-prefill scheduler: token-budgeted prefill/decode interleaving.
+
+The stall-admission continuous engine (serving/engine.py) blocks the
+ENTIRE decode loop for a full ``(1, input_bucket)`` prefill on every
+admission — a head-of-line source of inter-token-latency jitter that
+grows with the admission burst size (C back-to-back prefills when C
+slots free together).  Sarathi-style chunked prefill removes the stall:
+each admitted request's (padded) prompt is split into fixed-size
+chunks, and every engine iteration packs a TOKEN BUDGET with
+
+    decode tokens first  (one per active decode slot — decode is never
+                          skipped; it is the latency-critical work)
+  + prefill-chunk tokens (as many whole chunks as fit in the remainder)
+
+so per-iteration prefill work — and therefore the ITL of every in-flight
+request — is bounded by ``token_budget`` instead of by the admission
+burst.
+
+Chunk ordering is the RT-LM twist: pending jobs are ranked by the
+scheduling policy's uncertainty priority (``Policy.assign_priority``,
+higher first; admission order breaks ties FIFO), so low-uncertainty
+(short-output-predicted) requests reach their first token sooner — the
+same signal that orders admission also orders time-to-first-token.
+
+This module is pure host-side Python, deliberately free of JAX: the
+real engine (``ServingEngine(prefill="chunked")``) and the simulator
+(``simulate_continuous(prefill="chunked")``) drive the SAME scheduler,
+which is what makes their per-iteration budget traces and completion
+orders comparable bit-for-bit in the parity tests.
+
+Invariants (property-tested in tests/test_properties.py):
+
+  * per-iteration budget: scheduled chunk tokens never exceed
+    ``max(0, token_budget - decode_tokens)``;
+  * in-order chunks: a job's chunks are scheduled at strictly
+    increasing offsets covering ``[0, total)`` exactly once;
+  * work conservation (no starvation): whenever jobs are pending and
+    the budget remainder covers a whole chunk, at least one chunk is
+    scheduled — under FIFO tie-break jobs therefore finish prefill in
+    admission order and every job's wait is bounded by the backlog
+    ahead of it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class ChunkJob:
+    """One admitted request's prefill work (the padded prompt bucket)."""
+
+    task: object                 # prio.SimTask (engine) or SimTask (sim)
+    slot: int                    # decode slot reserved for this request
+    total: int                   # prompt tokens to prefill (input bucket)
+    priority: float              # Policy.assign_priority at admission
+    seq: int                     # admission order (FIFO tie-break)
+    done: int = 0                # tokens prefetched so far
+
+    @property
+    def remaining(self) -> int:
+        return self.total - self.done
+
+    def next_chunk_len(self, chunk_size: int) -> int:
+        """Whole chunks of ``chunk_size``; the tail chunk is smaller."""
+        return min(chunk_size, self.remaining)
+
+
+@dataclasses.dataclass
+class ChunkPlan:
+    """One chunk to execute this iteration."""
+
+    job: ChunkJob
+    start: int                   # position offset of the chunk
+    length: int
+    finishes: bool               # True -> this chunk completes the prompt
+
+
+class ChunkScheduler:
+    """Token-budgeted chunk packer shared by engine and simulator."""
+
+    def __init__(self, chunk_size: int, token_budget: int):
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        if token_budget < chunk_size:
+            raise ValueError(
+                f"token_budget={token_budget} < chunk_size={chunk_size}: "
+                "an idle iteration could never fit one chunk and prefill "
+                "would live-lock")
+        self.chunk_size = chunk_size
+        self.token_budget = token_budget
+        self.jobs: List[ChunkJob] = []
+        self._seq = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def has_jobs(self) -> bool:
+        return bool(self.jobs)
+
+    def slots_in_prefill(self) -> List[int]:
+        return [j.slot for j in self.jobs]
+
+    def add(self, task, slot: int, total: int, priority: float) -> ChunkJob:
+        if total < 1:
+            raise ValueError(f"total must be >= 1, got {total}")
+        job = ChunkJob(task=task, slot=slot, total=total,
+                       priority=priority, seq=self._seq)
+        self._seq += 1
+        self.jobs.append(job)
+        return job
+
+    def schedule(self, decode_tokens: int) -> List[ChunkPlan]:
+        """Pack this iteration's budget; advances job progress.
+
+        Decode tokens are charged first (decode always runs); the
+        remainder is filled greedily in (priority desc, admission asc)
+        order — a job may get several chunks in one iteration, and a
+        lower-priority job's smaller tail chunk may ride along when the
+        front-runner's next chunk no longer fits.  Completed jobs are
+        removed; the caller executes the returned plans in order.
+        """
+        rem = max(0, self.token_budget - decode_tokens)
+        plans: List[ChunkPlan] = []
+        for job in sorted(self.jobs, key=lambda j: (-j.priority, j.seq)):
+            while job.remaining:
+                length = job.next_chunk_len(self.chunk_size)
+                if length > rem:
+                    break
+                plans.append(ChunkPlan(
+                    job=job, start=job.done, length=length,
+                    finishes=(job.remaining == length)))
+                job.done += length
+                rem -= length
+        self.jobs = [j for j in self.jobs if j.remaining]
+        return plans

@@ -65,10 +65,12 @@ import jax.numpy as jnp
 
 from repro.core import priority as prio
 from repro.core import scheduler as sched_lib
+from repro.core.simulator import _pct as pct
 from repro.core.personas import Persona
 from repro.kvcache import BlockAllocator, blocks_for_tokens
 from repro.kvcache.paged import PagedKVCache
 from repro.models import transformer
+from repro.prefill import ChunkScheduler
 
 from . import generate
 
@@ -104,6 +106,12 @@ class Request:
     # generated token ids (greedy); the paged-vs-contiguous parity test
     # asserts these match token for token
     out_tokens: List[int] = dataclasses.field(default_factory=list)
+    # per-token emission times (engine clock): token_times[0] is the
+    # first-token instant (TTFT = token_times[0] - arrival), successive
+    # diffs are the inter-token latencies the percentile metrics
+    # summarize.  Continuous modes record exact step times; batch mode
+    # models streaming linearly across the batch's decode horizon.
+    token_times: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def response_time(self) -> float:
@@ -124,13 +132,22 @@ class ServingEngine:
                  eos_id: int = EOS_ID, kv: str = "contiguous",
                  num_slots: Optional[int] = None,
                  kv_block_size: int = 16,
-                 kv_num_blocks: Optional[int] = None):
+                 kv_num_blocks: Optional[int] = None,
+                 prefill: str = "stall",
+                 chunk_size: int = 16,
+                 token_budget: Optional[int] = None,
+                 use_pallas: Optional[bool] = None):
         if mode not in ("batch", "continuous"):
             raise ValueError(f"unknown mode {mode!r}")
         if kv not in ("contiguous", "paged"):
             raise ValueError(f"unknown kv layout {kv!r}")
         if kv == "paged" and mode != "continuous":
             raise ValueError('kv="paged" requires mode="continuous"')
+        if prefill not in ("stall", "chunked"):
+            raise ValueError(f"unknown prefill mode {prefill!r}")
+        if prefill == "chunked" and kv != "paged":
+            raise ValueError('prefill="chunked" requires mode="continuous"'
+                             ', kv="paged"')
         self.params = params
         self.cfg = cfg
         self.policy = policy
@@ -149,6 +166,18 @@ class ServingEngine:
         self.num_slots = (num_slots if num_slots is not None
                           else self.persona.batch_size)
         self.kv_block_size = kv_block_size
+        # chunked-prefill knobs (repro.prefill): the per-iteration token
+        # budget covers one decode token per active slot FIRST, then as
+        # many prefill-chunk tokens as fit; the default budget leaves
+        # one chunk of headroom above a fully busy decode loop.
+        self.prefill = prefill
+        self.chunk_size = chunk_size
+        self.token_budget = (token_budget if token_budget is not None
+                             else self.num_slots + chunk_size)
+        if prefill == "chunked":
+            # constructor-time validation (ChunkScheduler re-checks)
+            ChunkScheduler(chunk_size, self.token_budget)
+        self.use_pallas = use_pallas
         # default budget: the worst-case reservation fits in every slot
         # (no rejections) — benchmarks pass an explicit tighter budget
         self.kv_num_blocks = (
@@ -177,7 +206,11 @@ class ServingEngine:
         if kv == "paged":
             self._paged_prefill = generate.make_paged_prefill_fn(
                 cfg, self.max_len)
-            self._paged_decode = generate.make_paged_decode_fn(cfg)
+            self._paged_decode = generate.make_paged_decode_fn(
+                cfg, use_pallas)
+            if prefill == "chunked":
+                self._chunk_prefill = generate.make_chunk_prefill_fn(
+                    cfg, use_pallas)
         self.scheduler_overhead_s = 0.0
         # exposed for the slot-recycling tests: per-slot cache after the
         # last continuous serve, and the admission audit trail
@@ -190,6 +223,14 @@ class ServingEngine:
         self.kv_util_samples: List[float] = []
         self._rejected_ids: set = set()
         self.peak_concurrency = 0
+        # tail-latency accounting (reset per serve): wall-clock spent on
+        # prefill work while decode slots were live (the decode-stall
+        # time chunked prefill bounds), and the chunked engine's
+        # per-iteration (decode_tokens, prefill_tokens) budget trace —
+        # the simulator's chunked mode reproduces it entry for entry.
+        self.prefill_stall_s = 0.0
+        self.prefill_stall_max_s = 0.0   # worst single-iteration stall
+        self.budget_trace: List = []
 
     # ------------------------------------------------------------------
     def _to_sim_task(self, req: Request) -> prio.SimTask:
@@ -247,11 +288,19 @@ class ServingEngine:
             self.kv_util_samples.append(len(batch) / Cb)
             self.peak_concurrency = max(self.peak_concurrency, len(batch))
         toks = np.asarray(out_tokens)
+        # run-to-completion streaming model for the tail-latency
+        # metrics: the batch decodes max(realized lengths) steps in
+        # ``dur``, so member token j is emitted at a linear fraction of
+        # the horizon (uniform ITL = dur / horizon).
+        horizon = max(max((int(lengths[i]) for i in range(len(batch))),
+                          default=1), 1)
         for i, t in enumerate(batch):
             t.start, t.finish, t.lane = now, finish, lane
             t.task.start, t.task.finish, t.task.lane = now, finish, lane
             t.task.out_len = int(lengths[i]) if i < len(lengths) else 0
             t.task.out_tokens = toks[i, :t.task.out_len].tolist()
+            t.task.token_times = [now + dur * (j + 1) / horizon
+                                  for j in range(t.task.out_len)]
         return finish
 
     # ------------------------------------------------------------------
@@ -260,7 +309,12 @@ class ServingEngine:
         self.kv_util_samples = []
         self._rejected_ids = set()
         self.peak_concurrency = 0
+        self.prefill_stall_s = 0.0
+        self.prefill_stall_max_s = 0.0
+        self.budget_trace = []
         if self.mode == "continuous":
+            if self.prefill == "chunked":
+                return self._serve_continuous_chunked(requests)
             return self._serve_continuous(requests)
         return self._serve_batch(requests)
 
@@ -268,6 +322,19 @@ class ServingEngine:
         rts = np.array([t.response_time for t in done])
         util = (np.array(self.kv_util_samples)
                 if self.kv_util_samples else np.zeros(1))
+        # tail-latency metrics: TTFT per request (first token emission
+        # minus arrival) and the pooled inter-token latencies of every
+        # request — p99 ITL is where stall-admission prefill shows up
+        # as decode jitter and chunked prefill is measured.  The
+        # percentile helper is shared with the simulator so engine and
+        # sim tail metrics stay comparable.
+        ttfts, itls = [], []
+        for t in done:
+            times = getattr(t.task, "token_times", None) or []
+            if times:
+                ttfts.append(times[0] - t.r)
+                if len(times) > 1:
+                    itls.extend(np.diff(times))
         return {
             "mean_response_s": float(rts.mean()),
             "max_response_s": float(rts.max()),
@@ -291,9 +358,23 @@ class ServingEngine:
             "kv_util_mean": float(util.mean()),
             "rejected_for_memory": len(self._rejected_ids),
             "peak_concurrency": self.peak_concurrency,
+            "ttft_p50": pct(ttfts, 0.50),
+            "ttft_p99": pct(ttfts, 0.99),
+            "itl_p50": pct(itls, 0.50),
+            "itl_p99": pct(itls, 0.99),
+            # wall-clock spent prefilling while decode slots were live
+            # (the head-of-line stall chunked prefill bounds); _max_s is
+            # the worst stall injected between two consecutive decode
+            # steps — the jitter spike the token budget caps
+            "prefill_stall_s": self.prefill_stall_s,
+            "prefill_stall_max_s": self.prefill_stall_max_s,
+            "budget_trace": list(self.budget_trace),
             "kv": {"kind": self.kv, "num_slots": self.num_slots,
                    "block_size": self.kv_block_size,
                    "num_blocks": self.kv_num_blocks},
+            "prefill": {"kind": self.prefill,
+                        "chunk_size": self.chunk_size,
+                        "token_budget": self.token_budget},
         }
 
     def _serve_batch(self, requests: Sequence[Request]) -> Dict:
@@ -346,6 +427,48 @@ class ServingEngine:
     # continuous batching: persistent decode loop with slot recycling
     # ------------------------------------------------------------------
 
+    def _extend_block_tables(self, active, slot_task, slot_gen, alloc,
+                             kvc) -> None:
+        """Boundary crossings before a paged decode step: the step
+        writes position S + slot_gen - 1 for each active slot; allocate
+        its block lazily (the admission reservation guarantees one is
+        free).  Shared by the stall and chunked serve loops."""
+        S = self.input_bucket
+        for s in active:
+            tid = slot_task[s].task.task_id
+            have = len(alloc.table(tid))
+            if alloc.blocks_for(S + slot_gen[s]) > have:
+                kvc.extend_table(s, have, alloc.allocate(tid))
+
+    def _advance_decoded_slots(self, active, next_host, now, slot_task,
+                               slot_gen, slot_cap, tokens, done, *,
+                               alloc=None, kvc=None,
+                               reserved=None) -> None:
+        """Post-decode bookkeeping shared by the stall and chunked
+        serve loops: record each active slot's token + emission time,
+        evict finished sequences THE SAME step (in slot order — the
+        completion order the simulator mirrors), and, when paged
+        (``alloc`` given), return their blocks and point the table at
+        the trash page."""
+        for s in active:
+            slot_gen[s] += 1
+            tokens[s, 0] = int(next_host[s, 0])
+            task = slot_task[s]
+            task.task.out_tokens.append(int(next_host[s, 0]))
+            task.task.token_times.append(now)
+            if (int(next_host[s, 0]) == self.eos_id
+                    or slot_gen[s] >= slot_cap[s]):
+                task.finish = now
+                task.task.finish = now
+                task.task.out_len = slot_gen[s]
+                done.append(task)
+                slot_task[s] = None
+                tokens[s, 0] = generate.PAD_ID
+                if alloc is not None:
+                    alloc.free_sequence(task.task.task_id)
+                    kvc.clear_table(s)
+                    reserved[s] = 0
+
     def _serve_continuous(self, requests: Sequence[Request]) -> Dict:
         persona = self.persona
         C = self.num_slots
@@ -378,6 +501,7 @@ class ServingEngine:
             while i < n and sim_tasks[i].r <= now + 1e-9:
                 queue.append(sim_tasks[i])
                 i += 1
+            iter_stall = 0.0
 
             # --- admissions: fill freed slots, one policy call per slot
             while queue and None in slot_task:
@@ -407,6 +531,7 @@ class ServingEngine:
                         self._rejected_ids.add(task.task.task_id)
                         break
                 slot = slot_task.index(None)
+                stalled = any(t is not None for t in slot_task)
                 batch = {"tokens": jnp.asarray(
                     self._tokenize_padded(task.task.text)[None, :])}
                 t0 = time.perf_counter()
@@ -421,11 +546,16 @@ class ServingEngine:
                     cache, last_logits = self._slot_prefill(
                         self.params, cache, batch, jnp.int32(slot))
                 first = int(jnp.argmax(last_logits))
-                now += time.perf_counter() - t0
+                dt = time.perf_counter() - t0
+                now += dt
+                if stalled:       # live slots waited out this prefill
+                    self.prefill_stall_s += dt
+                    iter_stall += dt
                 task.start, task.lane = now, "gpu"
                 task.task.start, task.task.lane = now, "gpu"
                 task.task.slot = slot
                 task.task.out_tokens = [first]
+                task.task.token_times = [now]
                 self.admission_log.append(
                     {"task_id": task.task.task_id, "slot": slot,
                      "step": step, "now": now})
@@ -442,6 +572,8 @@ class ServingEngine:
                     slot_gen[slot], slot_cap[slot] = 1, cap
                     tokens[slot, 0] = first
 
+            self.prefill_stall_max_s = max(self.prefill_stall_max_s,
+                                           iter_stall)
             active = [s for s in range(C) if slot_task[s] is not None]
             if active:
                 self.peak_concurrency = max(self.peak_concurrency,
@@ -449,14 +581,8 @@ class ServingEngine:
                 # --- one decode step over ALL slots (single executable)
                 t0 = time.perf_counter()
                 if paged:
-                    # boundary crossings: this step writes position
-                    # S + slot_gen - 1; allocate its block lazily (the
-                    # admission reservation guarantees one is free)
-                    for s in active:
-                        tid = slot_task[s].task.task_id
-                        have = len(alloc.table(tid))
-                        if alloc.blocks_for(S + slot_gen[s]) > have:
-                            kvc.extend_table(s, have, alloc.allocate(tid))
+                    self._extend_block_tables(active, slot_task,
+                                              slot_gen, alloc, kvc)
                     next_tok, _, cache = self._paged_decode(
                         self.params, cache, jnp.asarray(tokens),
                         kvc.tables_device())
@@ -470,23 +596,12 @@ class ServingEngine:
                     self.kv_util_samples.append(alloc.utilization())
                 else:
                     self.kv_util_samples.append(len(active) / C)
-                for s in active:                 # evict per step, in order
-                    slot_gen[s] += 1
-                    tokens[s, 0] = int(next_host[s, 0])
-                    task = slot_task[s]
-                    task.task.out_tokens.append(int(next_host[s, 0]))
-                    if (int(next_host[s, 0]) == self.eos_id
-                            or slot_gen[s] >= slot_cap[s]):
-                        task.finish = now
-                        task.task.finish = now
-                        task.task.out_len = slot_gen[s]
-                        done.append(task)
-                        slot_task[s] = None
-                        tokens[s, 0] = generate.PAD_ID
-                        if paged:
-                            alloc.free_sequence(task.task.task_id)
-                            kvc.clear_table(s)
-                            reserved[s] = 0
+                self._advance_decoded_slots(
+                    active, next_host, now, slot_task, slot_gen,
+                    slot_cap, tokens, done,
+                    alloc=alloc if paged else None,
+                    kvc=kvc if paged else None,
+                    reserved=reserved if paged else None)
                 continue
 
             if bulk and not queue:
@@ -504,4 +619,193 @@ class ServingEngine:
             kvc.state = cache
         else:
             self.slot_cache = cache
+        return self._result(done, n)
+
+    # ------------------------------------------------------------------
+    # chunked prefill: token-budgeted prefill/decode interleaving
+    # ------------------------------------------------------------------
+
+    def _serve_continuous_chunked(self, requests: Sequence[Request]) -> Dict:
+        """Continuous serve with ``prefill="chunked"`` (kv="paged").
+
+        Admission allocates a slot plus the prompt's blocks and enqueues
+        a ChunkJob instead of stalling the loop for a full prefill; each
+        iteration then packs the token budget — decode tokens first,
+        prefill chunks in the policy's uncertainty-priority order — so
+        per-iteration prefill work (and therefore every live request's
+        ITL) is bounded by ``token_budget``, not by the admission burst.
+        Chunk writes land at exact position offsets, so output is
+        token-for-token identical to the stall-admission paged engine;
+        ``simulate_continuous(prefill="chunked")`` drives the same
+        ChunkScheduler and reproduces the completion order and the
+        per-iteration budget trace.
+        """
+        C = self.num_slots
+        S = self.input_bucket
+        pending = sorted(requests, key=lambda r: r.arrival)
+        sim_tasks = [self._to_sim_task(r) for r in pending]
+        n = len(sim_tasks)
+        queue: List[prio.SimTask] = []
+        bulk: List[prio.SimTask] = []
+        done: List[prio.SimTask] = []
+        kvc = PagedKVCache(self.cfg, C, self.kv_num_blocks,
+                           self.kv_block_size, self.max_len)
+        alloc = BlockAllocator(self.kv_num_blocks, self.kv_block_size)
+        reserved = [0] * C           # per-slot worst-case block holdback
+        cache = kvc.state
+        self.paged_cache, self.allocator = kvc, alloc
+        sched = ChunkScheduler(self.chunk_size, self.token_budget)
+        slot_task: List[Optional[prio.SimTask]] = [None] * C  # decoding
+        slot_gen = [0] * C
+        slot_cap = [0] * C
+        job_cap: Dict[int, int] = {}      # slot -> decode cap
+        job_tokens: Dict[int, np.ndarray] = {}  # slot -> padded prompt
+        job_row: Dict[int, jnp.ndarray] = {}    # slot -> device table row
+        tokens = np.zeros((C, 1), np.int32)
+        self.admission_log = []
+        now = 0.0
+        i = 0
+        step = 0
+        while len(done) < n:
+            while i < n and sim_tasks[i].r <= now + 1e-9:
+                queue.append(sim_tasks[i])
+                i += 1
+
+            # --- admissions: allocate slot + blocks, enqueue chunk job
+            free = [s for s in range(C) if slot_task[s] is None
+                    and s not in job_cap]
+            while queue and free:
+                running = ([t for t in slot_task if t is not None]
+                           + [j.task for j in sorted(sched.jobs,
+                                                     key=lambda j: j.seq)])
+                prev_queue = list(queue)
+                t0 = time.perf_counter()
+                task, lane, rest = self.policy.admit(list(queue), now,
+                                                     running)
+                self.scheduler_overhead_s += time.perf_counter() - t0
+                if task is None:
+                    break
+                queue = list(rest)
+                if lane == "cpu":
+                    bulk.append(task)
+                    continue
+                cap = self._cap(task.task)
+                # identical reservation gate to the stall path — the
+                # chunked simulator mirrors it bit for bit
+                need = blocks_for_tokens(S + cap - 1, self.kv_block_size)
+                if need > self.kv_num_blocks - sum(reserved):
+                    queue = prev_queue           # leave it queued
+                    self._rejected_ids.add(task.task.task_id)
+                    break
+                slot = free.pop(0)
+                reserved[slot] = need
+                # all of the prompt's blocks up front: every chunk
+                # position is backed, but kvc's DECODE table row stays
+                # on the trash page until prefill completes (the decode
+                # step writes a KV entry for every row, and a
+                # mid-prefill slot must not scribble real blocks)
+                alloc.allocate_n(task.task.task_id, alloc.blocks_for(S))
+                row = np.full((kvc.max_blocks_per_seq,), kvc.trash_block,
+                              np.int32)
+                tbl = alloc.table(task.task.task_id)
+                row[:len(tbl)] = tbl
+                job_row[slot] = jnp.asarray(row)
+                job_tokens[slot] = self._tokenize_padded(task.task.text)
+                job_cap[slot] = cap
+                sched.add(task, slot, S,
+                          self.policy.assign_priority(task))
+                self.admission_log.append(
+                    {"task_id": task.task.task_id, "slot": slot,
+                     "step": step, "now": now})
+
+            # --- chunk phase: pack the budget, decode tokens first
+            iter_stall = 0.0
+            active0 = [s for s in range(C) if slot_task[s] is not None]
+            plans = sched.schedule(len(active0)) if sched.has_jobs else []
+            for plan in plans:
+                s = plan.job.slot
+                task = plan.job.task
+                chunk = job_tokens[s][plan.start:plan.start + plan.length]
+                # per-plan, not the iteration-start snapshot: a slot a
+                # PRECEDING plan just activated waits out this chunk
+                # too (same semantics as the stall path's per-admission
+                # check)
+                stalled = any(t is not None for t in slot_task)
+                t0 = time.perf_counter()
+                cache, last_logits = self._chunk_prefill(
+                    self.params, cache,
+                    {"tokens": jnp.asarray(chunk[None, :])},
+                    jnp.int32(s), job_row[s], jnp.int32(plan.start))
+                if plan.finishes:
+                    first = int(jnp.argmax(last_logits))
+                else:
+                    jax.block_until_ready(last_logits)
+                dt = time.perf_counter() - t0
+                now += dt
+                if stalled:          # live slots waited out this chunk
+                    self.prefill_stall_s += dt
+                    iter_stall += dt
+                if plan.finishes:
+                    cap = job_cap.pop(s)
+                    del job_tokens[s], job_row[s]
+                    task.start, task.lane = now, "gpu"
+                    task.task.start, task.task.lane = now, "gpu"
+                    task.task.slot = s
+                    task.task.out_tokens = [first]
+                    task.task.token_times = [now]
+                    if first == self.eos_id or cap <= 1:
+                        task.finish = now
+                        task.task.finish, task.task.out_len = now, 1
+                        done.append(task)
+                        alloc.free_sequence(task.task.task_id)
+                        reserved[s] = 0
+                    else:
+                        # install the real table: the slot joins THIS
+                        # iteration's decode step (as a stall admission
+                        # would), writing token 1's KV at position S
+                        kvc.set_table(s, alloc.table(task.task.task_id))
+                        slot_task[s] = task
+                        slot_gen[s], slot_cap[s] = 1, cap
+                        tokens[s, 0] = first
+            prefill_toks = sum(p.length for p in plans)
+            self.prefill_stall_max_s = max(self.prefill_stall_max_s,
+                                           iter_stall)
+
+            active = [s for s in range(C) if slot_task[s] is not None]
+            if plans or active:
+                self.budget_trace.append((len(active0), prefill_toks))
+            if active:
+                self.peak_concurrency = max(self.peak_concurrency,
+                                            len(active))
+                # --- one decode step over ALL slots (single executable)
+                t0 = time.perf_counter()
+                self._extend_block_tables(active, slot_task, slot_gen,
+                                          alloc, kvc)
+                next_tok, _, cache = self._paged_decode(
+                    self.params, cache, jnp.asarray(tokens),
+                    kvc.tables_device())
+                next_host = np.array(jax.block_until_ready(next_tok))
+                now += time.perf_counter() - t0
+                step += 1
+                self.kv_util_samples.append(alloc.utilization())
+                self._advance_decoded_slots(
+                    active, next_host, now, slot_task, slot_gen,
+                    slot_cap, tokens, done, alloc=alloc, kvc=kvc,
+                    reserved=reserved)
+                continue
+            if plans:
+                continue
+
+            if bulk and not queue:
+                batch, bulk = bulk[:C], bulk[C:]
+                now = self._run_batch(batch, "cpu", now)
+                done.extend(batch)
+                continue
+
+            # idle: advance to the next arrival
+            if i < n:
+                now = max(now, sim_tasks[i].r)
+            else:
+                now += self.xi
+        kvc.state = cache
         return self._result(done, n)

@@ -62,15 +62,43 @@ def make_paged_prefill_fn(cfg, max_len: int):
     return paged_prefill_fn
 
 
-def make_paged_decode_fn(cfg):
+def make_paged_decode_fn(cfg, use_pallas: Optional[bool] = None):
     """Jitted paged decode step; block tables ride as a per-call operand
-    (the engine extends them host-side on block-boundary crossings)."""
+    (the engine extends them host-side on block-boundary crossings).
+
+    use_pallas: route attention through the Pallas
+    ``paged_decode_attention`` kernel (no transient contiguous gather).
+    ``None`` auto-selects: on TPU the compiled kernel, elsewhere the
+    exact jnp gather fallback (the kernel would run in slow interpret
+    mode there)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+
     @jax.jit
     def paged_decode_fn(params, cache, token, tables):
         return model_lib.decode_step_paged(params, cfg, cache, token,
-                                           tables)
+                                           tables, use_pallas=use_pallas)
 
     return paged_decode_fn
+
+
+def make_chunk_prefill_fn(cfg, use_pallas: Optional[bool] = None):
+    """Jitted chunked-prefill step: run one (1, T) prompt chunk of slot
+    ``slot`` against the paged cache at traced context offset
+    ``ctx_len``, scattering its K/V through ``table_row``.  Slot, table
+    and offset are traced operands, so ONE executable serves every
+    chunk of every request (one retrace per distinct chunk length —
+    at most two: ``chunk_size`` and the prompt-tail remainder)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+
+    @jax.jit
+    def chunk_prefill_fn(params, cache, batch, slot, table_row, ctx_len):
+        return model_lib.prefill_chunk(params, cfg, cache, batch, slot,
+                                       table_row, ctx_len,
+                                       use_pallas=use_pallas)
+
+    return chunk_prefill_fn
 
 
 def generate(params, cfg, batch: dict, *, max_new_tokens: int,

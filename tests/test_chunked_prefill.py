@@ -1,0 +1,373 @@
+"""Chunked-prefill subsystem coverage (ISSUE 3).
+
+Acceptance properties:
+
+  * scheduler — the token budget is never exceeded, chunks cover each
+    prompt in order, FIFO tie-break is starvation-free (deterministic
+    forms here; hypothesis forms in tests/test_properties.py);
+  * model — sequential ``prefill_chunk`` calls reproduce the stall
+    ``prefill_into_paged`` cache and last-position logits BIT FOR BIT
+    across chunk sizes (bf16 cache round-trips are lossless and the
+    chunk attention runs the same recipe as the stall prefill);
+  * engine — ``prefill="chunked"`` output is token-for-token identical
+    to the stall-admission paged engine on the same workload;
+  * engine-vs-sim — ``simulate_continuous(prefill="chunked")`` drives
+    the same ChunkScheduler and reproduces the engine's completion
+    order and per-iteration budget trace, including under a tight
+    block budget with memory rejections;
+  * kernels — the Pallas ``paged_decode_attention`` routing flag
+    (``use_pallas=``) matches the jnp gather path token for token.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import datagen, personas, priority as prio
+from repro.core import scheduler as sched, simulator
+from repro.kvcache import BlockAllocator
+from repro.kvcache.paged import PagedKVCache
+from repro.models import model as model_lib
+from repro.prefill import ChunkScheduler
+from repro.serving import generate
+from repro.serving.engine import Request, ServingEngine, hash_tokenize
+
+SLOTS = 3
+MAX_NEW = 6
+BUCKET = 8
+CAPS = [2, 6, 1, 4, 6, 2, 3, 5, 1, 6, 2, 4]
+CHUNK = 3
+BUDGET = 8
+
+
+def _persona(batch_size=SLOTS):
+    return dataclasses.replace(personas.get_persona("bart"),
+                               batch_size=batch_size)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get_smoke_config("starcoder2-3b")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    corpus = datagen.generate_corpus(
+        datagen.VARIANCE_MIXES["normal"], 64, seed=0)
+    train, test = datagen.train_test_split(corpus, train_frac=0.5)
+    persona = _persona()
+    profile = sched.offline_profile(train, persona, epochs=15)
+    return cfg, params, persona, profile, test
+
+
+def _requests(test, caps):
+    return [Request(text=t.text, arrival=0.0, task_id=i,
+                    max_new_tokens=c)
+            for i, (t, c) in enumerate(zip(test, caps))]
+
+
+def _sim_tasks(test, caps, profile, persona, xi=2.0):
+    out = []
+    for i, (t, c) in enumerate(zip(test, caps)):
+        u = profile.predictor.score(t.text)
+        d = prio.priority_point(0.0, len(t.text.split()), persona.phi,
+                                None, xi=xi)
+        out.append(prio.SimTask(
+            task=Request(text=t.text, arrival=0.0, task_id=i),
+            u=float(max(u, 0.0)), r=0.0, d=d,
+            input_len=float(len(t.text.split())), true_out_len=int(c)))
+    return out
+
+
+def _engine(setup, policy_name="fifo", **kw):
+    cfg, params, persona, profile, _ = setup
+    pcfg = dataclasses.replace(profile.policy_config(), tau=1e18)
+    return ServingEngine(
+        params, cfg, sched.POLICIES[policy_name](persona, pcfg), profile,
+        input_bucket=BUCKET, max_new_tokens=MAX_NEW, mode="continuous",
+        eos_id=-1, **kw)
+
+
+# ---------------------------------------------------------------------------
+# ChunkScheduler (deterministic; hypothesis forms in test_properties.py)
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_budget_and_order():
+    s = ChunkScheduler(chunk_size=4, token_budget=10)
+    s.add("a", slot=0, total=10, priority=0.0)
+    s.add("b", slot=1, total=6, priority=0.0)
+    covered = {"a": [], "b": []}
+    rounds = 0
+    while s.has_jobs:
+        decode = min(rounds, 3)          # growing decode load
+        plans = s.schedule(decode)
+        assert sum(p.length for p in plans) <= max(0, 10 - decode)
+        for p in plans:
+            covered[p.job.task].append((p.start, p.length))
+        rounds += 1
+        assert rounds < 50
+    for total, key in ((10, "a"), (6, "b")):
+        pos = 0
+        for start, length in covered[key]:
+            assert start == pos           # in order, no gaps
+            pos += length
+        assert pos == total               # full coverage
+    # FIFO tie-break: equal priorities -> "a" (admitted first) finishes
+    # its prefill no later than "b"
+    assert covered["a"][0][0] == 0
+
+
+def test_scheduler_priority_order_and_tail_chunks():
+    s = ChunkScheduler(chunk_size=4, token_budget=6)
+    s.add("low", slot=0, total=6, priority=-1.0)
+    s.add("high", slot=1, total=6, priority=5.0)
+    plans = s.schedule(0)
+    # high priority first; its tail chunk (2) rides along; low's first
+    # chunk (4) no longer fits in the remaining 0 tokens
+    assert [(p.job.task, p.start, p.length) for p in plans] == [
+        ("high", 0, 4), ("high", 4, 2)]
+    assert plans[-1].finishes
+    plans = s.schedule(0)
+    assert [(p.job.task, p.start, p.length) for p in plans] == [
+        ("low", 0, 4), ("low", 4, 2)]
+
+
+def test_scheduler_work_conservation():
+    """Whenever jobs pend and the remainder fits a whole chunk, at
+    least one chunk is scheduled (bounded wait under FIFO)."""
+    s = ChunkScheduler(chunk_size=4, token_budget=8)
+    for j in range(5):
+        s.add(j, slot=j, total=12, priority=0.0)
+    while s.has_jobs:
+        plans = s.schedule(4)            # remainder = 4 = one chunk
+        assert plans, "scheduler idled with pending work and headroom"
+
+
+def test_scheduler_validation():
+    with pytest.raises(ValueError, match="chunk_size"):
+        ChunkScheduler(0, 8)
+    with pytest.raises(ValueError, match="live-lock"):
+        ChunkScheduler(8, 4)
+    s = ChunkScheduler(4, 8)
+    with pytest.raises(ValueError, match="total"):
+        s.add("x", 0, 0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# model-level parity: chunked prefill == stall prefill, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [3, 4, BUCKET])
+def test_prefill_chunk_matches_full_prefill(setup, chunk):
+    cfg, params, _, _, test = setup
+    S, bs = BUCKET, 4
+    max_len = S + MAX_NEW + 8
+    kvc_a = PagedKVCache(cfg, 2, 16, bs, max_len)
+    kvc_b = PagedKVCache(cfg, 2, 16, bs, max_len)
+    alloc = BlockAllocator(16, bs)
+    blocks = alloc.allocate_n(0, alloc.blocks_for(S))
+    kvc_a.set_table(0, blocks)
+    kvc_b.set_table(0, blocks)
+    toks = np.zeros((1, S), np.int32)
+    seq = hash_tokenize(test[0].text, cfg.vocab_size, S)
+    toks[0, S - len(seq):] = seq
+
+    pf = generate.make_paged_prefill_fn(cfg, max_len)
+    cache_a, logits_a = pf(params, kvc_a.state,
+                           {"tokens": jnp.asarray(toks)}, jnp.int32(0),
+                           kvc_a.table_row(0))
+    cf = generate.make_chunk_prefill_fn(cfg, use_pallas=False)
+    cache_b = kvc_b.state
+    done = 0
+    while done < S:
+        T = min(chunk, S - done)
+        cache_b, logits_b = cf(
+            params, cache_b, {"tokens": jnp.asarray(toks[:, done:done + T])},
+            jnp.int32(0), kvc_b.table_row(0), jnp.int32(done))
+        done += T
+    np.testing.assert_array_equal(np.asarray(logits_a),
+                                  np.asarray(logits_b))
+    for la, lb in zip(jax.tree.leaves(cache_a), jax.tree.leaves(cache_b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# engine: token parity, metrics, engine-vs-sim parity
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_matches_stall_token_for_token(setup):
+    """Same workload: the chunked engine reorders WHEN prefill work
+    runs, but every request's greedy tokens are identical to the
+    stall-admission paged engine."""
+    _, _, _, _, test = setup
+    res = {}
+    for pf, kw in (("stall", {}),
+                   ("chunked", dict(chunk_size=CHUNK,
+                                    token_budget=BUDGET))):
+        eng = _engine(setup, kv="paged", kv_block_size=4, prefill=pf, **kw)
+        res[pf] = eng.serve(_requests(test, CAPS))
+        eng.allocator.check_no_leaks()
+    stall = {t.task.task_id: t.task for t in res["stall"]["tasks"]}
+    chnk = {t.task.task_id: t.task for t in res["chunked"]["tasks"]}
+    for i, c in enumerate(CAPS):
+        assert chnk[i].out_len == stall[i].out_len == c
+        assert chnk[i].out_tokens == stall[i].out_tokens
+    # the budget invariant held on the real engine's trace
+    assert res["chunked"]["budget_trace"]
+    for decode_toks, prefill_toks in res["chunked"]["budget_trace"]:
+        assert prefill_toks <= max(0, BUDGET - decode_toks)
+    assert res["chunked"]["prefill"]["kind"] == "chunked"
+
+
+def test_tail_latency_metrics_reported(setup):
+    """ttft/itl percentiles are reported for all engine modes and are
+    internally consistent (first token never after completion)."""
+    cfg, params, persona, profile, test = setup
+    pcfg = dataclasses.replace(profile.policy_config(), tau=1e18)
+    variants = {
+        "batch": dict(mode="batch"),
+        "continuous": dict(mode="continuous"),
+        "paged": dict(mode="continuous", kv="paged", kv_block_size=4),
+        "chunked": dict(mode="continuous", kv="paged", kv_block_size=4,
+                        prefill="chunked", chunk_size=CHUNK,
+                        token_budget=BUDGET),
+    }
+    for name, kw in variants.items():
+        eng = ServingEngine(
+            params, cfg, sched.POLICIES["fifo"](persona, pcfg), profile,
+            input_bucket=BUCKET, max_new_tokens=MAX_NEW, eos_id=-1, **kw)
+        res = eng.serve(_requests(test, CAPS[:6]))
+        for key in ("ttft_p50", "ttft_p99", "itl_p50", "itl_p99"):
+            assert key in res, (name, key)
+            assert np.isfinite(res[key]) and res[key] >= 0.0
+        assert res["ttft_p50"] <= res["ttft_p99"] + 1e-12
+        assert res["itl_p50"] <= res["itl_p99"] + 1e-12
+        for t in res["tasks"]:
+            times = t.task.token_times
+            assert len(times) == t.task.out_len
+            assert times[0] <= t.task.finish + 1e-9
+            assert all(b >= a - 1e-9 for a, b in zip(times, times[1:]))
+
+
+@pytest.mark.parametrize("policy_name", ["fifo", "rt-lm"])
+def test_engine_vs_sim_chunked_parity(setup, policy_name):
+    """The simulator's chunked-prefill mode reproduces the engine's
+    completion order AND per-iteration budget trace exactly."""
+    cfg, params, persona, profile, test = setup
+    pcfg = dataclasses.replace(profile.policy_config(), tau=1e18)
+    eng = _engine(setup, policy_name, kv="paged", kv_block_size=4,
+                  prefill="chunked", chunk_size=CHUNK, token_budget=BUDGET)
+    res = eng.serve(_requests(test, CAPS))
+    sim = simulator.simulate_continuous(
+        _sim_tasks(test, CAPS, profile, persona),
+        sched.POLICIES[policy_name](persona, pcfg),
+        prompt_len=BUCKET, prefill="chunked", chunk_size=CHUNK,
+        token_budget=BUDGET)
+    assert res["completion_order"] == [t.task.task_id for t in sim.tasks]
+    assert res["budget_trace"] == sim.budget_trace
+
+
+def test_engine_vs_sim_chunked_parity_tight_budget(setup):
+    """Memory rejections and chunked prefill compose: the reservation
+    gate decides identically in engine and simulator."""
+    cfg, params, persona, profile, test = setup
+    bs, nb, slots = 4, 7, 4
+    pcfg = dataclasses.replace(profile.policy_config(), tau=1e18)
+    eng = _engine(setup, kv="paged", num_slots=slots, kv_block_size=bs,
+                  kv_num_blocks=nb, prefill="chunked", chunk_size=CHUNK,
+                  token_budget=BUDGET)
+    res = eng.serve(_requests(test, CAPS))
+    eng.allocator.check_no_leaks()
+    assert res["rejected_for_memory"] > 0            # budget actually binds
+    sim = simulator.simulate_continuous(
+        _sim_tasks(test, CAPS, profile, persona),
+        sched.POLICIES["fifo"](persona, pcfg),
+        num_slots=slots, kv_block_size=bs, kv_num_blocks=nb,
+        prompt_len=BUCKET, prefill="chunked", chunk_size=CHUNK,
+        token_budget=BUDGET)
+    assert res["completion_order"] == [t.task.task_id for t in sim.tasks]
+    assert res["rejected_for_memory"] == sim.kv_rejected
+    assert res["budget_trace"] == sim.budget_trace
+
+
+def test_sim_chunked_bounds_itl_vs_stall():
+    """Deterministic persona model: under a saturated admission burst,
+    chunked prefill's p99 ITL (bounded by the token budget) comes in
+    under stall admission's (bounded only by the burst size)."""
+    persona = _persona(batch_size=8)
+    n, prompt = 64, 32
+    # bimodal lengths so evictions stagger: freed slots admit (and, in
+    # stall mode, prefill) while the long requests are still decoding
+    tasks = [prio.SimTask(task=i, u=5.0, r=0.0, d=4.0, input_len=5.0,
+                          true_out_len=(24 if i % 4 == 0 else 6))
+             for i in range(n)]
+    import copy
+    pcfg = sched.PolicyConfig(u_scale=30.0, tau=1e18)
+    stall = simulator.simulate_continuous(
+        [copy.copy(t) for t in tasks],
+        sched.POLICIES["fifo"](persona, pcfg), prompt_len=prompt)
+    chunked = simulator.simulate_continuous(
+        [copy.copy(t) for t in tasks],
+        sched.POLICIES["fifo"](persona, pcfg), prompt_len=prompt,
+        prefill="chunked", chunk_size=16, token_budget=24)
+    assert chunked.itl_p99 < stall.itl_p99
+    assert len(chunked.tasks) == len(stall.tasks) == n
+
+
+# ---------------------------------------------------------------------------
+# Pallas routing flag (paged decode) — satellite of ISSUE 3
+# ---------------------------------------------------------------------------
+
+
+def test_paged_decode_use_pallas_flag_parity(setup):
+    """decode_step_paged(use_pallas=True) (kernel in interpret mode on
+    CPU) produces the same greedy tokens as the jnp gather path."""
+    cfg, params, _, _, test = setup
+    S, bs, C = BUCKET, 4, 2
+    max_len = S + MAX_NEW + 8
+    kvc = PagedKVCache(cfg, C, 16, bs, max_len)
+    alloc = BlockAllocator(16, bs)
+    pf = generate.make_paged_prefill_fn(cfg, max_len)
+    cache = kvc.state
+    for s in range(C):
+        kvc.set_table(s, alloc.allocate_n(s, alloc.blocks_for(S)))
+        toks = np.zeros((1, S), np.int32)
+        seq = hash_tokenize(test[s].text, cfg.vocab_size, S)
+        toks[0, S - len(seq):] = seq
+        cache, _ = pf(params, cache, {"tokens": jnp.asarray(toks)},
+                      jnp.int32(s), kvc.table_row(s))
+    dec_ref = generate.make_paged_decode_fn(cfg, use_pallas=False)
+    dec_pal = generate.make_paged_decode_fn(cfg, use_pallas=True)
+    tok = jnp.asarray([[5], [7]], jnp.int32)
+    ca = cb = cache
+    for _ in range(3):
+        ta, la, ca = dec_ref(params, ca, tok, kvc.tables_device())
+        tb, lb, cb = dec_pal(params, cb, tok, kvc.tables_device())
+        np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=5e-2, rtol=5e-2)
+        tok = ta
+
+
+def test_chunked_engine_validation(setup):
+    cfg, _, persona, _, _ = setup
+    pcfg = sched.PolicyConfig()
+    policy = sched.POLICIES["fifo"](persona, pcfg)
+    with pytest.raises(ValueError, match="chunked"):
+        ServingEngine(None, cfg, policy, None, mode="continuous",
+                      kv="contiguous", prefill="chunked")
+    with pytest.raises(ValueError, match="prefill"):
+        ServingEngine(None, cfg, policy, None, mode="continuous",
+                      kv="paged", prefill="sarathi")
+    with pytest.raises(ValueError, match="live-lock"):
+        ServingEngine(None, cfg, policy, None, mode="continuous",
+                      kv="paged", prefill="chunked", chunk_size=16,
+                      token_budget=4)
+    with pytest.raises(ValueError, match="chunked"):
+        simulator.simulate_continuous(
+            [], policy, prompt_len=0, prefill="chunked",
+            chunk_size=4, token_budget=8)

@@ -7,7 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import (decode_attention as fd, flash_attention as fa,
+from repro.kernels import (chunked_prefill_attention as cpa,
+                           decode_attention as fd, flash_attention as fa,
                            paged_decode_attention as pfd, ref,
                            rmsnorm as rn)
 
@@ -137,6 +138,69 @@ def test_paged_decode_empty_row_returns_zeros():
 
 
 @pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("T,B,H,KV,D,block_size,nb", [
+    (16, 2, 4, 2, 32, 16, 4),    # GQA, smallest chunk
+    (16, 1, 8, 2, 128, 64, 2),   # wide heads, big pages
+    (64, 1, 8, 1, 64, 32, 4),    # MQA, mid chunk
+    (128, 2, 4, 4, 16, 16, 12),  # MHA, acceptance chunk sweep top end
+])
+def test_chunked_prefill_sweep(T, B, H, KV, D, block_size, nb, dtype):
+    """Chunked-prefill kernel vs the block-table gather oracle across
+    chunk sizes {16, 64, 128} and RAGGED prior-context lengths,
+    including the zero-prior-context (first chunk) edge; tables are
+    permuted so physical order != logical order."""
+    N = B * nb + 3               # spare pages: stale/garbage content
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(ks[0], (B, T, H, D), jnp.float32).astype(dtype)
+    kp = jax.random.normal(ks[1], (N, block_size, KV, D),
+                           jnp.float32).astype(dtype)
+    vp = jax.random.normal(ks[2], (N, block_size, KV, D),
+                           jnp.float32).astype(dtype)
+    rng = np.random.default_rng(T * 7 + B * 131 + block_size)
+    tables = jnp.asarray(np.stack(
+        [rng.permutation(N)[:nb] for _ in range(B)]).astype(np.int32))
+    # row 0 is always the first-chunk edge (zero prior context); others
+    # ragged in [0, nb*bs - T]
+    maxc = nb * block_size - T
+    clens = jnp.asarray(
+        [0] + [int(rng.integers(0, maxc + 1)) for _ in range(B - 1)],
+        jnp.int32)
+    out = cpa.chunked_prefill_attention(q, kp, vp, tables, clens,
+                                        interpret=True)
+    want = ref.chunked_prefill_attention_ref(q, kp, vp, tables, clens)
+    assert out.shape == (B, T, H, D) and out.dtype == dtype
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               want.astype(jnp.float32), **_tol(dtype))
+
+
+def test_chunked_prefill_matches_full_causal():
+    """Triangle closure: when the pages hold a full sequence and the
+    chunk is its tail, chunked-prefill attention equals rows
+    [ctx:ctx+T] of ordinary causal attention over the sequence."""
+    B, H, KV, D, bs, nb, T = 1, 4, 2, 32, 16, 4, 16
+    S = nb * bs
+    ctx = S - T
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q_full = jax.random.normal(ks[0], (B, S, H, D))
+    kc = jax.random.normal(ks[1], (B, S, KV, D))
+    vc = jax.random.normal(ks[2], (B, S, KV, D))
+    want = ref.attention_ref(q_full, kc, vc, causal=True)[:, ctx:]
+    kp = kc.reshape(B * nb, bs, KV, D)
+    vp = vc.reshape(B * nb, bs, KV, D)
+    tables = jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
+    clens = jnp.asarray([ctx], jnp.int32)
+    got = ref.chunked_prefill_attention_ref(q_full[:, ctx:], kp, vp,
+                                            tables, clens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    got_kernel = cpa.chunked_prefill_attention(q_full[:, ctx:], kp, vp,
+                                               tables, clens,
+                                               interpret=True)
+    np.testing.assert_allclose(np.asarray(got_kernel), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("shape,block_rows", [
     ((8, 128), 4), ((3, 5, 256), 8), ((17, 64), 8), ((1, 1024), 1),
 ])
@@ -177,4 +241,12 @@ def test_ops_wrappers_dispatch():
                                    use_pallas=True, interpret=True),
         ops.paged_decode_attention(qd, kp, vp, tables, lens,
                                    use_pallas=False),
+        atol=1e-4, rtol=1e-4)
+    qc = jax.random.normal(ks[0], (2, 8, 4, 16))
+    clens = jnp.asarray([0, 9], jnp.int32)
+    np.testing.assert_allclose(
+        ops.chunked_prefill_attention(qc, kp, vp, tables, clens,
+                                      use_pallas=True, interpret=True),
+        ops.chunked_prefill_attention(qc, kp, vp, tables, clens,
+                                      use_pallas=False),
         atol=1e-4, rtol=1e-4)
