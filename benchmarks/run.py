@@ -18,7 +18,7 @@ import time
 import traceback
 
 from . import (common, continuous_vs_batch, kernel_bench, paper_tables,
-               prefill_interference, roofline_report)
+               prefill_interference, prefix_cache, roofline_report)
 
 
 def run_paper_tables(only=None):
@@ -88,6 +88,8 @@ def run_continuous(only=None, seed=0):
         continuous_vs_batch.main(seed=seed)
     if only is None or only in ("chunked_prefill", "prefill_interference"):
         prefill_interference.main(seed=seed)
+    if only is None or only == "prefix_cache":
+        prefix_cache.main(seed=seed)
 
 
 def main(argv=None):

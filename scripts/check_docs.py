@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Docs check: every intra-repo markdown link must resolve.
+
+Scans the repo's tracked-ish markdown files (root, docs/, and any
+*.md under src/ or tests/) for inline links/images
+``[text](target)`` and validates that relative targets exist on disk
+(anchors are stripped; external schemes and bare anchors are
+skipped).  Exits non-zero listing every broken link — run by
+scripts/ci.sh and the CI workflow's docs step.
+
+    python scripts/check_docs.py [root]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# inline markdown link/image: [text](target) — excludes ``](`` inside
+# code spans well enough for this repo's docs; reference-style links
+# are not used here.
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "ftp://", "#")
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames
+                       if d not in (".git", "__pycache__", ".pytest_cache",
+                                    "node_modules", ".claude")]
+        for f in filenames:
+            if f.endswith(".md"):
+                yield os.path.join(dirpath, f)
+
+
+def check(root: str):
+    broken = []
+    n_links = 0
+    for path in sorted(md_files(root)):
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        # drop fenced code blocks: their [x](y) are examples, not links
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), rel))
+            n_links += 1
+            if not os.path.exists(resolved):
+                broken.append((path, target))
+    return n_links, broken
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else \
+        os.path.join(os.path.dirname(__file__), "..")
+    root = os.path.abspath(root)
+    n_links, broken = check(root)
+    if broken:
+        print(f"BROKEN markdown links ({len(broken)}):")
+        for path, target in broken:
+            print(f"  {os.path.relpath(path, root)} -> {target}")
+        return 1
+    print(f"docs OK: {n_links} intra-repo markdown links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

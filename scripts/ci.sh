@@ -1,18 +1,24 @@
 #!/usr/bin/env bash
-# CI entry point (also runnable locally): quickest signal first (the
-# chunked-prefill subsystem module), then the fast lane, then the full
-# tier-1 suite.
+# CI entry point (also runnable locally): docs checks first (cheapest
+# signal), then the serving subsystem modules, then the fast lane,
+# then the full tier-1 suite.
 #
-#   scripts/ci.sh          # prefill module + fast lane + full tier-1
-#   CI_FAST_ONLY=1 scripts/ci.sh   # prefill module + fast lane only
+#   scripts/ci.sh          # docs + subsystem modules + fast lane + tier-1
+#   CI_FAST_ONLY=1 scripts/ci.sh   # skip the full tier-1 pass
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== chunked-prefill subsystem (quick signal) =="
-scripts/run_tier1.sh -m "not slow" tests/test_chunked_prefill.py
+echo "== docs: markdown links + quickstart smoke =="
+python scripts/check_docs.py
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py
+
+echo "== serving subsystems (quick signal) =="
+scripts/run_tier1.sh -m "not slow" tests/test_chunked_prefill.py \
+  tests/test_prefix_cache.py
 
 echo "== fast lane (-m 'not slow') =="
-scripts/run_tier1.sh -m "not slow" --ignore=tests/test_chunked_prefill.py
+scripts/run_tier1.sh -m "not slow" --ignore=tests/test_chunked_prefill.py \
+  --ignore=tests/test_prefix_cache.py
 
 if [[ "${CI_FAST_ONLY:-0}" != "1" ]]; then
   echo "== full tier-1 =="

@@ -46,7 +46,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.kvcache import blocks_for_tokens
+from repro.kvcache import BlockAllocator, PrefixCache, blocks_for_tokens
 from repro.prefill import ChunkScheduler
 
 from . import scheduler as sched_lib
@@ -81,6 +81,14 @@ class SimResult:
     # chunked-prefill mode: per-iteration (decode_tokens,
     # prefill_tokens) — the engine records the identical trace
     budget_trace: List = dataclasses.field(default_factory=list)
+    # prefix-cache model (kvcache.prefix driven host-side, the same
+    # class the engine drives): counter definitions match
+    # ServingEngine._result field for field, so parity on the
+    # hit/CoW/eviction numbers is straight equality
+    prefix_hit_rate: float = 0.0
+    cached_tokens_reused: int = 0
+    cow_copies: int = 0
+    prefix_evictions: int = 0
 
     # ---- paper metrics ------------------------------------------------
     @property
@@ -235,7 +243,9 @@ def simulate_continuous(tasks: Sequence[SimTask],
                         prompt_len: int = 0,
                         prefill: str = "stall",
                         chunk_size: Optional[int] = None,
-                        token_budget: Optional[int] = None) -> SimResult:
+                        token_budget: Optional[int] = None,
+                        prefix_cache: bool = False,
+                        prompt_tokens=None) -> SimResult:
     """Iteration-level (continuous) batching over C decode slots.
 
     Mirrors the real engine's step loop exactly (serving/engine.py
@@ -269,6 +279,18 @@ def simulate_continuous(tasks: Sequence[SimTask],
     materializes when the last chunk completes.  ``budget_trace``
     records the engine-identical per-iteration (decode_tokens,
     prefill_tokens) pairs the parity tests compare entry for entry.
+
+    Prefix caching (``prefix_cache=True`` — the cache model of the
+    engine's ``prefix_cache=True``): requires the block-budget model
+    plus ``prompt_tokens``, a callable mapping a task to its PADDED
+    prompt token bucket (the parity tests pass the engine's exact
+    ``_tokenize_padded`` recipe).  The simulator then drives a real
+    host-side ``BlockAllocator`` + ``PrefixCache`` through the same
+    admit/commit/extend/free call sequence as the engine, so hit
+    counts, CoW copies, LRU evictions and the per-step utilization
+    trace agree bit-for-bit.  Prefill cost scales with the UNCACHED
+    suffix: stall admission charges ``item_time * suffix / prompt_len``
+    and chunk jobs cover only the suffix — cache hits shorten TTFT.
     """
     persona = policy.persona
     pending = sorted(tasks, key=lambda t: t.r)
@@ -285,6 +307,18 @@ def simulate_continuous(tasks: Sequence[SimTask],
             raise ValueError('prefill="chunked" needs chunk_size and '
                              'token_budget')
         sched = ChunkScheduler(chunk_size, token_budget)
+    pc = None
+    if prefix_cache:
+        if not kv_model:
+            raise ValueError('prefix_cache=True needs kv_block_size and '
+                             'kv_num_blocks (the block-budget model)')
+        if prompt_len <= 0:
+            raise ValueError('prefix_cache=True needs prompt_len > 0')
+        if prompt_tokens is None:
+            raise ValueError('prefix_cache=True needs a prompt_tokens '
+                             'callable (task -> padded token bucket)')
+        alloc = BlockAllocator(kv_num_blocks, kv_block_size)
+        pc = PrefixCache(alloc, kv_block_size)
     if kv_model:
         worst = max((blocks_for_tokens(
             prompt_len + max(1, t.true_out_len) - 1, kv_block_size)
@@ -296,6 +330,7 @@ def simulate_continuous(tasks: Sequence[SimTask],
     slots: List[Optional[SimTask]] = [None] * C
     produced = [0] * C
     reserved = [0] * C
+    slot_toks: Dict[int, tuple] = {}   # chunked+prefix: bucket per slot
     queue: List[SimTask] = []
     cpu_queue: List[SimTask] = []
     done: List[SimTask] = []
@@ -366,7 +401,16 @@ def simulate_continuous(tasks: Sequence[SimTask],
                 s = free.pop(0)
                 if kv_model:
                     reserved[s] = need
-                sched.add(task, s, prompt_len,
+                total = prompt_len
+                if pc is not None:
+                    # matched prefix blocks shared at admission (same
+                    # call the engine makes); the chunk job covers only
+                    # the uncached suffix
+                    toks = tuple(prompt_tokens(task))
+                    adm = pc.admit(id(task), toks)
+                    slot_toks[s] = toks
+                    total = prompt_len - adm.start
+                sched.add(task, s, total,
                           policy.assign_priority(task))
                 progressed = True
 
@@ -377,12 +421,16 @@ def simulate_continuous(tasks: Sequence[SimTask],
                 now += persona.item_time * plan.length / prompt_len
                 if plan.finishes:
                     task, s = plan.job.task, plan.job.slot
+                    if pc is not None:
+                        pc.commit(id(task), slot_toks.pop(s))
                     task.start, task.lane = now, "gpu"
                     ttfts.append(now - task.r)
                     if task.true_out_len <= 1:  # first token already EOS
                         task.finish = now
                         done.append(task)
                         reserved[s] = 0
+                        if pc is not None:
+                            alloc.free_sequence(id(task))
                     else:
                         slots[s] = task         # joins THIS step's decode
                         produced[s] = 1         # prefill emits token 1
@@ -402,12 +450,24 @@ def simulate_continuous(tasks: Sequence[SimTask],
                     break
                 if status == "cpu":
                     continue
-                now += persona.item_time       # per-member bandwidth term
+                if pc is not None:
+                    # prefill cost scales with the uncached suffix —
+                    # the same admit/commit calls the engine's stall
+                    # path makes, so counters match bit for bit
+                    toks = tuple(prompt_tokens(task))
+                    adm = pc.admit(id(task), toks)
+                    now += (persona.item_time
+                            * (prompt_len - adm.start) / prompt_len)
+                    pc.commit(id(task), toks)
+                else:
+                    now += persona.item_time   # per-member bandwidth term
                 task.start, task.lane = now, "gpu"
                 ttfts.append(now - task.r)
                 if task.true_out_len <= 1:     # first token already EOS
                     task.finish = now
                     done.append(task)
+                    if pc is not None:
+                        alloc.free_sequence(id(task))
                 else:
                     s = slots.index(None)
                     slots[s] = task
@@ -421,7 +481,20 @@ def simulate_continuous(tasks: Sequence[SimTask],
             active = [s for s in range(C) if slots[s] is not None]
             peak_conc = max(peak_conc, len(active))
             now += persona.eta                 # one decode step, all slots
-            if kv_model:
+            if kv_model and pc is not None:
+                # real-allocator model (prefix mode): mirror the
+                # engine's lazy boundary-crossing allocation host-side,
+                # then sample the allocator directly — shared prefix
+                # blocks and cached-but-unreferenced blocks count once,
+                # exactly as in the engine's utilization samples
+                for s in active:
+                    key = id(slots[s])
+                    if (blocks_for_tokens(prompt_len + produced[s],
+                                          kv_block_size)
+                            > len(alloc.table(key))):
+                        alloc.allocate(key)
+                kv_util.append(alloc.utilization())
+            elif kv_model:
                 # lazy-allocation model: this step writes logical
                 # position prompt + produced - 1, so each slot holds
                 # blocks_for(prompt + produced) physical blocks; slots
@@ -446,6 +519,8 @@ def simulate_continuous(tasks: Sequence[SimTask],
                 if produced[s] >= slots[s].true_out_len:
                     slots[s].finish = now      # evicted THIS step
                     done.append(slots[s])
+                    if pc is not None:
+                        alloc.free_sequence(id(slots[s]))
                     slots[s] = None
                     reserved[s] = 0
             progressed = True
@@ -468,6 +543,7 @@ def simulate_continuous(tasks: Sequence[SimTask],
 
     makespan = max(t.finish for t in done) - min(t.r for t in done)
     util = np.array(kv_util) if kv_util else np.zeros(1)
+    pstats = pc.stats() if pc is not None else {}
     return SimResult(tasks=done, makespan=makespan,
                      overhead_s=overhead_total,
                      kv_rejected=len(rejected_ids),
@@ -476,7 +552,12 @@ def simulate_continuous(tasks: Sequence[SimTask],
                      peak_concurrency=peak_conc,
                      ttft_p50=_pct(ttfts, 0.50), ttft_p99=_pct(ttfts, 0.99),
                      itl_p50=_pct(itls, 0.50), itl_p99=_pct(itls, 0.99),
-                     budget_trace=budget_trace)
+                     budget_trace=budget_trace,
+                     prefix_hit_rate=pstats.get("prefix_hit_rate", 0.0),
+                     cached_tokens_reused=pstats.get(
+                         "cached_tokens_reused", 0),
+                     cow_copies=pstats.get("cow_copies", 0),
+                     prefix_evictions=pstats.get("prefix_evictions", 0))
 
 
 # ---------------------------------------------------------------------------

@@ -1,20 +1,39 @@
-"""Host-side block allocator: free list + per-sequence block tables.
+"""Host-side block allocator: free list + per-sequence block tables
++ per-block reference counts.
 
 The allocator is deliberately dumb and exact — a list of free physical
-block ids and a ``seq_id -> [block ids]`` table map.  All policy
-(reservation-based admission, lazy boundary-crossing allocation) lives
-in the serving engine / simulator; the allocator only enforces the two
-hard invariants the property tests pin down:
+block ids, a ``seq_id -> [block ids]`` table map and a ``block ->
+refcount`` map.  All policy (reservation-based admission, lazy
+boundary-crossing allocation, prefix matching) lives in the serving
+engine / simulator / ``kvcache.prefix``; the allocator only enforces
+the hard invariants the property tests pin down:
 
-  * a live block is owned by exactly one sequence (never double
-    allocated until freed);
-  * ``free_sequence`` returns every block of the sequence to the free
-    list (no leaks — after a full ``serve()`` the pool is whole again).
+  * a live block is never handed out twice: ``allocate`` only pops
+    blocks no one references;
+  * reference counts balance: every ``share``/``add_ref`` is undone by
+    exactly one ``free_sequence`` entry / ``drop_ref``, and a block
+    returns to the free list exactly when its count reaches zero — so
+    no block shared by a prefix cache or a sibling sequence is ever
+    freed while someone still reads it;
+  * ``free_sequence`` drops one reference per table entry (no leaks —
+    after a full ``serve()`` plus a cache ``clear()`` the pool is
+    whole again).
+
+Copy-on-write lives here as ``cow_block``: replacing one SHARED entry
+of a sequence's table with a fresh private block (the caller copies the
+device-side page contents).  The sharing machinery is only engaged by
+``kvcache.prefix.PrefixCache``; plain paged serving keeps every block
+at refcount 1 and behaves exactly as before.
+
+Under allocator pressure an optional ``reclaim`` hook (installed by the
+prefix cache) is consulted: it must release at least one block back to
+the free list per call (LRU eviction of cached, otherwise-unreferenced
+blocks) or return False, at which point ``OutOfBlocksError`` is raised.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 def blocks_for_tokens(num_tokens: int, block_size: int) -> int:
@@ -33,7 +52,8 @@ class OutOfBlocksError(RuntimeError):
     """Raised when an allocation is requested from an empty free list.
 
     With reservation-based admission this is a bug, not backpressure:
-    the engine reserves a sequence's worst case up front, so a boundary
+    the engine reserves a sequence's worst case up front (and cached
+    refcount-0 blocks are reclaimable on demand), so a boundary
     crossing must never find the pool empty.
     """
 
@@ -49,7 +69,10 @@ class BlockAllocator:
         # popped from the end so blocks hand out in ascending id order
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self._tables: Dict[int, List[int]] = {}
-        self._owner: Dict[int, int] = {}
+        self._refs: Dict[int, int] = {}
+        # optional pressure valve (kvcache.prefix installs LRU eviction
+        # of cached blocks here); must free >= 1 block or return False
+        self.reclaim: Optional[Callable[[], bool]] = None
 
     # -- accounting ----------------------------------------------------
     @property
@@ -70,30 +93,89 @@ class BlockAllocator:
     def blocks_for(self, num_tokens: int) -> int:
         return blocks_for_tokens(num_tokens, self.block_size)
 
-    # -- alloc / free --------------------------------------------------
+    def refcount(self, block: int) -> int:
+        """References held on ``block`` (0 = free)."""
+        return self._refs.get(block, 0)
+
+    # -- alloc / share / free ------------------------------------------
+    def _ensure_free(self, n: int) -> None:
+        """Make sure ``n`` blocks are on the free list, reclaiming
+        cached blocks through the ``reclaim`` hook if one is installed."""
+        while len(self._free) < n:
+            if self.reclaim is None or not self.reclaim():
+                raise OutOfBlocksError(
+                    f"need {n} free KV blocks, have {len(self._free)} "
+                    f"(of {self.num_blocks}) and nothing to reclaim")
+
     def allocate(self, seq_id: int) -> int:
-        """Append one block to ``seq_id``'s table; returns the block id."""
-        if not self._free:
-            raise OutOfBlocksError(
-                f"no free KV blocks (all {self.num_blocks} in use)")
+        """Append one fresh (refcount-1) block to ``seq_id``'s table."""
+        self._ensure_free(1)
         blk = self._free.pop()
-        assert blk not in self._owner, f"block {blk} double-allocated"
-        self._owner[blk] = seq_id
+        assert blk not in self._refs, f"block {blk} double-allocated"
+        self._refs[blk] = 1
         self._tables.setdefault(seq_id, []).append(blk)
         return blk
 
     def allocate_n(self, seq_id: int, n: int) -> List[int]:
-        if n > self.num_free:
-            raise OutOfBlocksError(
-                f"need {n} KV blocks, only {self.num_free} free")
+        self._ensure_free(n)
         return [self.allocate(seq_id) for _ in range(n)]
+
+    def share(self, seq_id: int, block: int) -> None:
+        """Append an already-live block to ``seq_id``'s table, taking
+        one more reference (prefix-cache hit: the sequence READS the
+        block; it must copy-on-write before any divergent write)."""
+        assert block in self._refs, f"cannot share free block {block}"
+        self._refs[block] += 1
+        self._tables.setdefault(seq_id, []).append(block)
+
+    def add_ref(self, block: int) -> None:
+        """Take a table-less reference (the prefix cache pinning a
+        block it indexes)."""
+        assert block in self._refs, f"cannot reference free block {block}"
+        self._refs[block] += 1
+
+    def drop_ref(self, block: int) -> bool:
+        """Release one reference; returns True when the block was freed
+        (count reached zero and it went back on the free list)."""
+        n = self._refs[block] - 1
+        assert n >= 0
+        if n == 0:
+            del self._refs[block]
+            self._free.append(block)
+            return True
+        self._refs[block] = n
+        return False
+
+    def cow_block(self, seq_id: int, index: int) -> Tuple[int, int]:
+        """Copy-on-write: replace ``seq_id``'s SHARED table entry
+        ``index`` with a fresh private block.  Returns ``(src, dst)``
+        physical ids — the caller copies the device-side page contents
+        of ``src`` into ``dst`` before writing.  The shared block keeps
+        its remaining references (cache / sibling sequences), so a CoW
+        never mutates a block someone else still reads.
+        """
+        table = self._tables[seq_id]
+        src = table[index]
+        assert self._refs[src] >= 2, (
+            f"block {src} is private (refcount {self._refs[src]}); "
+            "write in place instead of CoW")
+        self._ensure_free(1)
+        dst = self._free.pop()
+        assert dst not in self._refs, f"block {dst} double-allocated"
+        self._refs[dst] = 1
+        table[index] = dst
+        self.drop_ref(src)
+        return src, dst
 
     def table(self, seq_id: int) -> List[int]:
         """The sequence's block table (copy), empty if unknown."""
         return list(self._tables.get(seq_id, ()))
 
     def free_sequence(self, seq_id: int) -> int:
-        """Return ALL of ``seq_id``'s blocks to the pool; returns count.
+        """Drop one reference per table entry of ``seq_id``; returns the
+        number of entries released.  Blocks return to the pool only when
+        their LAST reference drops — shared prefix blocks survive as
+        long as the cache or a sibling sequence still holds them.
 
         Idempotent: freeing an unknown (or already-freed) sequence is a
         no-op — eviction paths need not track whether a sequence ever
@@ -103,13 +185,14 @@ class BlockAllocator:
         if not blocks:
             return 0
         for blk in blocks:
-            assert self._owner.pop(blk) == seq_id
-            self._free.append(blk)
+            self.drop_ref(blk)
         return len(blocks)
 
     def check_no_leaks(self) -> None:
-        """Assert the pool is whole (used by tests after a full serve)."""
-        assert not self._tables and not self._owner, (
+        """Assert the pool is whole (used by tests after a full serve;
+        prefix-cache engines ``clear()`` the cache's references first)."""
+        assert not self._tables and not self._refs, (
             f"leaked {self.num_used} blocks across "
-            f"{self.live_sequences} sequences")
+            f"{self.live_sequences} sequences "
+            f"({len(self._refs)} referenced)")
         assert sorted(self._free) == list(range(self.num_blocks))

@@ -99,6 +99,18 @@ def scatter_chunk(pages: Array, seq: Array, table_row: Array,
     return out.reshape(pages.shape)
 
 
+def copy_block(pages: Array, src: Array, dst: Array) -> Array:
+    """Copy one physical page: ``pages[dst] = pages[src]``.
+
+    ``src``/``dst`` are traced scalars, so one jitted executable serves
+    every copy-on-write — the prefix cache's full-match admission path
+    duplicates the last shared block before the (re)computed final
+    prompt position is written into it (``kvcache.prefix``).
+    """
+    row = lax.dynamic_slice_in_dim(pages, src, 1, axis=0)
+    return lax.dynamic_update_slice_in_dim(pages, row, dst, axis=0)
+
+
 def scatter_prefill(pages: Array, seq: Array, table_row: Array,
                     seq_len: int) -> Array:
     """Write a freshly prefilled sequence into its table's blocks.

@@ -708,6 +708,26 @@ def prefill_chunk_paged(params: dict, x: Array, positions: Array,
     return apply_stack(params, x, ctx, cfg, cache=cache, mode="chunk")
 
 
+def copy_paged_block(cache: dict, src, dst) -> dict:
+    """Copy-on-write page copy: duplicate physical block ``src`` into
+    ``dst`` across every layer's K/V page pools (the prefix cache's
+    full-match admission — see ``kvcache.prefix``).  ``src``/``dst``
+    are traced scalars; scanned layer groups carry a leading layer
+    axis, vmapped over so ``paged.copy_block`` is the single copy
+    implementation.
+    """
+    copy = lambda pg: paged_lib.copy_block(pg, src, dst)  # noqa: E731
+    out = {}
+    for key, big in cache.items():
+        if key == "pos":
+            out[key] = big
+        elif key.startswith("scan"):
+            out[key] = jax.tree.map(jax.vmap(copy), big)
+        else:
+            out[key] = jax.tree.map(copy, big)
+    return out
+
+
 def write_slot(cache: dict, one: dict, slot) -> dict:
     """Scatter a freshly-prefilled single-sequence cache (batch dim 1,
     scalar pos, (W,) slot_pos — exactly what ``model.prefill`` returns

@@ -1,8 +1,36 @@
 """Chunked-prefill scheduling (token-budgeted prefill/decode interleave).
 
-See scheduler.ChunkScheduler — the host-side core shared by the real
-serving engine (``ServingEngine(prefill="chunked")``) and the simulator
-(``simulate_continuous(prefill="chunked")``).
+Entry points:
+
+  * ``ChunkScheduler`` — the host-side packer: per-iteration token
+    budget filled with decode tokens first, then whole prefill chunks
+    in the policy's uncertainty-priority order (FIFO tie-break).  Pure
+    Python, JAX-free, and shared VERBATIM by the real serving engine
+    (``ServingEngine(prefill="chunked")``) and the simulator
+    (``simulate_continuous(prefill="chunked")``) — which is what makes
+    their per-iteration budget traces comparable bit for bit.
+  * ``ChunkJob`` / ``ChunkPlan`` — one admitted prompt's remaining
+    work, and one scheduled chunk (start offset, length, finishes).
+    With the prefix cache on, a job covers only the UNCACHED suffix of
+    the prompt; the engine shifts plan offsets by the cached-prefix
+    length.
+
+Invariants (property-tested in tests/test_properties.py): scheduled
+chunk tokens never exceed ``max(0, token_budget - decode_tokens)``;
+each job's chunks cover ``[0, total)`` in order exactly once; whenever
+jobs pend and a whole chunk fits, at least one chunk is scheduled (no
+starvation — FIFO ties drain in admission order).
+
+Kernel dispatch: each scheduled chunk executes through
+``model.prefill_chunk`` → ``transformer.prefill_chunk_paged``, which
+scatters the chunk's K/V into the paged pool at its exact position
+offset (``kvcache.paged.scatter_chunk``) and attends
+full-over-prefix / causal-in-chunk — on TPU via the Pallas
+``kernels/chunked_prefill_attention.py`` kernel (block-table
+scalar-prefetch), elsewhere via the exact jnp gather path
+(``layers.chunked_attention`` over the gathered view), selected by
+``use_pallas``.  Both are bit-identical to the stall prefill, so
+chunking never changes greedy output.
 """
 
 from .scheduler import ChunkJob, ChunkPlan, ChunkScheduler

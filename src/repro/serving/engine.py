@@ -40,6 +40,19 @@ or ``kv="paged"``:
     ``num_slots`` raised above the persona batch size at the same KV
     budget, paging admits strictly more concurrent sequences.
 
+With ``prefix_cache=True`` (requires ``kv="paged"``), admission first
+looks up the longest CACHED prefix of the padded prompt bucket in a
+content-hash index over previously written blocks
+(``repro.kvcache.prefix``): matched blocks are shared read-only into
+the new sequence's table (per-block refcounts), prefill runs only from
+the first uncached position (through the traced-offset chunk
+executable), a full-prompt match copy-on-writes its last block so the
+final position's logits can be recomputed, and cached blocks nobody
+references are LRU-evicted only under pool pressure.  Output stays
+token-for-token identical with the cache on or off; the simulator
+drives the same ``PrefixCache`` host-side, so hit/CoW/eviction counts
+and completion order agree bit-for-bit (tests/test_prefix_cache.py).
+
 Adaptation note (DESIGN.md §2): a CPU-only container has no heterogeneous
 co-processor, so the "CPU lane" is a *bulk lane* — a second execution
 queue drained only when the main lane is idle, emulating resource
@@ -69,6 +82,7 @@ from repro.core.simulator import _pct as pct
 from repro.core.personas import Persona
 from repro.kvcache import BlockAllocator, blocks_for_tokens
 from repro.kvcache.paged import PagedKVCache
+from repro.kvcache.prefix import PrefixCache
 from repro.models import transformer
 from repro.prefill import ChunkScheduler
 
@@ -86,6 +100,17 @@ def hash_tokenize(text: str, vocab_size: int, max_len: int) -> List[int]:
             h = ((h ^ c) * 16777619) & 0xFFFFFFFF
         toks.append(2 + (h % (vocab_size - 2)))
     return toks or [2]
+
+
+def tokenize_padded(text: str, vocab_size: int, bucket: int) -> np.ndarray:
+    """The engine's admission bucket: ``hash_tokenize`` then LEFT-pad
+    to ``bucket``.  Module-level because the simulator's prefix-cache
+    model and the benchmarks must hash the exact same token buckets
+    the engine prefills (``simulate_continuous(prompt_tokens=...)``)."""
+    arr = np.zeros((bucket,), np.int32)
+    seq = hash_tokenize(text, vocab_size, bucket)
+    arr[bucket - len(seq):] = seq                   # left-pad
+    return arr
 
 
 @dataclasses.dataclass
@@ -136,7 +161,8 @@ class ServingEngine:
                  prefill: str = "stall",
                  chunk_size: int = 16,
                  token_budget: Optional[int] = None,
-                 use_pallas: Optional[bool] = None):
+                 use_pallas: Optional[bool] = None,
+                 prefix_cache: bool = False):
         if mode not in ("batch", "continuous"):
             raise ValueError(f"unknown mode {mode!r}")
         if kv not in ("contiguous", "paged"):
@@ -147,6 +173,9 @@ class ServingEngine:
             raise ValueError(f"unknown prefill mode {prefill!r}")
         if prefill == "chunked" and kv != "paged":
             raise ValueError('prefill="chunked" requires mode="continuous"'
+                             ', kv="paged"')
+        if prefix_cache and kv != "paged":
+            raise ValueError('prefix_cache=True requires mode="continuous"'
                              ', kv="paged"')
         self.params = params
         self.cfg = cfg
@@ -203,14 +232,20 @@ class ServingEngine:
         self._prefill = generate.make_prefill_fn(cfg, self.max_len)
         self._decode = generate.make_decode_fn(cfg)
         self._slot_prefill = generate.make_slot_prefill_fn(cfg, self.max_len)
+        self.prefix_cache_enabled = prefix_cache
         if kv == "paged":
             self._paged_prefill = generate.make_paged_prefill_fn(
                 cfg, self.max_len)
             self._paged_decode = generate.make_paged_decode_fn(
                 cfg, use_pallas)
-            if prefill == "chunked":
+            if prefill == "chunked" or prefix_cache:
+                # prefix-cached stall admission prefills only the
+                # uncached SUFFIX, which needs the traced-offset chunk
+                # executable even in prefill="stall" mode
                 self._chunk_prefill = generate.make_chunk_prefill_fn(
                     cfg, use_pallas)
+            if prefix_cache:
+                self._copy_block = generate.make_copy_block_fn(cfg)
         self.scheduler_overhead_s = 0.0
         # exposed for the slot-recycling tests: per-slot cache after the
         # last continuous serve, and the admission audit trail
@@ -219,6 +254,9 @@ class ServingEngine:
         # paged-KV state (populated by a paged continuous serve)
         self.paged_cache: Optional[PagedKVCache] = None
         self.allocator: Optional[BlockAllocator] = None
+        # live PrefixCache of the last serve (when prefix_cache=True);
+        # rebuilt per serve — cached block ids index that serve's pool
+        self.prefix_cache: Optional[PrefixCache] = None
         # memory-efficiency accounting (reset per serve)
         self.kv_util_samples: List[float] = []
         self._rejected_ids: set = set()
@@ -245,11 +283,8 @@ class ServingEngine:
         return st
 
     def _tokenize_padded(self, text: str) -> np.ndarray:
-        S = self.input_bucket
-        arr = np.zeros((S,), np.int32)
-        seq = hash_tokenize(text, self.cfg.vocab_size, S)
-        arr[S - len(seq):] = seq                        # left-pad
-        return arr
+        return tokenize_padded(text, self.cfg.vocab_size,
+                               self.input_bucket)
 
     def _cap(self, req: Request) -> int:
         cap = (req.max_new_tokens if req.max_new_tokens is not None
@@ -312,6 +347,7 @@ class ServingEngine:
         self.prefill_stall_s = 0.0
         self.prefill_stall_max_s = 0.0
         self.budget_trace = []
+        self.prefix_cache = None
         if self.mode == "continuous":
             if self.prefill == "chunked":
                 return self._serve_continuous_chunked(requests)
@@ -319,6 +355,8 @@ class ServingEngine:
         return self._serve_batch(requests)
 
     def _result(self, done: List[prio.SimTask], n: int) -> Dict:
+        ps = (self.prefix_cache.stats()
+              if self.prefix_cache is not None else {})
         rts = np.array([t.response_time for t in done])
         util = (np.array(self.kv_util_samples)
                 if self.kv_util_samples else np.zeros(1))
@@ -369,9 +407,20 @@ class ServingEngine:
             "prefill_stall_s": self.prefill_stall_s,
             "prefill_stall_max_s": self.prefill_stall_max_s,
             "budget_trace": list(self.budget_trace),
+            # prefix-cache metrics (kvcache.prefix counters; the
+            # simulator's cache model reports the identical fields —
+            # the engine-vs-sim parity tests compare them directly).
+            # hit_rate is hit / probed FULL prompt blocks across all
+            # admissions; cached_tokens_reused counts prompt tokens NOT
+            # recomputed; cow_copies counts full-match page copies.
+            "prefix_hit_rate": ps.get("prefix_hit_rate", 0.0),
+            "cached_tokens_reused": ps.get("cached_tokens_reused", 0),
+            "cow_copies": ps.get("cow_copies", 0),
+            "prefix_evictions": ps.get("prefix_evictions", 0),
             "kv": {"kind": self.kv, "num_slots": self.num_slots,
                    "block_size": self.kv_block_size,
-                   "num_blocks": self.kv_num_blocks},
+                   "num_blocks": self.kv_num_blocks,
+                   "prefix_cache": self.prefix_cache_enabled},
             "prefill": {"kind": self.prefill,
                         "chunk_size": self.chunk_size,
                         "token_budget": self.token_budget},
@@ -480,6 +529,7 @@ class ServingEngine:
         queue: List[prio.SimTask] = []
         bulk: List[prio.SimTask] = []
         done: List[prio.SimTask] = []
+        pc = None
         if paged:
             kvc = PagedKVCache(self.cfg, C, self.kv_num_blocks,
                                self.kv_block_size, self.max_len)
@@ -487,6 +537,9 @@ class ServingEngine:
             reserved = [0] * C       # per-slot worst-case block holdback
             cache = kvc.state
             self.paged_cache, self.allocator = kvc, alloc
+            if self.prefix_cache_enabled:
+                pc = PrefixCache(alloc, self.kv_block_size)
+                self.prefix_cache = pc
         else:
             cache = transformer.init_slot_cache(self.cfg, C, self.max_len)
         slot_task: List[Optional[prio.SimTask]] = [None] * C
@@ -532,10 +585,35 @@ class ServingEngine:
                         break
                 slot = slot_task.index(None)
                 stalled = any(t is not None for t in slot_task)
-                batch = {"tokens": jnp.asarray(
-                    self._tokenize_padded(task.task.text)[None, :])}
+                toks = self._tokenize_padded(task.task.text)
+                batch = {"tokens": jnp.asarray(toks[None, :])}
                 t0 = time.perf_counter()
-                if paged:
+                if paged and pc is not None:
+                    # longest-cached-prefix admission: matched blocks
+                    # are SHARED into the table (refcounted), the CoW
+                    # page copy covers a full-prompt match, and prefill
+                    # runs only from the first uncached position (the
+                    # traced-offset chunk executable)
+                    reserved[slot] = need
+                    tid = task.task.task_id
+                    plan = pc.admit(tid, toks)
+                    kvc.set_table(slot, alloc.table(tid))
+                    for src, dst in plan.cow:
+                        cache = self._copy_block(cache, jnp.int32(src),
+                                                 jnp.int32(dst))
+                    if plan.start == 0:
+                        cache, last_logits = self._paged_prefill(
+                            self.params, cache, batch, jnp.int32(slot),
+                            kvc.table_row(slot))
+                    else:
+                        cache, last_logits = self._chunk_prefill(
+                            self.params, cache,
+                            {"tokens": jnp.asarray(
+                                toks[None, plan.start:])},
+                            jnp.int32(slot), kvc.table_row(slot),
+                            jnp.int32(plan.start))
+                    pc.commit(tid, toks)
+                elif paged:
                     reserved[slot] = need
                     kvc.set_table(slot, alloc.allocate_n(
                         task.task.task_id, alloc.blocks_for(S)))
@@ -654,6 +732,10 @@ class ServingEngine:
         reserved = [0] * C           # per-slot worst-case block holdback
         cache = kvc.state
         self.paged_cache, self.allocator = kvc, alloc
+        pc = None
+        if self.prefix_cache_enabled:
+            pc = PrefixCache(alloc, self.kv_block_size)
+            self.prefix_cache = pc
         sched = ChunkScheduler(self.chunk_size, self.token_budget)
         slot_task: List[Optional[prio.SimTask]] = [None] * C  # decoding
         slot_gen = [0] * C
@@ -661,6 +743,7 @@ class ServingEngine:
         job_cap: Dict[int, int] = {}      # slot -> decode cap
         job_tokens: Dict[int, np.ndarray] = {}  # slot -> padded prompt
         job_row: Dict[int, jnp.ndarray] = {}    # slot -> device table row
+        job_start: Dict[int, int] = {}    # slot -> cached-prefix offset
         tokens = np.zeros((C, 1), np.int32)
         self.admission_log = []
         now = 0.0
@@ -704,15 +787,28 @@ class ServingEngine:
                 # on the trash page until prefill completes (the decode
                 # step writes a KV entry for every row, and a
                 # mid-prefill slot must not scribble real blocks)
-                alloc.allocate_n(task.task.task_id, alloc.blocks_for(S))
+                toks = self._tokenize_padded(task.task.text)
+                start = 0
+                if pc is not None:
+                    # matched prefix blocks are shared into the table;
+                    # the chunk job covers only the uncached suffix
+                    plan = pc.admit(task.task.task_id, toks)
+                    start = plan.start
+                    for src, dst in plan.cow:
+                        cache = self._copy_block(cache, jnp.int32(src),
+                                                 jnp.int32(dst))
+                else:
+                    alloc.allocate_n(task.task.task_id,
+                                     alloc.blocks_for(S))
                 row = np.full((kvc.max_blocks_per_seq,), kvc.trash_block,
                               np.int32)
                 tbl = alloc.table(task.task.task_id)
                 row[:len(tbl)] = tbl
                 job_row[slot] = jnp.asarray(row)
-                job_tokens[slot] = self._tokenize_padded(task.task.text)
+                job_tokens[slot] = toks
+                job_start[slot] = start
                 job_cap[slot] = cap
-                sched.add(task, slot, S,
+                sched.add(task, slot, S - start,
                           self.policy.assign_priority(task))
                 self.admission_log.append(
                     {"task_id": task.task.task_id, "slot": slot,
@@ -725,7 +821,11 @@ class ServingEngine:
             for plan in plans:
                 s = plan.job.slot
                 task = plan.job.task
-                chunk = job_tokens[s][plan.start:plan.start + plan.length]
+                # plan offsets are relative to the job (the uncached
+                # suffix); job_start shifts them to absolute prompt
+                # positions when a cached prefix was skipped
+                base = job_start[s] + plan.start
+                chunk = job_tokens[s][base:base + plan.length]
                 # per-plan, not the iteration-start snapshot: a slot a
                 # PRECEDING plan just activated waits out this chunk
                 # too (same semantics as the stall path's per-admission
@@ -735,7 +835,7 @@ class ServingEngine:
                 cache, last_logits = self._chunk_prefill(
                     self.params, cache,
                     {"tokens": jnp.asarray(chunk[None, :])},
-                    jnp.int32(s), job_row[s], jnp.int32(plan.start))
+                    jnp.int32(s), job_row[s], jnp.int32(base))
                 if plan.finishes:
                     first = int(jnp.argmax(last_logits))
                 else:
@@ -746,8 +846,10 @@ class ServingEngine:
                     self.prefill_stall_s += dt
                     iter_stall += dt
                 if plan.finishes:
+                    if pc is not None:
+                        pc.commit(task.task.task_id, job_tokens[s])
                     cap = job_cap.pop(s)
-                    del job_tokens[s], job_row[s]
+                    del job_tokens[s], job_row[s], job_start[s]
                     task.start, task.lane = now, "gpu"
                     task.task.start, task.task.lane = now, "gpu"
                     task.task.slot = s

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.models import model as model_lib
+from repro.models import model as model_lib, transformer
 
 PAD_ID = 0
 
@@ -99,6 +99,20 @@ def make_chunk_prefill_fn(cfg, use_pallas: Optional[bool] = None):
                                        use_pallas=use_pallas)
 
     return chunk_prefill_fn
+
+
+def make_copy_block_fn(cfg):
+    """Jitted copy-on-write page copy: duplicate physical block ``src``
+    into ``dst`` across every layer's page pools (the prefix cache's
+    full-match admission).  ``src``/``dst`` ride as traced operands, so
+    ONE executable serves every CoW copy."""
+    del cfg  # the cache pytree fixes every shape
+
+    @jax.jit
+    def copy_block_fn(cache, src, dst):
+        return transformer.copy_paged_block(cache, src, dst)
+
+    return copy_block_fn
 
 
 def generate(params, cfg, batch: dict, *, max_new_tokens: int,

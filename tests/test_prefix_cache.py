@@ -1,0 +1,375 @@
+"""Prefix-cache subsystem coverage (ISSUE 4).
+
+Acceptance properties:
+
+  * hashing — ``block_hashes`` is a longest-prefix chain at block
+    granularity: equal prefixes share hashes, the first divergent
+    block (and everything after it) differs, partial blocks are never
+    hashed;
+  * cache/allocator — matched blocks are shared (refcounted), a CoW
+    never touches the source block's remaining readers, LRU eviction
+    only reclaims blocks nobody references, and a ``clear()`` makes
+    the pool whole again;
+  * engine — with ``prefix_cache=True`` output is TOKEN-FOR-TOKEN
+    identical to the uncached path (stall and chunked prefill), repeat
+    prompts hit the cache, full-prompt matches exercise copy-on-write;
+  * engine-vs-sim — ``simulate_continuous(prefix_cache=True)`` drives
+    the same host-side ``PrefixCache`` + ``BlockAllocator`` and
+    reproduces the engine's completion order, hit/CoW/eviction
+    counters and per-step utilization trace bit for bit, including
+    under a tight block budget with memory rejections and cache
+    eviction pressure.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import datagen, personas, priority as prio
+from repro.core import scheduler as sched, simulator
+from repro.kvcache import BlockAllocator, PrefixCache, block_hashes
+from repro.serving.engine import Request, ServingEngine, tokenize_padded
+
+SLOTS = 3
+MAX_NEW = 6
+BUCKET = 8
+BS = 4
+CAPS = [2, 6, 1, 4, 6, 2, 3, 5, 1, 6, 2, 4]
+CHUNK = 3
+BUDGET = 8
+
+
+def _persona(batch_size=SLOTS):
+    return dataclasses.replace(personas.get_persona("bart"),
+                               batch_size=batch_size)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get_smoke_config("starcoder2-3b")
+    params = model_lib_init(cfg)
+    corpus = datagen.generate_corpus(
+        datagen.VARIANCE_MIXES["normal"], 64, seed=0)
+    train, test = datagen.train_test_split(corpus, train_frac=0.5)
+    persona = _persona()
+    profile = sched.offline_profile(train, persona, epochs=15)
+    # cycle a few distinct texts so identical padded buckets REPEAT —
+    # the repeats are what the prefix cache reuses (full matches, so
+    # the CoW path is exercised as well)
+    texts = [test[i % 4].text for i in range(len(CAPS))]
+    return cfg, params, persona, profile, texts
+
+
+def model_lib_init(cfg):
+    from repro.models import model as model_lib
+    return model_lib.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _requests(texts, caps):
+    return [Request(text=t, arrival=0.0, task_id=i, max_new_tokens=c)
+            for i, (t, c) in enumerate(zip(texts, caps))]
+
+
+def _sim_tasks(texts, caps, profile, persona, xi=2.0):
+    out = []
+    for i, (t, c) in enumerate(zip(texts, caps)):
+        u = profile.predictor.score(t)
+        d = prio.priority_point(0.0, len(t.split()), persona.phi,
+                                None, xi=xi)
+        out.append(prio.SimTask(
+            task=Request(text=t, arrival=0.0, task_id=i),
+            u=float(max(u, 0.0)), r=0.0, d=d,
+            input_len=float(len(t.split())), true_out_len=int(c)))
+    return out
+
+
+def _prompt_tokens_fn(cfg, bucket=BUCKET):
+    """The engine's exact admission-bucket recipe — what the parity
+    tests hand to ``simulate_continuous(prompt_tokens=...)``."""
+    def fn(task):
+        return tokenize_padded(task.task.text, cfg.vocab_size, bucket)
+    return fn
+
+
+def _engine(setup, policy_name="fifo", **kw):
+    cfg, params, persona, profile, _ = setup
+    pcfg = dataclasses.replace(profile.policy_config(), tau=1e18)
+    return ServingEngine(
+        params, cfg, sched.POLICIES[policy_name](persona, pcfg), profile,
+        input_bucket=BUCKET, max_new_tokens=MAX_NEW, mode="continuous",
+        eos_id=-1, kv="paged", kv_block_size=BS, **kw)
+
+
+# ---------------------------------------------------------------------------
+# hash chain
+# ---------------------------------------------------------------------------
+
+
+def test_block_hashes_longest_prefix_chain():
+    a = list(range(1, 17))                      # 4 full blocks of 4
+    b = a[:8] + [99] + a[9:]                    # diverges in block 2
+    ha, hb = block_hashes(a, 4), block_hashes(b, 4)
+    assert len(ha) == len(hb) == 4
+    assert ha[:2] == hb[:2]                     # shared prefix blocks
+    assert ha[2] != hb[2] and ha[3] != hb[3]    # divergence propagates
+    assert block_hashes(a[:10], 4) == ha[:2]    # partial block unhashed
+    assert block_hashes(a[:3], 4) == []         # shorter than one block
+    assert block_hashes(a, 4) == ha             # deterministic
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache + allocator (host-side, no device work)
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_share_commit_and_free():
+    alloc = BlockAllocator(16, 4)
+    pc = PrefixCache(alloc, 4)
+    toks = list(range(1, 11))                   # 10 tokens: 2 full + tail
+    adm = pc.admit(0, toks)
+    assert adm.start == 0 and adm.matched_blocks == 0 and not adm.cow
+    assert len(alloc.table(0)) == 3             # blocks_for(10, 4)
+    pc.commit(0, toks)
+    assert pc.num_cached_blocks == 2            # full blocks only
+    # second sequence with the same prompt: shares both full blocks
+    adm = pc.admit(1, toks)
+    assert adm.start == 8 and adm.matched_blocks == 2 and not adm.cow
+    assert alloc.table(1)[:2] == alloc.table(0)[:2]
+    assert alloc.table(1)[2] != alloc.table(0)[2]   # private tail
+    for blk in alloc.table(1)[:2]:
+        assert alloc.refcount(blk) == 3         # cache + two sequences
+    # freeing the FIRST owner must not free shared blocks
+    alloc.free_sequence(0)
+    for blk in alloc.table(1)[:2]:
+        assert alloc.refcount(blk) == 2
+    alloc.free_sequence(1)
+    assert pc.clear() == 2
+    alloc.check_no_leaks()
+
+
+def test_prefix_cache_full_match_cow():
+    alloc = BlockAllocator(16, 4)
+    pc = PrefixCache(alloc, 4)
+    toks = list(range(1, 9))                    # exactly 2 full blocks
+    pc.admit(0, toks)
+    pc.commit(0, toks)
+    shared = list(alloc.table(0))
+    adm = pc.admit(1, toks)
+    # full-prompt match: last position recomputed => CoW of last block
+    assert adm.matched_blocks == 2 and adm.start == 7
+    assert len(adm.cow) == 1
+    src, dst = adm.cow[0]
+    assert src == shared[1] and alloc.table(1) == [shared[0], dst]
+    assert alloc.refcount(src) == 2             # cache + seq 0 untouched
+    assert alloc.refcount(dst) == 1             # private copy
+    assert pc.cow_copies == 1
+    alloc.free_sequence(0)
+    alloc.free_sequence(1)
+    pc.clear()
+    alloc.check_no_leaks()
+
+
+def test_prefix_cache_lru_eviction_only_under_pressure():
+    alloc = BlockAllocator(5, 4)
+    pc = PrefixCache(alloc, 4)
+    a, b = [1, 2, 3, 4], [5, 6, 7, 8]
+    pc.admit(0, a), pc.commit(0, a)
+    alloc.free_sequence(0)
+    pc.admit(1, b), pc.commit(1, b)
+    alloc.free_sequence(1)
+    assert pc.num_cached_blocks == 2 and alloc.num_free == 3
+    # touching `a` makes `b` the LRU entry; the full match CoWs one
+    # block (position 3 recomputed for its logits)
+    adm = pc.admit(2, a)
+    assert adm.matched_blocks == 1 and pc.cow_copies == 1
+    assert alloc.num_free == 2
+    # no eviction so far: pressure only — and then exactly ONE (b's
+    # LRU block), not a's still-cached entry
+    assert pc.evictions == 0
+    alloc.allocate_n(3, 3)
+    assert pc.evictions == 1 and pc.num_cached_blocks == 1
+    alloc.free_sequence(3)                      # release the pressure
+    assert pc.admit(4, b).matched_blocks == 0   # b was evicted
+    assert pc.admit(5, a).matched_blocks == 1   # a survived
+    for s in (2, 4, 5):
+        alloc.free_sequence(s)
+    pc.clear()
+    alloc.check_no_leaks()
+
+
+def test_prefix_cache_hash_collision_degrades_to_miss():
+    """A hit is honored only on verbatim token match: forging a
+    colliding entry (same hash, different content) must read as a
+    MISS, never as silent reuse of wrong KV."""
+    alloc = BlockAllocator(8, 4)
+    pc = PrefixCache(alloc, 4)
+    toks = [1, 2, 3, 4]
+    pc.admit(0, toks)
+    pc.commit(0, toks)
+    h = block_hashes(toks, 4)[0]
+    blk, _ = pc._entries[h]
+    pc._entries[h] = (blk, (9, 9, 9, 9))        # forged collision
+    adm = pc.admit(1, toks)
+    assert adm.matched_blocks == 0 and not adm.cow
+    alloc.free_sequence(0)
+    alloc.free_sequence(1)
+    pc.clear()
+    alloc.check_no_leaks()
+
+
+def test_prefix_cache_never_evicts_referenced_blocks():
+    from repro.kvcache.allocator import OutOfBlocksError
+    alloc = BlockAllocator(2, 4)
+    pc = PrefixCache(alloc, 4)
+    toks = [1, 2, 3, 4]
+    pc.admit(0, toks), pc.commit(0, toks)       # block 0: seq 0 + cache
+    alloc.allocate(1)                           # block 1: private
+    # pool exhausted and the only cached block is still referenced by
+    # seq 0 -> reclaim must refuse rather than evict a read block
+    with pytest.raises(OutOfBlocksError):
+        alloc.allocate(2)
+    assert pc.evictions == 0
+    alloc.free_sequence(0)
+    alloc.free_sequence(1)
+    pc.clear()
+    alloc.check_no_leaks()
+
+
+# ---------------------------------------------------------------------------
+# engine: token parity, metrics, CoW
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("prefill_kw", [
+    {},
+    dict(prefill="chunked", chunk_size=CHUNK, token_budget=BUDGET),
+], ids=["stall", "chunked"])
+def test_engine_prefix_cache_token_parity(setup, prefill_kw):
+    """The acceptance gate: prefix_cache=True reuses most prompt blocks
+    (repeat prompts, CoW on the full matches) yet every request's
+    greedy output is identical to the uncached engine's."""
+    _, _, _, _, texts = setup
+    res = {}
+    for on in (False, True):
+        eng = _engine(setup, prefix_cache=on, **prefill_kw)
+        res[on] = eng.serve(_requests(texts, CAPS))
+        if on:
+            assert eng.prefix_cache is not None
+            eng.prefix_cache.clear()
+        eng.allocator.check_no_leaks()
+    cold = {t.task.task_id: t.task for t in res[False]["tasks"]}
+    warm = {t.task.task_id: t.task for t in res[True]["tasks"]}
+    for i, c in enumerate(CAPS):
+        assert warm[i].out_len == cold[i].out_len == c
+        assert warm[i].out_tokens == cold[i].out_tokens
+    # repeats of 4 distinct prompts: the cache must actually hit, reuse
+    # tokens, and exercise copy-on-write (identical buckets fully match)
+    assert res[True]["prefix_hit_rate"] > 0.5
+    assert res[True]["cached_tokens_reused"] > 0
+    assert res[True]["cow_copies"] > 0
+    assert res[False]["prefix_hit_rate"] == 0.0
+    assert res[False]["cow_copies"] == 0
+    assert res[True]["kv"]["prefix_cache"] is True
+
+
+def test_engine_prefix_cache_stall_preserves_completion_order(setup):
+    """Stall admission: caching changes WHEN prefill compute happens
+    but not the admission/eviction schedule, so with simultaneous
+    arrivals the completion order matches the uncached engine's."""
+    _, _, _, _, texts = setup
+    orders = {}
+    for on in (False, True):
+        eng = _engine(setup, prefix_cache=on)
+        orders[on] = eng.serve(_requests(texts, CAPS))["completion_order"]
+    assert orders[True] == orders[False]
+
+
+# ---------------------------------------------------------------------------
+# engine-vs-sim parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy_name", ["fifo", "rt-lm"])
+@pytest.mark.parametrize("prefill_kw", [
+    {},
+    dict(prefill="chunked", chunk_size=CHUNK, token_budget=BUDGET),
+], ids=["stall", "chunked"])
+def test_engine_vs_sim_prefix_parity(setup, policy_name, prefill_kw):
+    """The simulator's prefix-cache model (the same PrefixCache class,
+    driven host-side) reproduces the engine's completion order, hit /
+    CoW counters and per-step utilization trace exactly."""
+    cfg, params, persona, profile, texts = setup
+    pcfg = dataclasses.replace(profile.policy_config(), tau=1e18)
+    eng = _engine(setup, policy_name, prefix_cache=True, **prefill_kw)
+    res = eng.serve(_requests(texts, CAPS))
+    sim = simulator.simulate_continuous(
+        _sim_tasks(texts, CAPS, profile, persona),
+        sched.POLICIES[policy_name](persona, pcfg),
+        num_slots=SLOTS, kv_block_size=BS,
+        kv_num_blocks=eng.kv_num_blocks, prompt_len=BUCKET,
+        prefix_cache=True, prompt_tokens=_prompt_tokens_fn(cfg),
+        **prefill_kw)
+    assert res["completion_order"] == [t.task.task_id for t in sim.tasks]
+    assert res["prefix_hit_rate"] == sim.prefix_hit_rate
+    assert res["cached_tokens_reused"] == sim.cached_tokens_reused
+    assert res["cow_copies"] == sim.cow_copies
+    assert res["prefix_evictions"] == sim.prefix_evictions
+    np.testing.assert_allclose(res["kv_util_peak"], sim.kv_util_peak)
+    np.testing.assert_allclose(res["kv_util_mean"], sim.kv_util_mean)
+    if prefill_kw:
+        assert res["budget_trace"] == sim.budget_trace
+
+
+def test_engine_vs_sim_prefix_parity_tight_budget(setup):
+    """Memory rejections, LRU cache eviction and prefix sharing
+    compose: under a pool too small to keep every cached block, engine
+    and simulator still decide identically."""
+    cfg, params, persona, profile, texts = setup
+    bs, nb, slots = 4, 7, 4
+    pcfg = dataclasses.replace(profile.policy_config(), tau=1e18)
+    eng = _engine(setup, num_slots=slots, kv_num_blocks=nb,
+                  prefix_cache=True)
+    res = eng.serve(_requests(texts, CAPS))
+    assert res["rejected_for_memory"] > 0        # budget actually binds
+    assert res["prefix_evictions"] > 0           # cache under pressure
+    eng.prefix_cache.clear()
+    eng.allocator.check_no_leaks()
+    sim = simulator.simulate_continuous(
+        _sim_tasks(texts, CAPS, profile, persona),
+        sched.POLICIES["fifo"](persona, pcfg),
+        num_slots=slots, kv_block_size=bs, kv_num_blocks=nb,
+        prompt_len=BUCKET, prefix_cache=True,
+        prompt_tokens=_prompt_tokens_fn(cfg))
+    assert res["completion_order"] == [t.task.task_id for t in sim.tasks]
+    assert res["rejected_for_memory"] == sim.kv_rejected
+    assert res["prefix_evictions"] == sim.prefix_evictions
+    assert res["prefix_hit_rate"] == sim.prefix_hit_rate
+    assert res["cached_tokens_reused"] == sim.cached_tokens_reused
+    np.testing.assert_allclose(res["kv_util_peak"], sim.kv_util_peak)
+    np.testing.assert_allclose(res["kv_util_mean"], sim.kv_util_mean)
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_validation():
+    cfg = configs.get_smoke_config("starcoder2-3b")
+    persona = _persona()
+    policy = sched.POLICIES["fifo"](persona, sched.PolicyConfig())
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(None, cfg, policy, None, mode="continuous",
+                      kv="contiguous", prefix_cache=True)
+    with pytest.raises(ValueError, match="block-budget"):
+        simulator.simulate_continuous([], policy, prompt_len=8,
+                                      prefix_cache=True)
+    with pytest.raises(ValueError, match="prompt_tokens"):
+        simulator.simulate_continuous(
+            [], policy, prompt_len=8, kv_block_size=4, kv_num_blocks=32,
+            prefix_cache=True)
+    with pytest.raises(ValueError, match="block_size"):
+        PrefixCache(BlockAllocator(8, 4), 8)

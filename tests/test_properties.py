@@ -15,7 +15,8 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (personas, priority as prio, rulegen,  # noqa: E402
                         scheduler as sched, simulator, workload)
-from repro.kvcache import BlockAllocator, blocks_for_tokens  # noqa: E402
+from repro.kvcache import (BlockAllocator, PrefixCache,  # noqa: E402
+                           blocks_for_tokens)
 from repro.kvcache.allocator import OutOfBlocksError  # noqa: E402
 from repro.kvcache.paged import (gather_tokens,  # noqa: E402
                                  scatter_prefill, scatter_token)
@@ -171,6 +172,117 @@ def test_allocator_never_double_allocates(num_blocks, commands):
         assert a.num_used == sum(len(b) for b in live.values())
     for seq in list(live):
         a.free_sequence(seq)
+    a.check_no_leaks()
+
+
+@settings(max_examples=40, deadline=None)
+@given(num_blocks=st.integers(2, 24), data=st.data())
+def test_refcount_sharing_and_cow_never_corrupt_readers(num_blocks, data):
+    """kvcache.BlockAllocator refcounts (ISSUE 4): under arbitrary
+    interleavings of allocate / share / write / free, (1) no block
+    still referenced by any sequence is ever freed, and (2) a write to
+    a shared block goes through copy-on-write and never changes what
+    any OTHER holder reads.  ``content`` shadows each physical block's
+    value; ``view`` is what each sequence must keep reading."""
+    a = BlockAllocator(num_blocks, 16)
+    content = {}                       # block -> last written value
+    view = {}                          # seq -> values it must read
+    tables = {}                        # seq -> mirror of a.table(seq)
+    val = 0
+    for _ in range(data.draw(st.integers(1, 60))):
+        op = data.draw(st.sampled_from(["alloc", "share", "write",
+                                        "free"]))
+        seq = data.draw(st.integers(0, 5))
+        if op == "alloc":
+            if a.num_free == 0:
+                continue
+            val += 1
+            blk = a.allocate(seq)
+            content[blk] = val
+            tables.setdefault(seq, []).append(blk)
+            view.setdefault(seq, []).append(val)
+        elif op == "share":
+            donors = [s for s, t in tables.items() if t and s != seq]
+            if not donors:
+                continue
+            d = data.draw(st.sampled_from(donors))
+            i = data.draw(st.integers(0, len(tables[d]) - 1))
+            blk = tables[d][i]
+            a.share(seq, blk)
+            tables.setdefault(seq, []).append(blk)
+            view.setdefault(seq, []).append(content[blk])
+        elif op == "write":
+            holders = [s for s, t in tables.items() if t]
+            if not holders:
+                continue
+            s2 = data.draw(st.sampled_from(holders))
+            i = data.draw(st.integers(0, len(tables[s2]) - 1))
+            blk = tables[s2][i]
+            val += 1
+            if a.refcount(blk) > 1:    # divergent write -> CoW
+                if a.num_free == 0:
+                    continue
+                src, dst = a.cow_block(s2, i)
+                assert src == blk and a.refcount(dst) == 1
+                content[dst] = val     # copy + write the private copy
+                tables[s2][i] = dst
+            else:
+                content[blk] = val     # private block: write in place
+            view[s2][i] = val
+        else:
+            tables.pop(seq, None)
+            view.pop(seq, None)
+            a.free_sequence(seq)
+        assert a.num_free + a.num_used == num_blocks
+        for s, t in tables.items():
+            for i, blk in enumerate(t):
+                assert a.refcount(blk) >= 1, "freed a referenced block"
+                assert content[blk] == view[s][i], \
+                    "a write became visible to another reader"
+    for s in list(tables):
+        a.free_sequence(s)
+    a.check_no_leaks()
+
+
+@settings(max_examples=40, deadline=None)
+@given(bs=st.integers(1, 4), num_blocks=st.integers(4, 24),
+       data=st.data())
+def test_prefix_cache_admit_commit_invariants(bs, num_blocks, data):
+    """kvcache.PrefixCache over random prompts from a tiny alphabet
+    (forcing prefix collisions): matches are block-aligned longest
+    prefixes that leave at least one position to recompute, tables are
+    complete, eviction only fires under pressure, and after all
+    sequences die a ``clear()`` makes the pool whole."""
+    a = BlockAllocator(num_blocks, bs)
+    pc = PrefixCache(a, bs)
+    live = []
+    seq = 0
+    for _ in range(data.draw(st.integers(1, 25))):
+        if live and data.draw(st.booleans()):
+            a.free_sequence(live.pop(data.draw(
+                st.integers(0, len(live) - 1))))
+            continue
+        S = data.draw(st.integers(1, 2 * bs + 2))
+        toks = data.draw(st.lists(st.integers(0, 2), min_size=S,
+                                  max_size=S))
+        if blocks_for_tokens(S, bs) > num_blocks:
+            continue
+        try:
+            adm = pc.admit(seq, toks)
+        except OutOfBlocksError:
+            a.free_sequence(seq)       # drop any partially shared refs
+            seq += 1
+            continue                   # pool genuinely exhausted
+        assert 0 <= adm.start <= max(S - 1, 0)
+        assert adm.start < S           # >= 1 position always recomputed
+        assert len(a.table(seq)) == blocks_for_tokens(S, bs)
+        assert len(adm.cow) == (1 if adm.matched_blocks * bs == S else 0)
+        pc.commit(seq, toks)
+        live.append(seq)
+        seq += 1
+    for s in live:
+        a.free_sequence(s)
+    pc.clear()
     a.check_no_leaks()
 
 
