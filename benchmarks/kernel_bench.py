@@ -1,6 +1,12 @@
 """Kernel microbenchmarks: chunked-jnp substrate path wall-clock on CPU
 (the Pallas kernels themselves are TPU artifacts; interpret mode is a
-correctness harness, not a performance proxy — see EXPERIMENTS.md)."""
+correctness harness, not a performance proxy — see EXPERIMENTS.md).
+
+``ragged_prefill_bench`` measures the DISPATCH-count lever directly:
+one fused ragged launch per iteration versus the pre-fused engine's
+per-chunk loop (one jnp scatter + one attention call per chunk), both
+on the exact jnp substrate paths — the regime where the real engine on
+a CPU host pays O(#chunks) dispatch overhead per iteration."""
 
 from __future__ import annotations
 
@@ -8,8 +14,10 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops, ref
+from repro.kvcache import paged as paged_lib
 
 
 def _time(fn, *args, reps=5, **kw):
@@ -39,6 +47,88 @@ def attention_bench():
             "chunked_ms": round(t_sub * 1e3, 2),
             "naive_ms": round(t_ref * 1e3, 2),
             "chunked_gflops": round(flops / t_sub / 1e9, 1),
+        }
+    return rows
+
+
+def _ragged_case(lens, *, H, KV, D, bs, nb, seed=0):
+    """One iteration's worth of ragged chunks (mixed lengths, own block
+    tables, ragged prior context) in both layouts: the fused padded
+    batch and the per-chunk list."""
+    C = len(lens)
+    Tp = 1
+    while Tp < max(lens):
+        Tp *= 2
+    N = C * nb + 1
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (C, Tp, H, D), jnp.float32)
+    kn = jax.random.normal(ks[1], (C, Tp, KV, D), jnp.float32)
+    vn = jax.random.normal(ks[2], (C, Tp, KV, D), jnp.float32)
+    kp = jax.random.normal(ks[3], (N, bs, KV, D), jnp.float32)
+    vp = jax.random.normal(ks[4], (N, bs, KV, D), jnp.float32)
+    tables = jnp.arange(C * nb, dtype=jnp.int32).reshape(C, nb)
+    rng = np.random.default_rng(seed + C)
+    meta, off = [], 0
+    for c, ln in enumerate(lens):
+        ctx = int(rng.integers(0, nb * bs - ln + 1))
+        meta.append([c, ctx, ln, off])
+        off += ln
+    return q, kn, vn, kp, vp, tables, jnp.asarray(meta, jnp.int32)
+
+
+def ragged_prefill_bench(reps=20):
+    """Fused one-launch ragged prefill vs the per-chunk loop the engine
+    used to run (one ``scatter_chunk`` + one ``chunked_prefill_attention``
+    call per chunk), at mixed chunk sizes and growing chunk counts.
+    Both columns use the exact jnp substrate paths (``use_pallas=False``)
+    — on this dispatch-bound CPU host the per-chunk column pays
+    2 * #chunks jitted dispatches per iteration where the fused column
+    pays one."""
+    H, KV, D, bs, nb = 4, 2, 32, 16, 10
+    sizes = [16, 64, 128]
+
+    import functools
+
+    # one executable per chunk LENGTH, as the pre-fused engine traced
+    @functools.partial(jax.jit, static_argnames=("ln",))
+    def per_chunk_once(q, kn, vn, kp, vp, table_row, ctx, *, ln):
+        nk = paged_lib.scatter_chunk(kp, kn[:ln], table_row, ctx)
+        nv = paged_lib.scatter_chunk(vp, vn[:ln], table_row, ctx)
+        out = ops.chunked_prefill_attention(
+            q[None, :ln], nk, nv, table_row[None], ctx[None],
+            use_pallas=False)
+        return out, nk, nv
+
+    rows = {}
+    for C in (1, 2, 4, 8, 16):
+        lens = [sizes[i % len(sizes)] for i in range(C)]
+        q, kn, vn, kp, vp, tables, meta = _ragged_case(
+            lens, H=H, KV=KV, D=D, bs=bs, nb=nb, seed=C)
+
+        def fused():
+            return ops.ragged_chunked_prefill(
+                q, kn, vn, kp, vp, tables, meta, use_pallas=False)
+
+        def loop():
+            nk, nv = kp, vp
+            outs = []
+            for c, ln in enumerate(lens):
+                out, nk, nv = per_chunk_once(
+                    q[c], kn[c], vn[c], nk, nv, tables[c],
+                    meta[c, 1], ln=ln)
+                outs.append(out)
+            return outs, nk, nv
+
+        t_fused = _time(fused, reps=reps)
+        t_loop = _time(loop, reps=reps)
+        rows[f"C{C}_mixed{min(lens)}-{max(lens)}"] = {
+            "num_chunks": C,
+            "chunk_lens": lens,
+            "fused_ms": round(t_fused * 1e3, 3),
+            "per_chunk_ms": round(t_loop * 1e3, 3),
+            "fused_dispatches": 1,
+            "per_chunk_dispatches": 2 * C,
+            "speedup": round(t_loop / t_fused, 2),
         }
     return rows
 

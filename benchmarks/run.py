@@ -37,19 +37,31 @@ def run_paper_tables(only=None):
 
 
 def run_kernels(only=None):
-    if only and only not in ("kernel_attention", "kernel_rmsnorm"):
+    if only and only not in ("kernel_attention", "kernel_rmsnorm",
+                             "ragged_prefill_kernel"):
         return
-    t0 = time.time()
-    rows = kernel_bench.attention_bench()
-    common.save("kernel_attention", rows)
-    best = max(v["chunked_gflops"] for v in rows.values())
-    common.emit("kernel_attention", time.time() - t0,
-                f"chunked_best={best}gflops_cpu")
-    t0 = time.time()
-    rows = kernel_bench.rmsnorm_bench()
-    common.save("kernel_rmsnorm", rows)
-    best = max(v["effective_GBps"] for v in rows.values())
-    common.emit("kernel_rmsnorm", time.time() - t0, f"best={best}GBps_cpu")
+    if only is None or only == "kernel_attention":
+        t0 = time.time()
+        rows = kernel_bench.attention_bench()
+        common.save("kernel_attention", rows)
+        best = max(v["chunked_gflops"] for v in rows.values())
+        common.emit("kernel_attention", time.time() - t0,
+                    f"chunked_best={best}gflops_cpu")
+    if only is None or only == "kernel_rmsnorm":
+        t0 = time.time()
+        rows = kernel_bench.rmsnorm_bench()
+        common.save("kernel_rmsnorm", rows)
+        best = max(v["effective_GBps"] for v in rows.values())
+        common.emit("kernel_rmsnorm", time.time() - t0,
+                    f"best={best}GBps_cpu")
+    if only is None or only == "ragged_prefill_kernel":
+        t0 = time.time()
+        rows = kernel_bench.ragged_prefill_bench()
+        common.save("ragged_prefill_kernel", rows)
+        at4 = [v for v in rows.values() if v["num_chunks"] >= 4]
+        worst = min(v["speedup"] for v in at4)
+        common.emit("ragged_prefill_kernel", time.time() - t0,
+                    f"min_speedup_at_ge4_chunks={worst}x")
 
 
 def run_roofline(only=None):

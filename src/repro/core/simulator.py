@@ -47,7 +47,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.kvcache import BlockAllocator, PrefixCache, blocks_for_tokens
-from repro.prefill import ChunkScheduler
+from repro.prefill import ChunkScheduler, pack_plans
 
 from . import scheduler as sched_lib
 from .personas import Persona
@@ -81,6 +81,18 @@ class SimResult:
     # chunked-prefill mode: per-iteration (decode_tokens,
     # prefill_tokens) — the engine records the identical trace
     budget_trace: List = dataclasses.field(default_factory=list)
+    # dispatch accounting (engine-side mirrors in _result): total
+    # prefill launches and per-iteration launch counts — the fused
+    # chunked engine issues exactly ONE launch per iteration with
+    # scheduled chunks (trace aligned with budget_trace, entries <= 1);
+    # stall mode records admission-burst sizes; batch mode one launch
+    # per executed batch.  exec_cache_* mirror the engine's fused
+    # executable padded-shape-key novelty (ChunkBatch.shape_key via
+    # the SAME pack_plans call, so parity is straight equality).
+    prefill_dispatches: int = 0
+    prefill_dispatch_trace: List = dataclasses.field(default_factory=list)
+    exec_cache_hits: int = 0
+    exec_cache_misses: int = 0
     # prefix-cache model (kvcache.prefix driven host-side, the same
     # class the engine drives): counter definitions match
     # ServingEngine._result field for field, so parity on the
@@ -174,6 +186,8 @@ def simulate(tasks: Sequence[SimTask], policy: sched_lib.Policy, *,
     overhead_total = 0.0
     ttfts: List[float] = []
     itls: List[float] = []
+    dispatches = 0                  # one prefill launch per run batch
+    dispatch_trace: List[int] = []
     i = 0
     C = persona.batch_size
 
@@ -205,11 +219,15 @@ def simulate(tasks: Sequence[SimTask], policy: sched_lib.Policy, *,
                 gpu.run_batch(gpu_batch, now + oh, persona, "gpu",
                               ttfts, itls)
                 done.extend(gpu_batch)
+                dispatches += 1
+                dispatch_trace.append(1)
                 progressed = True
         if cpu.free_at <= now + 1e-12 and cpu_queue:
             batch, cpu_queue = cpu_queue[:C], cpu_queue[C:]
             cpu.run_batch(batch, now, persona, "cpu", ttfts, itls)
             done.extend(batch)
+            dispatches += 1
+            dispatch_trace.append(1)
             progressed = True
 
         if progressed:
@@ -230,7 +248,9 @@ def simulate(tasks: Sequence[SimTask], policy: sched_lib.Policy, *,
     return SimResult(tasks=done, makespan=makespan,
                      overhead_s=overhead_total,
                      ttft_p50=_pct(ttfts, 0.50), ttft_p99=_pct(ttfts, 0.99),
-                     itl_p50=_pct(itls, 0.50), itl_p99=_pct(itls, 0.99))
+                     itl_p50=_pct(itls, 0.50), itl_p99=_pct(itls, 0.99),
+                     prefill_dispatches=dispatches,
+                     prefill_dispatch_trace=dispatch_trace)
 
 
 def simulate_continuous(tasks: Sequence[SimTask],
@@ -340,6 +360,11 @@ def simulate_continuous(tasks: Sequence[SimTask],
     rejected_ids: set = set()       # distinct tasks deferred for memory
     kv_util: List[float] = []
     budget_trace: List = []
+    dispatches = 0                  # prefill launches (engine mirror)
+    dispatch_trace: List[int] = []
+    exec_keys: set = set()          # fused-executable shape-key novelty
+    exec_hits = 0
+    exec_misses = 0
     ttfts: List[float] = []
     itls: List[float] = []
     last_tok = [0.0] * C            # last token emission time per slot
@@ -414,9 +439,21 @@ def simulate_continuous(tasks: Sequence[SimTask],
                           policy.assign_priority(task))
                 progressed = True
 
-            # chunk phase: pack the budget, decode tokens first
+            # chunk phase: pack the budget, decode tokens first.  The
+            # engine executes the whole plan as ONE fused ragged launch
+            # (pack_plans -> ChunkBatch); mirror its dispatch count and
+            # executable-cache shape-key novelty from the same call —
+            # the latency model still charges per-chunk token cost.
             active0 = [s for s in range(C) if slots[s] is not None]
             plans = sched.schedule(len(active0)) if sched.has_jobs else []
+            chunk_batch = pack_plans(plans)
+            if chunk_batch is not None:
+                dispatches += 1
+                if chunk_batch.shape_key in exec_keys:
+                    exec_hits += 1
+                else:
+                    exec_keys.add(chunk_batch.shape_key)
+                    exec_misses += 1
             for plan in plans:
                 now += persona.item_time * plan.length / prompt_len
                 if plan.finishes:
@@ -440,9 +477,13 @@ def simulate_continuous(tasks: Sequence[SimTask],
             if plans or any(t is not None for t in slots):
                 budget_trace.append(
                     (len(active0), sum(p.length for p in plans)))
+                dispatch_trace.append(1 if plans else 0)
         else:
             # admissions into freed slots (uncertainty-aware, stalling
-            # the loop for one amortized prefill per admission)
+            # the loop for one amortized prefill per admission — and
+            # one prefill LAUNCH per admission, the burst the fused
+            # chunked path collapses to one per iteration)
+            iter_launches = 0
             while queue and None in slots:
                 running = [t for t in slots if t is not None]
                 status, task, need = _admit_one(running)
@@ -450,6 +491,8 @@ def simulate_continuous(tasks: Sequence[SimTask],
                     break
                 if status == "cpu":
                     continue
+                dispatches += 1
+                iter_launches += 1
                 if pc is not None:
                     # prefill cost scales with the uncached suffix —
                     # the same admit/commit calls the engine's stall
@@ -476,6 +519,8 @@ def simulate_continuous(tasks: Sequence[SimTask],
                     if kv_model:
                         reserved[s] = need
                 progressed = True
+            if iter_launches:
+                dispatch_trace.append(iter_launches)
 
         if any(t is not None for t in slots):
             active = [s for s in range(C) if slots[s] is not None]
@@ -529,6 +574,10 @@ def simulate_continuous(tasks: Sequence[SimTask],
             batch, cpu_queue = cpu_queue[:C], cpu_queue[C:]
             cpu.run_batch(batch, now, persona, "cpu", ttfts, itls)
             done.extend(batch)
+            # bulk-lane launches count in the total only: the trace is
+            # the decode loop's per-iteration launch profile (engine
+            # mirror — _run_batch does the same in continuous modes)
+            dispatches += 1
             progressed = True
 
         if progressed:
@@ -553,6 +602,10 @@ def simulate_continuous(tasks: Sequence[SimTask],
                      ttft_p50=_pct(ttfts, 0.50), ttft_p99=_pct(ttfts, 0.99),
                      itl_p50=_pct(itls, 0.50), itl_p99=_pct(itls, 0.99),
                      budget_trace=budget_trace,
+                     prefill_dispatches=dispatches,
+                     prefill_dispatch_trace=dispatch_trace,
+                     exec_cache_hits=exec_hits,
+                     exec_cache_misses=exec_misses,
                      prefix_hit_rate=pstats.get("prefix_hit_rate", 0.0),
                      cached_tokens_reused=pstats.get(
                          "cached_tokens_reused", 0),

@@ -13,6 +13,16 @@ oracle (ref.py):
   paged_decode_attention   — flash-decode over a block table (paged KV
                              cache; indirect page gather via
                              scalar-prefetch BlockSpec index_map)
+  chunked_prefill_attention — one prompt chunk over a paged prefix
+                             (block-table scalar prefetch, (T*G, D)
+                             query tile)
+  ragged_chunked_prefill   — EVERY scheduled prefill chunk of an
+                             engine iteration in ONE launch: packed
+                             ragged queries, per-chunk
+                             [slot, ctx_len, chunk_len, q_offset]
+                             scalar-prefetch metadata rows, and the
+                             chunk K/V scatter fused in via aliased
+                             page outputs
   rmsnorm                  — fused normalization (one HBM round-trip)
 
 Validated in interpret mode on CPU (tests/test_kernels.py sweeps

@@ -23,7 +23,8 @@ from repro.models import layers as jlayers
 
 from . import (chunked_prefill_attention as _cpa,
                decode_attention as _fd, flash_attention as _fa,
-               paged_decode_attention as _pfd, ref as _ref, rmsnorm as _rn)
+               paged_decode_attention as _pfd,
+               ragged_chunked_prefill as _rcp, ref as _ref, rmsnorm as _rn)
 
 
 def _default_interpret() -> bool:
@@ -109,6 +110,30 @@ def chunked_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
     return _cpa.chunked_prefill_attention(q, k_pages, v_pages,
                                           block_tables, ctx_lens,
                                           interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def ragged_chunked_prefill(q, k_new, v_new, k_pages, v_pages, block_tables,
+                           meta, *, use_pallas: bool = True,
+                           interpret: Optional[bool] = None):
+    """Fused ragged chunked prefill: ALL scheduled chunks in one launch.
+
+    q: (C,T_pad,H,D) per-chunk padded queries; k_new/v_new:
+    (C,T_pad,KV,D) each chunk's fresh K/V; pages: (N,bs,KV,D);
+    block_tables: (C,nb) i32; meta: (C,4) i32 rows
+    ``[slot, ctx_len, chunk_len, q_offset]``.  Returns (out,
+    new_k_pages, new_v_pages) — the chunk K/V scatter is fused in
+    (aliased page outputs in the kernel; a drop-mode jnp scatter in the
+    ``use_pallas=False`` oracle path).  Output rows past ``chunk_len``
+    are undefined padding.
+    """
+    if not use_pallas:
+        return _ref.ragged_chunked_prefill_ref(q, k_new, v_new, k_pages,
+                                               v_pages, block_tables, meta)
+    interp = _default_interpret() if interpret is None else interpret
+    return _rcp.ragged_chunked_prefill(q, k_new, v_new, k_pages, v_pages,
+                                       block_tables, meta,
+                                       interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -1,0 +1,235 @@
+"""Fused ragged chunked-prefill: every scheduled chunk in ONE launch.
+
+The chunked-prefill engine used to issue one jnp scatter PLUS one
+``chunked_prefill_attention`` launch per chunk per request — O(#chunks)
+dispatches per iteration, which is exactly the dispatch-overhead regime
+where the measured p99 ITL wins shrink on small-batch hosts.  This
+kernel executes the whole per-iteration ``ChunkPlan`` batch at once:
+
+  * queries arrive as a per-chunk padded view of the engine's PACKED
+    ``(total_tokens, D)`` layout — chunk ``c`` owns rows
+    ``q_offset[c] .. q_offset[c] + chunk_len[c] - 1`` of the packed
+    stream, re-tiled host-side to ``(C, T_pad, H, D)`` (``T_pad`` is
+    the launch's padded max chunk length; rows past ``chunk_len`` are
+    padding whose output is undefined);
+  * per-chunk metadata rides as a scalar-prefetch operand ``meta``
+    with rows ``[slot, ctx_len, chunk_len, q_offset]`` next to the
+    per-chunk block tables — the same indirection recipe as
+    ``paged_decode_attention``;
+  * the chunk's K/V SCATTER is fused in: page blocks are ALIASED
+    outputs, and while the innermost grid dimension walks a chunk's
+    table entries, any page overlapping logical positions
+    ``ctx_len .. ctx_len + chunk_len - 1`` is rewritten with the
+    chunk's fresh K/V rows (a one-hot MXU matmul, not a gather) —
+    no separate ``kvcache.paged.scatter_*`` pass, no second HBM walk;
+  * attention is split into two online-softmax phases: PREFIX pages
+    (logical position < ctx_len) stream from the (pre-scatter) pool,
+    and the CAUSAL-IN-CHUNK part runs against the chunk's own K/V
+    inputs at the last grid step — summing to exactly the
+    full-over-prefix / causal-in-chunk mask of the per-chunk kernel.
+
+  grid = (C, KV, nb) — innermost sequential over table entries;
+  per page step: q tile (T_pad*G, D) x page (bs, D) on the MXU masked
+  by ``kv_pos < ctx_len[c]``, plus the aliased scatter write; at the
+  last step the (T_pad*G, T_pad) in-chunk scores join the running
+  (m, l, acc) scratch before the finalize.
+
+Safety of the in-place page writes: distinct sequences own distinct
+blocks (allocator invariant) and prefix-cache SHARED blocks are never
+scatter targets (matches are block-granular and CoW covers the
+full-match edge), so no grid step writes a page another chunk reads as
+prefix; trash-table padding entries resolve to fully masked, unchanged
+page copies.  The pure-jnp oracle is
+``ref.ragged_chunked_prefill_ref`` (drop-mode packed scatter + the
+gathered-view mask); the model's CPU fallback runs the same math
+through ``layers.chunked_attention`` (models/transformer.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+META_SLOT, META_CTX, META_LEN, META_QOFF = 0, 1, 2, 3
+
+
+def _rcp_kernel(meta_ref, tables_ref, q_ref, kn_ref, vn_ref, k_ref, v_ref,
+                o_ref, ok_ref, ov_ref, m_scr, l_scr, acc_scr, *,
+                scale: float, block_size: int, groups: int,
+                chunk_pad: int):
+    c = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    ctx = meta_ref[c, META_CTX]
+    clen = meta_ref[c, META_LEN]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (T_pad*G, D)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bs, D) — page tables[c,ki]
+    v = v_ref[0, 0].astype(jnp.float32)
+    kn = kn_ref[0, 0]                            # (T_pad, D) chunk K (page dtype)
+    vn = vn_ref[0, 0]
+
+    # ---- fused scatter: rewrite this page's rows that fall inside the
+    # chunk's logical span with the chunk's fresh K/V.  ``local`` maps
+    # page row -> chunk row; the one-hot matmul is the TPU-friendly
+    # gather (each selected row sums exactly one chunk row, so values
+    # are bit-identical to a direct scatter).
+    local = (ki * block_size
+             + jax.lax.broadcasted_iota(jnp.int32, (block_size, 1), 0)[:, 0]
+             - ctx)                              # (bs,)
+    sel = (local >= 0) & (local < clen)
+    onehot = ((local[:, None]
+               == jax.lax.broadcasted_iota(jnp.int32,
+                                           (block_size, chunk_pad), 1))
+              & sel[:, None]).astype(jnp.float32)      # (bs, T_pad)
+    k_rows = jax.lax.dot_general(
+        onehot, kn.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(ok_ref.dtype)
+    v_rows = jax.lax.dot_general(
+        onehot, vn.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(ov_ref.dtype)
+    ok_ref[0, 0] = jnp.where(sel[:, None], k_rows, k_ref[0, 0])
+    ov_ref[0, 0] = jnp.where(sel[:, None], v_rows, v_ref[0, 0])
+
+    # ---- prefix phase: attend the (pre-scatter) page, masked to
+    # logical positions strictly below the chunk's first position.
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale    # (T_pad*G, bs)
+    kv_pos = (ki * block_size
+              + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1))
+    valid = kv_pos < ctx
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    # re-mask after the shift (see paged_decode_attention: an all-masked
+    # row would otherwise average garbage page contents)
+    p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _chunk_and_finalize():
+        # ---- in-chunk phase: causal attention against the chunk's own
+        # K/V inputs (already page-dtype, so numerics match the
+        # post-scatter page contents the per-chunk path would read).
+        s2 = jax.lax.dot_general(
+            q, kn.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (T_pad*G, T_pad)
+        t_q = jax.lax.broadcasted_iota(jnp.int32, s2.shape, 0) // groups
+        t_kv = jax.lax.broadcasted_iota(jnp.int32, s2.shape, 1)
+        valid2 = (t_kv <= t_q) & (t_kv < clen)
+        s2 = jnp.where(valid2, s2, NEG_INF)
+        m_prev2 = m_scr[...]
+        m_fin = jnp.maximum(m_prev2, s2.max(axis=-1))
+        p2 = jnp.where(valid2, jnp.exp(s2 - m_fin[:, None]), 0.0)
+        corr2 = jnp.exp(m_prev2 - m_fin)
+        l_fin = l_scr[...] * corr2 + p2.sum(axis=-1)
+        acc_fin = (acc_scr[...] * corr2[:, None]
+                   + jax.lax.dot_general(
+                       p2, vn.astype(jnp.float32), (((1,), (0,)), ((), ())),
+                       preferred_element_type=jnp.float32))
+        o_ref[0, 0] = (acc_fin
+                       / jnp.maximum(l_fin, 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def ragged_chunked_prefill(q, k_new, v_new, k_pages, v_pages, block_tables,
+                           meta, *, interpret: bool = False):
+    """q: (C, T_pad, H, D) per-chunk padded queries; k_new/v_new:
+    (C, T_pad, KV, D) each chunk's fresh K/V (cast to the page dtype by
+    the caller so in-chunk attention matches post-scatter numerics);
+    pages: (N, bs, KV, D); block_tables: (C, nb) i32 physical page ids
+    (pad with any valid id — typically the trash page); meta: (C, 4)
+    i32 rows ``[slot, ctx_len, chunk_len, q_offset]``.
+
+    Returns (out (C, T_pad, H, D), new_k_pages, new_v_pages): the
+    attention output for rows ``0 .. chunk_len-1`` of each chunk (rows
+    past ``chunk_len`` are undefined padding) and the page pools with
+    every chunk's K/V scattered at logical positions
+    ``ctx_len .. ctx_len + chunk_len - 1``.  A ``chunk_len == 0`` row
+    is a padding chunk: it writes nothing and its output is undefined.
+    """
+    C, T, H, D = q.shape
+    N, bs, KV, _ = k_pages.shape
+    _, nb = block_tables.shape
+    G = H // KV
+    scale = 1.0 / (D ** 0.5)
+
+    # row layout t-major: row = t * G + g, so row // G recovers t
+    qt = (q.reshape(C, T, KV, G, D).transpose(0, 2, 1, 3, 4)
+          .reshape(C, KV, T * G, D))
+    knt = k_new.transpose(0, 2, 1, 3)            # (C, KV, T, D)
+    vnt = v_new.transpose(0, 2, 1, 3)
+    kt = k_pages.transpose(2, 0, 1, 3)           # (KV, N, bs, D)
+    vt = v_pages.transpose(2, 0, 1, 3)
+    tables = block_tables.astype(jnp.int32)
+    meta = meta.astype(jnp.int32)
+
+    kernel = functools.partial(_rcp_kernel, scale=scale, block_size=bs,
+                               groups=G, chunk_pad=T)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # meta, block_tables
+        grid=(C, KV, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, T * G, D),
+                         lambda c, h, i, m, t: (c, h, 0, 0)),
+            pl.BlockSpec((1, 1, T, D),
+                         lambda c, h, i, m, t: (c, h, 0, 0)),
+            pl.BlockSpec((1, 1, T, D),
+                         lambda c, h, i, m, t: (c, h, 0, 0)),
+            # the indirection: page tables[c, i] streams into VMEM
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda c, h, i, m, t: (h, t[c, i], 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda c, h, i, m, t: (h, t[c, i], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, T * G, D),
+                         lambda c, h, i, m, t: (c, h, 0, 0)),
+            # aliased page outputs: the fused scatter writes back the
+            # very blocks the walk just streamed in
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda c, h, i, m, t: (h, t[c, i], 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda c, h, i, m, t: (h, t[c, i], 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((T * G,), jnp.float32),
+            pltpu.VMEM((T * G,), jnp.float32),
+            pltpu.VMEM((T * G, D), jnp.float32),
+        ],
+    )
+    out, new_kt, new_vt = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((C, KV, T * G, D), q.dtype),
+            jax.ShapeDtypeStruct(kt.shape, kt.dtype),
+            jax.ShapeDtypeStruct(vt.shape, vt.dtype),
+        ],
+        # operand indices include the scalar-prefetch args: meta=0,
+        # tables=1, qt=2, knt=3, vnt=4, kt=5, vt=6
+        input_output_aliases={5: 1, 6: 2},
+        interpret=interpret,
+    )(meta, tables, qt, knt, vnt, kt, vt)
+    out = (out.reshape(C, KV, T, G, D).transpose(0, 2, 1, 3, 4)
+           .reshape(C, T, H, D))
+    return (out, new_kt.transpose(1, 2, 0, 3), new_vt.transpose(1, 2, 0, 3))

@@ -117,6 +117,48 @@ def chunked_prefill_attention_ref(q, k_pages, v_pages, block_tables,
     return out.astype(q.dtype)
 
 
+def ragged_chunked_prefill_ref(q, k_new, v_new, k_pages, v_pages,
+                               block_tables, meta):
+    """Oracle for the fused ragged chunked-prefill kernel.
+
+    q: (C, T_pad, H, D) per-chunk padded queries; k_new/v_new:
+    (C, T_pad, KV, D) each chunk's fresh K/V; pages: (N, bs, KV, D);
+    block_tables: (C, nb) i32; meta: (C, 4) i32 rows
+    ``[slot, ctx_len, chunk_len, q_offset]``.
+
+    Scatters each chunk's first ``chunk_len`` K/V rows into the pages
+    at logical positions ``ctx_len .. ctx_len + chunk_len - 1``
+    (padding rows dropped, never written), then runs the standard
+    chunked-prefill mask over the gathered view — so for query rows
+    ``t < chunk_len`` the output equals the per-chunk
+    ``chunked_prefill_attention_ref`` after a separate scatter pass;
+    rows ``t >= chunk_len`` are undefined padding.  Returns
+    (out (C, T_pad, H, D), new_k_pages, new_v_pages).
+    """
+    C, T = q.shape[:2]
+    N, bs = k_pages.shape[:2]
+    nb = block_tables.shape[1]
+    ctx = meta[:, 1]
+    lens = meta[:, 2]
+    pos = ctx[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]  # (C, T)
+    blk = jnp.take_along_axis(block_tables,
+                              jnp.minimum(pos // bs, nb - 1), axis=1)
+    flat = blk * bs + pos % bs
+    valid = jnp.arange(T)[None, :] < lens[:, None]
+    flat = jnp.where(valid, flat, N * bs)          # out of bounds -> drop
+    feat = k_pages.shape[2:]
+    new_k = (k_pages.reshape((N * bs,) + feat)
+             .at[flat.reshape(-1)]
+             .set(k_new.reshape((C * T,) + feat).astype(k_pages.dtype),
+                  mode="drop").reshape(k_pages.shape))
+    new_v = (v_pages.reshape((N * bs,) + feat)
+             .at[flat.reshape(-1)]
+             .set(v_new.reshape((C * T,) + feat).astype(v_pages.dtype),
+                  mode="drop").reshape(v_pages.shape))
+    out = chunked_prefill_attention_ref(q, new_k, new_v, block_tables, ctx)
+    return out, new_k, new_v
+
+
 def rms_norm_ref(x, weight, eps: float = 1e-6):
     """x: (..., D); weight: (D,) — matches models.layers.rms_norm."""
     xf = x.astype(jnp.float32)

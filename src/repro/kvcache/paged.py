@@ -99,6 +99,34 @@ def scatter_chunk(pages: Array, seq: Array, table_row: Array,
     return out.reshape(pages.shape)
 
 
+def scatter_packed(pages: Array, seq: Array, tables: Array,
+                   token_chunk: Array, positions: Array,
+                   valid: Array) -> Array:
+    """Write a PACKED multi-chunk K/V stream in one pass.
+
+    pages: (N, bs, *feat); seq: (TT, *feat) — the fused ragged-prefill
+    executable's packed token stream (every scheduled chunk of one
+    engine iteration back to back, plus padding); tables: (C, nb) i32
+    per-chunk block tables; token_chunk: (TT,) i32 mapping each packed
+    row to its chunk; positions: (TT,) i32 absolute logical positions;
+    valid: (TT,) bool — False rows (padding) are DROPPED, never
+    written (out-of-bounds drop-mode scatter), so the pool is
+    bit-identical to what per-chunk ``scatter_chunk`` calls would
+    produce.  Distinct chunks map distinct sequences (pack_plans merges
+    same-job plans), so rows never collide; the block lookup clamps to
+    the table width like the other scatter primitives.
+    """
+    bs = pages.shape[1]
+    N = pages.shape[0]
+    nb = tables.shape[1]
+    blk_idx = jnp.minimum(positions // bs, nb - 1)
+    blk = tables[token_chunk, blk_idx]
+    flat_idx = jnp.where(valid, blk * bs + positions % bs, N * bs)
+    out = _flat(pages).at[flat_idx].set(seq.astype(pages.dtype),
+                                        mode="drop")
+    return out.reshape(pages.shape)
+
+
 def copy_block(pages: Array, src: Array, dst: Array) -> Array:
     """Copy one physical page: ``pages[dst] = pages[src]``.
 

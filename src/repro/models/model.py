@@ -330,6 +330,58 @@ def prefill_chunk(params: dict, cfg, cache: dict, batch: dict, slot,
     return new_cache, last_logits[0].astype(jnp.float32)
 
 
+def prefill_chunks(params: dict, cfg, cache: dict, batch: dict,
+                   token_chunk, meta, tables, *, chunk_pad: int,
+                   use_pallas: bool = False):
+    """Run EVERY scheduled prefill chunk of one engine iteration at
+    once against the paged cache — the fused replacement for a loop of
+    ``prefill_chunk`` calls (one launch per iteration, O(1) host
+    dispatches instead of O(#chunks)).
+
+    batch: {"tokens": (1, TT)} — the iteration's chunks PACKED back to
+    back (chunk ``c`` owns columns ``q_off[c] .. q_off[c]+len[c]-1``)
+    and padded to the executable's token bucket; token_chunk: (TT,)
+    i32 mapping each packed column to its chunk row; meta: (C, 4) i32
+    rows ``[slot, ctx_len, chunk_len, q_offset]`` (padding chunks:
+    ``chunk_len == 0`` and ``slot`` out of range so their ``pos``
+    update drops); tables: (C, nb) i32 per-chunk block tables;
+    chunk_pad: STATIC padded max chunk length (the per-chunk view
+    width).  Per-position numerics match sequential ``prefill_chunk``
+    calls bit for bit (tests/test_chunked_prefill.py), so fusing never
+    changes greedy output.
+
+    Returns (new_cache, last_logits (C, V) f32): row ``c`` holds the
+    logits at chunk ``c``'s LAST position — meaningful to the sampler
+    only for chunks that finish their prompt.  ``pos[slot]`` is set to
+    ``ctx_len + chunk_len`` for every real chunk.  Requires
+    ``transformer.paged_supported(cfg)``.
+    """
+    tokens = batch["tokens"]
+    TT = tokens.shape[1]
+    token_chunk = jnp.asarray(token_chunk, jnp.int32)
+    meta = jnp.asarray(meta, jnp.int32)
+    slots, ctx_lens, lens, q_off = (meta[:, 0], meta[:, 1], meta[:, 2],
+                                    meta[:, 3])
+    local = jnp.arange(TT, dtype=jnp.int32) - q_off[token_chunk]
+    positions = ctx_lens[token_chunk] + local
+    valid = local < lens[token_chunk]
+    x = layers.embed(params["embed"], tokens, cfg)
+    x = shctx.constrain(x, ("batch", None, None))
+    ctx = {"positions": positions, "token_chunk": token_chunk,
+           "local": local, "valid": valid, "meta": meta,
+           "table_rows": jnp.asarray(tables, jnp.int32),
+           "chunk_pad": chunk_pad, "use_pallas": use_pallas}
+    x, new_cache, _ = transformer.prefill_chunks_paged_batched(
+        params["stack"], x, ctx, cfg, cache)
+    x = layers.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    last_idx = jnp.clip(q_off + jnp.maximum(lens, 1) - 1, 0, TT - 1)
+    last = jnp.take(x[0], last_idx, axis=0)            # (C, D)
+    last_logits = layers.logits(params["embed"], last[None], cfg)[0]
+    new_cache["pos"] = cache["pos"].at[slots].set(
+        (ctx_lens + lens).astype(cache["pos"].dtype), mode="drop")
+    return new_cache, last_logits.astype(jnp.float32)
+
+
 def prefill_into_slot(params: dict, cfg, cache: dict, batch: dict, slot,
                       max_len: int, cache_dtype=jnp.bfloat16):
     """Prefill ONE request (batch dim 1) and write its state into row

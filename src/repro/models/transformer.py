@@ -25,6 +25,7 @@ from jax import lax
 
 from repro.kernels import chunked_prefill_attention as cpa_kernel
 from repro.kernels import paged_decode_attention as pfd_kernel
+from repro.kernels import ragged_chunked_prefill as rcp_kernel
 from repro.kvcache import paged as paged_lib
 from repro.sharding import context as shctx
 
@@ -272,6 +273,78 @@ def _attn_chunk_paged(p, x, pages_k, pages_v, positions, table_row, cfg,
     return x + layers.attention_out(p["attn"], attn), new_k, new_v
 
 
+def _attn_chunks_paged(p, x, pages_k, pages_v, ctx, cfg):
+    """Fused ragged chunked-prefill attention: EVERY scheduled chunk of
+    one engine iteration in one pass (batch dim 1, packed tokens).
+
+    x: (1, TT, D) the PACKED token stream — chunk ``c`` owns rows
+    ``q_off[c] .. q_off[c] + len[c] - 1``; ctx carries the per-chunk
+    metadata (``meta`` rows ``[slot, ctx_len, chunk_len, q_offset]``,
+    per-chunk block tables, per-token chunk ids / positions / validity
+    and the static padded chunk length).  All chunks' K/V scatter into
+    the page pools in one pass and each chunk attends full over its
+    already-written prefix, causal within the chunk.
+
+    The jnp path runs the exact per-chunk ``layers.chunked_attention``
+    recipe over the gathered view (a static Python loop over the
+    padded chunk count — ONE traced executable, so per-position
+    numerics and therefore greedy output are bit-identical to the
+    sequential per-chunk path and to stall admission); ``use_pallas``
+    routes through the fused ``ragged_chunked_prefill`` kernel, whose
+    in-kernel scatter (aliased page outputs) replaces the separate
+    ``scatter_packed`` pass entirely.
+    """
+    positions = ctx["positions"]             # (TT,) absolute positions
+    token_chunk = ctx["token_chunk"]         # (TT,) row -> chunk id
+    local = ctx["local"]                     # (TT,) row within its chunk
+    valid = ctx["valid"]                     # (TT,) False = padding row
+    meta = ctx["meta"]                       # (C, 4) i32
+    tables = ctx["table_rows"]               # (C, nb) i32
+    Tp = ctx["chunk_pad"]                    # static padded chunk length
+    C = meta.shape[0]
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = layers.attention_qkv(p["attn"], h, positions[None, :],
+                                   cfg.rope_theta)
+    TT = x.shape[1]
+    # per-chunk padded views of the packed stream (row t of chunk c is
+    # packed row q_off[c] + t; rows past chunk_len are padding)
+    qidx = jnp.clip(meta[:, 3][:, None]
+                    + jnp.arange(Tp, dtype=jnp.int32)[None, :], 0, TT - 1)
+    if ctx.get("use_pallas", False):
+        # chunk K/V are pre-cast to the page dtype so the kernel's
+        # in-chunk phase matches the post-scatter page contents the
+        # gathered jnp path reads
+        qv = jnp.take(q[0], qidx.reshape(-1), axis=0).reshape(
+            (C, Tp) + q.shape[2:])
+        knv = jnp.take(k[0].astype(pages_k.dtype), qidx.reshape(-1),
+                       axis=0).reshape((C, Tp) + k.shape[2:])
+        vnv = jnp.take(v[0].astype(pages_v.dtype), qidx.reshape(-1),
+                       axis=0).reshape((C, Tp) + v.shape[2:])
+        av, new_k, new_v = rcp_kernel.ragged_chunked_prefill(
+            qv, knv, vnv, pages_k, pages_v, tables, meta,
+            interpret=jax.default_backend() != "tpu")
+    else:
+        new_k = paged_lib.scatter_packed(pages_k, k[0], tables,
+                                         token_chunk, positions, valid)
+        new_v = paged_lib.scatter_packed(pages_v, v[0], tables,
+                                         token_chunk, positions, valid)
+        k_seq = paged_lib.gather_tokens(new_k, tables)  # (C, nb*bs, KV, D)
+        v_seq = paged_lib.gather_tokens(new_v, tables)
+        L = k_seq.shape[1]
+        outs = []
+        for c in range(C):                   # static: C is a shape
+            qc = jnp.take(q, qidx[c], axis=1)           # (1, Tp, H, D)
+            outs.append(layers.chunked_attention(
+                qc, k_seq[c:c + 1], v_seq[c:c + 1],
+                q_positions=meta[c, 1] + jnp.arange(Tp, dtype=jnp.int32),
+                kv_positions=jnp.arange(L, dtype=jnp.int32),
+                causal=True)[0])
+        av = jnp.stack(outs)                 # (C, Tp, H, D)
+    # repack: packed row j is row local[j] of chunk token_chunk[j]
+    attn = av[token_chunk, jnp.clip(local, 0, Tp - 1)][None]
+    return x + layers.attention_out(p["attn"], attn), new_k, new_v
+
+
 def _project_enc_kv(p, enc_out):
     """Per-layer K/V projections of the shared encoder memory (no rope)."""
     enc_k = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wk"])
@@ -368,6 +441,26 @@ def apply_block_chunk(kind, p, x, ctx, cfg, cache):
         x, nk, nv = _attn_chunk_paged(
             p, x, cache["k"], cache["v"], ctx["positions"],
             ctx["table_row"], cfg, ctx.get("use_pallas", False))
+        if kind == "moe":
+            x, aux = _moe_part(p, x, cfg)
+        else:
+            x = _mlp_part(p, x, cfg)
+        return x, dict(cache, k=nk, v=nv), aux
+    raise NotImplementedError(
+        f"chunked prefill requires a paged-eligible stack (got {kind!r})")
+
+
+def apply_block_chunks(kind, p, x, ctx, cfg, cache):
+    """Fused ragged chunked-prefill application of one block: the whole
+    packed multi-chunk batch against the paged cache in one pass
+    (``_attn_chunks_paged``).  Same kind gating as the per-chunk mode
+    (``paged_supported`` restricts the engine to dense/moe stacks).
+    """
+    aux = ZERO_AUX
+    x = shctx.constrain(x, ("batch", None, None))
+    if kind in ("dense", "moe"):
+        x, nk, nv = _attn_chunks_paged(p, x, cache["k"], cache["v"],
+                                       ctx, cfg)
         if kind == "moe":
             x, aux = _moe_part(p, x, cfg)
         else:
@@ -481,7 +574,8 @@ def apply_stack(params: dict, x: Array, ctx: dict, cfg, cache=None,
     aux = dict(ZERO_AUX)
     new_cache = {} if cache is not None else None
     apply_fn = {"decode": apply_block_decode,
-                "chunk": apply_block_chunk}.get(mode, apply_block_seq)
+                "chunk": apply_block_chunk,
+                "chunks": apply_block_chunks}.get(mode, apply_block_seq)
 
     for i, kind in enumerate(prefix):
         c = None if cache is None else cache[f"prefix{i}"]
@@ -706,6 +800,25 @@ def prefill_chunk_paged(params: dict, x: Array, positions: Array,
     ctx = {"positions": positions, "table_row": table_row,
            "use_pallas": use_pallas}
     return apply_stack(params, x, ctx, cfg, cache=cache, mode="chunk")
+
+
+def prefill_chunks_paged_batched(params: dict, x: Array, ctx: dict, cfg,
+                                 cache: dict):
+    """Run one iteration's PACKED multi-chunk batch through the stack.
+
+    x: (1, TT, D) embedded packed tokens (every scheduled chunk of the
+    iteration back to back plus padding); ctx: the fused-chunk context
+    (``positions``/``token_chunk``/``local``/``valid`` per packed row,
+    ``meta`` rows ``[slot, ctx_len, chunk_len, q_offset]``,
+    ``table_rows`` (C, nb), static ``chunk_pad`` and ``use_pallas``).
+    Every attention layer scatters ALL chunks' K/V into its page pools
+    and attends full-over-prefix / causal-in-chunk per chunk
+    (``_attn_chunks_paged``) — one launch for the whole plan instead of
+    one per chunk.  Returns (x, new_cache, aux); the caller
+    (``model.prefill_chunks``) owns the final norm / per-chunk logits /
+    ``pos`` bookkeeping.
+    """
+    return apply_stack(params, x, ctx, cfg, cache=cache, mode="chunks")
 
 
 def copy_paged_block(cache: dict, src, dst) -> dict:

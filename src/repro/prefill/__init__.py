@@ -14,6 +14,13 @@ Entry points:
     With the prefix cache on, a job covers only the UNCACHED suffix of
     the prompt; the engine shifts plan offsets by the cached-prefix
     length.
+  * ``pack_plans`` / ``ChunkBatch`` / ``PackedChunk`` — one
+    iteration's plans merged (adjacent same-job plans fuse into one
+    contiguous ragged chunk) and padded to power-of-two shape buckets
+    for the FUSED ragged prefill executable: one launch per iteration,
+    ``shape_key`` as the traced-executable memo key.  Shared by engine
+    and simulator so dispatch counts and executable-cache hit/miss
+    counters parity-match.
 
 Invariants (property-tested in tests/test_properties.py): scheduled
 chunk tokens never exceed ``max(0, token_budget - decode_tokens)``;
@@ -21,18 +28,26 @@ each job's chunks cover ``[0, total)`` in order exactly once; whenever
 jobs pend and a whole chunk fits, at least one chunk is scheduled (no
 starvation — FIFO ties drain in admission order).
 
-Kernel dispatch: each scheduled chunk executes through
-``model.prefill_chunk`` → ``transformer.prefill_chunk_paged``, which
-scatters the chunk's K/V into the paged pool at its exact position
-offset (``kvcache.paged.scatter_chunk``) and attends
-full-over-prefix / causal-in-chunk — on TPU via the Pallas
-``kernels/chunked_prefill_attention.py`` kernel (block-table
-scalar-prefetch), elsewhere via the exact jnp gather path
-(``layers.chunked_attention`` over the gathered view), selected by
-``use_pallas``.  Both are bit-identical to the stall prefill, so
-chunking never changes greedy output.
+Kernel dispatch: the chunked engine executes ALL of an iteration's
+scheduled chunks in ONE launch — ``pack_plans`` builds the packed
+batch, ``model.prefill_chunks`` →
+``transformer.prefill_chunks_paged_batched`` runs it through the
+stack, and each attention layer either calls the fused Pallas
+``kernels/ragged_chunked_prefill.py`` kernel (per-chunk
+``[slot, ctx_len, chunk_len, q_offset]`` scalar-prefetch metadata,
+block-table indirection, K/V scatter fused in via aliased page
+outputs) under ``use_pallas``, or the exact jnp path (drop-mode packed
+scatter ``kvcache.paged.scatter_packed`` + per-chunk
+``layers.chunked_attention`` over the gathered view) elsewhere.  The
+single-chunk path (``model.prefill_chunk`` →
+``transformer.prefill_chunk_paged`` → ``scatter_chunk`` + the
+``chunked_prefill_attention`` kernel) remains for prefix-cached STALL
+admission suffixes.  All paths are bit-identical to the stall prefill,
+so chunking never changes greedy output.
 """
 
-from .scheduler import ChunkJob, ChunkPlan, ChunkScheduler
+from .scheduler import (ChunkBatch, ChunkJob, ChunkPlan, ChunkScheduler,
+                        PackedChunk, build_packed_arrays, pack_plans)
 
-__all__ = ["ChunkJob", "ChunkPlan", "ChunkScheduler"]
+__all__ = ["ChunkBatch", "ChunkJob", "ChunkPlan", "ChunkScheduler",
+           "PackedChunk", "build_packed_arrays", "pack_plans"]

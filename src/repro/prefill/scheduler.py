@@ -28,6 +28,17 @@ real engine (``ServingEngine(prefill="chunked")``) and the simulator
 which is what makes their per-iteration budget traces and completion
 orders comparable bit-for-bit in the parity tests.
 
+``pack_plans`` turns one iteration's plan list into a ``ChunkBatch`` —
+the packed, padded layout the FUSED ragged prefill executable consumes
+(one launch per iteration instead of one per chunk): adjacent plans of
+the same job merge into one contiguous ragged chunk (so every chunk in
+a launch belongs to a distinct sequence and the in-kernel K/V scatter
+never races), and the batch's ``shape_key`` (padded total tokens,
+padded chunk count, padded max chunk length — power-of-two buckets) is
+the traced-executable memo key.  Both loops call it: the engine to
+build the launch, the simulator to mirror the dispatch count and the
+executable-cache hit/miss counters bit for bit.
+
 Invariants (property-tested in tests/test_properties.py):
 
   * per-iteration budget: scheduled chunk tokens never exceed
@@ -44,7 +55,9 @@ Invariants (property-tested in tests/test_properties.py):
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -75,6 +88,129 @@ class ChunkPlan:
     start: int                   # position offset of the chunk
     length: int
     finishes: bool               # True -> this chunk completes the prompt
+
+
+def _pow2(n: int) -> int:
+    """Smallest power of two >= n (bucketing for executable shapes)."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass
+class PackedChunk:
+    """One merged, contiguous ragged chunk of a ``ChunkBatch``.
+
+    Adjacent same-job plans of one iteration merge into one chunk, so
+    a batch never holds two chunks of the same sequence (the fused
+    kernel's no-write-race invariant) and ``finishes`` is simply the
+    last constituent plan's flag (a job's final chunk is always the
+    last plan the scheduler emitted for it)."""
+
+    job: ChunkJob
+    start: int                   # job-relative offset of the merged run
+    length: int
+    finishes: bool
+
+    @property
+    def slot(self) -> int:
+        return self.job.slot
+
+
+@dataclasses.dataclass
+class ChunkBatch:
+    """One iteration's plans packed for a single fused launch.
+
+    The padded sizes are power-of-two buckets so the engine's ragged
+    prefill executable retraces once per ``shape_key`` instead of once
+    per ``(chunk_len, offset)`` pair; the simulator computes the same
+    keys from the same plans, which is what makes the executable-cache
+    hit/miss counters engine-vs-sim comparable."""
+
+    chunks: List[PackedChunk]
+    total_tokens: int            # sum of merged chunk lengths
+    padded_tokens: int           # total_tokens -> power-of-two bucket
+    padded_chunks: int           # len(chunks) -> power-of-two bucket
+    padded_chunk_len: int        # max chunk length -> power-of-two bucket
+
+    @property
+    def shape_key(self) -> tuple:
+        return (self.padded_tokens, self.padded_chunks,
+                self.padded_chunk_len)
+
+
+def pack_plans(plans: List[ChunkPlan]) -> Optional[ChunkBatch]:
+    """Merge one iteration's plans into the fused-launch batch.
+
+    Returns None for an empty plan list.  Plan order is preserved
+    (completion order of finishing chunks must match the per-chunk
+    execution the parity tests compare against); merging only fuses
+    ADJACENT plans of the same job, which the scheduler guarantees are
+    contiguous (each job's chunks are emitted back to back within one
+    ``schedule`` call)."""
+    if not plans:
+        return None
+    chunks: List[PackedChunk] = []
+    for plan in plans:
+        if (chunks and chunks[-1].job is plan.job
+                and chunks[-1].start + chunks[-1].length == plan.start):
+            chunks[-1].length += plan.length
+            chunks[-1].finishes = plan.finishes
+        else:
+            chunks.append(PackedChunk(job=plan.job, start=plan.start,
+                                      length=plan.length,
+                                      finishes=plan.finishes))
+    total = sum(c.length for c in chunks)
+    return ChunkBatch(
+        chunks=chunks,
+        total_tokens=total,
+        padded_tokens=_pow2(total),
+        padded_chunks=_pow2(len(chunks)),
+        padded_chunk_len=_pow2(max(c.length for c in chunks)))
+
+
+def build_packed_arrays(key: tuple,
+                        entries: Sequence[Tuple[int, int, Sequence[int],
+                                                Sequence[int]]],
+                        *, pad_slot: int, table_width: int,
+                        trash_block: int):
+    """Build the fused executable's host arrays for one launch.
+
+    The single authoritative encoding of the packed layout (the engine
+    and the tests both call it): ``key`` is ``ChunkBatch.shape_key``;
+    ``entries`` holds one ``(slot, ctx_len, tokens, table_row)`` tuple
+    per merged chunk IN BATCH ORDER — ``tokens`` the chunk's 1-D token
+    ids (length == chunk length), ``table_row`` its block table (at
+    most ``table_width`` entries, missing tail filled with
+    ``trash_block``).
+
+    Returns int32 arrays ``(tokens (1, TTp), token_chunk (TTp,),
+    meta (Cp, 4), tables (Cp, table_width))``: chunk ``ci`` owns packed
+    columns ``off .. off+len-1`` with meta row
+    ``[slot, ctx_len, chunk_len, q_offset]``; padding COLUMNS map to
+    the last chunk row past its length (their scatter rows are dropped
+    as invalid); padding CHUNK rows carry ``[pad_slot, 0, 0, off]``
+    (``pad_slot`` out of range so their ``pos`` update drops) and
+    all-trash tables (a scattered page is never revisited — the fused
+    kernel's no-write-race contract).
+    """
+    TTp, Cp, _ = key
+    tokens = np.zeros((1, TTp), np.int32)
+    token_chunk = np.full((TTp,), Cp - 1, np.int32)
+    meta = np.zeros((Cp, 4), np.int32)
+    tables = np.full((Cp, table_width), trash_block, np.int32)
+    off = 0
+    for ci, (slot, ctx_len, toks, table_row) in enumerate(entries):
+        ln = len(toks)
+        tokens[0, off:off + ln] = toks
+        token_chunk[off:off + ln] = ci
+        meta[ci] = (slot, ctx_len, ln, off)
+        tables[ci, :len(table_row)] = table_row
+        off += ln
+    for ci in range(len(entries), Cp):
+        meta[ci] = (pad_slot, 0, 0, off)
+    return tokens, token_chunk, meta, tables
 
 
 class ChunkScheduler:

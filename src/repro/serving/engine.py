@@ -84,7 +84,7 @@ from repro.kvcache import BlockAllocator, blocks_for_tokens
 from repro.kvcache.paged import PagedKVCache
 from repro.kvcache.prefix import PrefixCache
 from repro.models import transformer
-from repro.prefill import ChunkScheduler
+from repro.prefill import ChunkScheduler, build_packed_arrays, pack_plans
 
 from . import generate
 
@@ -238,13 +238,17 @@ class ServingEngine:
                 cfg, self.max_len)
             self._paged_decode = generate.make_paged_decode_fn(
                 cfg, use_pallas)
-            if prefill == "chunked" or prefix_cache:
+            if prefill == "chunked":
+                # the FUSED executable: every scheduled chunk of an
+                # iteration in one launch (padded-shape-keyed memo)
+                self._ragged_prefill = generate.make_ragged_prefill_fn(
+                    cfg, use_pallas)
+            if prefix_cache:
                 # prefix-cached stall admission prefills only the
                 # uncached SUFFIX, which needs the traced-offset chunk
                 # executable even in prefill="stall" mode
                 self._chunk_prefill = generate.make_chunk_prefill_fn(
                     cfg, use_pallas)
-            if prefix_cache:
                 self._copy_block = generate.make_copy_block_fn(cfg)
         self.scheduler_overhead_s = 0.0
         # exposed for the slot-recycling tests: per-slot cache after the
@@ -269,6 +273,18 @@ class ServingEngine:
         self.prefill_stall_s = 0.0
         self.prefill_stall_max_s = 0.0   # worst single-iteration stall
         self.budget_trace: List = []
+        # dispatch accounting (reset per serve): prefill launches in
+        # total and per iteration — the chunked engine issues exactly
+        # ONE fused launch per iteration with scheduled chunks, versus
+        # one per admission (stall) / one per chunk (the pre-fused
+        # path); exec_cache_* count the fused executable's padded-shape
+        # keys (miss = first launch at a new ChunkBatch.shape_key this
+        # serve).  The simulator mirrors all four from the same plans.
+        self.prefill_dispatches = 0
+        self.prefill_dispatch_trace: List[int] = []
+        self.exec_cache_hits = 0
+        self.exec_cache_misses = 0
+        self._exec_keys: set = set()
 
     # ------------------------------------------------------------------
     def _to_sim_task(self, req: Request) -> prio.SimTask:
@@ -313,6 +329,13 @@ class ServingEngine:
             max_lens=caps)
         jax.block_until_ready(out_tokens)
         dur = time.perf_counter() - t0
+        # one prefill launch per executed batch; the per-iteration trace
+        # only covers batch mode — in continuous modes the trace is the
+        # DECODE-LOOP launch profile (chunked: aligned with
+        # budget_trace), so bulk-lane batches count in the total only
+        self.prefill_dispatches += 1
+        if self.mode == "batch":
+            self.prefill_dispatch_trace.append(1)
         if lane == "cpu":
             dur *= self.persona.cpu_slowdown   # bulk-lane emulation
         finish = now + dur
@@ -347,6 +370,11 @@ class ServingEngine:
         self.prefill_stall_s = 0.0
         self.prefill_stall_max_s = 0.0
         self.budget_trace = []
+        self.prefill_dispatches = 0
+        self.prefill_dispatch_trace = []
+        self.exec_cache_hits = 0
+        self.exec_cache_misses = 0
+        self._exec_keys = set()
         self.prefix_cache = None
         if self.mode == "continuous":
             if self.prefill == "chunked":
@@ -407,6 +435,19 @@ class ServingEngine:
             "prefill_stall_s": self.prefill_stall_s,
             "prefill_stall_max_s": self.prefill_stall_max_s,
             "budget_trace": list(self.budget_trace),
+            # dispatch accounting: total prefill launches (bulk-lane
+            # batches included), and the DECODE-LOOP per-iteration
+            # launch counts (chunked mode aligns entries with
+            # budget_trace and every entry is <= 1 — ONE fused launch
+            # per iteration; stall mode records admission-burst sizes;
+            # batch mode one entry per executed batch), plus the fused
+            # executable's padded-shape-key cache hits / misses this
+            # serve (0/0 outside chunked mode).  All four parity-match
+            # the simulator's SimResult fields.
+            "prefill_dispatches": self.prefill_dispatches,
+            "prefill_dispatch_trace": list(self.prefill_dispatch_trace),
+            "exec_cache_hits": self.exec_cache_hits,
+            "exec_cache_misses": self.exec_cache_misses,
             # prefix-cache metrics (kvcache.prefix counters; the
             # simulator's cache model reports the identical fields —
             # the engine-vs-sim parity tests compare them directly).
@@ -555,6 +596,7 @@ class ServingEngine:
                 queue.append(sim_tasks[i])
                 i += 1
             iter_stall = 0.0
+            iter_launches = 0
 
             # --- admissions: fill freed slots, one policy call per slot
             while queue and None in slot_task:
@@ -626,6 +668,8 @@ class ServingEngine:
                 first = int(jnp.argmax(last_logits))
                 dt = time.perf_counter() - t0
                 now += dt
+                self.prefill_dispatches += 1   # one launch per admission
+                iter_launches += 1
                 if stalled:       # live slots waited out this prefill
                     self.prefill_stall_s += dt
                     iter_stall += dt
@@ -652,6 +696,8 @@ class ServingEngine:
 
             self.prefill_stall_max_s = max(self.prefill_stall_max_s,
                                            iter_stall)
+            if iter_launches:
+                self.prefill_dispatch_trace.append(iter_launches)
             active = [s for s in range(C) if slot_task[s] is not None]
             if active:
                 self.peak_concurrency = max(self.peak_concurrency,
@@ -712,11 +758,20 @@ class ServingEngine:
         prefill chunks in the policy's uncertainty-priority order — so
         per-iteration prefill work (and therefore every live request's
         ITL) is bounded by ``token_budget``, not by the admission burst.
-        Chunk writes land at exact position offsets, so output is
+
+        Execution is FUSED: the whole iteration's plan becomes one
+        ``ChunkBatch`` (``repro.prefill.pack_plans``) and runs through
+        a single ragged-prefill launch (``generate.make_ragged_prefill_fn``
+        → ``model.prefill_chunks``), with the chunk K/V scatter inside
+        — exactly ONE prefill dispatch per iteration instead of one
+        scatter + one kernel per chunk (asserted via
+        ``prefill_dispatches`` / ``prefill_dispatch_trace``).  Chunk
+        writes land at exact position offsets, so output is
         token-for-token identical to the stall-admission paged engine;
         ``simulate_continuous(prefill="chunked")`` drives the same
-        ChunkScheduler and reproduces the completion order and the
-        per-iteration budget trace.
+        ChunkScheduler + pack_plans and reproduces the completion
+        order, the per-iteration budget trace AND the dispatch /
+        executable-cache counters.
         """
         C = self.num_slots
         S = self.input_bucket
@@ -742,7 +797,7 @@ class ServingEngine:
         slot_cap = [0] * C
         job_cap: Dict[int, int] = {}      # slot -> decode cap
         job_tokens: Dict[int, np.ndarray] = {}  # slot -> padded prompt
-        job_row: Dict[int, jnp.ndarray] = {}    # slot -> device table row
+        job_row: Dict[int, np.ndarray] = {}     # slot -> host table row
         job_start: Dict[int, int] = {}    # slot -> cached-prefix offset
         tokens = np.zeros((C, 1), np.int32)
         self.admission_log = []
@@ -804,7 +859,7 @@ class ServingEngine:
                               np.int32)
                 tbl = alloc.table(task.task.task_id)
                 row[:len(tbl)] = tbl
-                job_row[slot] = jnp.asarray(row)
+                job_row[slot] = row
                 job_tokens[slot] = toks
                 job_start[slot] = start
                 job_cap[slot] = cap
@@ -814,38 +869,59 @@ class ServingEngine:
                     {"task_id": task.task.task_id, "slot": slot,
                      "step": step, "now": now})
 
-            # --- chunk phase: pack the budget, decode tokens first
+            # --- chunk phase: pack the budget, decode tokens first;
+            # the WHOLE plan executes as one fused ragged launch
             iter_stall = 0.0
             active0 = [s for s in range(C) if slot_task[s] is not None]
             plans = sched.schedule(len(active0)) if sched.has_jobs else []
-            for plan in plans:
-                s = plan.job.slot
-                task = plan.job.task
-                # plan offsets are relative to the job (the uncached
+            batch_plan = pack_plans(plans)
+            if batch_plan is not None:
+                key = batch_plan.shape_key
+                if key in self._exec_keys:
+                    self.exec_cache_hits += 1
+                else:
+                    self._exec_keys.add(key)
+                    self.exec_cache_misses += 1
+                Tp = batch_plan.padded_chunk_len
+                # chunk offsets are relative to the job (the uncached
                 # suffix); job_start shifts them to absolute prompt
-                # positions when a cached prefix was skipped
-                base = job_start[s] + plan.start
-                chunk = job_tokens[s][base:base + plan.length]
-                # per-plan, not the iteration-start snapshot: a slot a
-                # PRECEDING plan just activated waits out this chunk
-                # too (same semantics as the stall path's per-admission
-                # check)
+                # positions when a cached prefix was skipped.  The
+                # packed layout itself (metadata rows, padding rules)
+                # is encoded once in prefill.build_packed_arrays.
+                entries = []
+                for ch in batch_plan.chunks:
+                    s = ch.slot
+                    base = job_start[s] + ch.start
+                    entries.append((s, base,
+                                    job_tokens[s][base:base + ch.length],
+                                    job_row[s]))
+                tokens_arr, token_chunk, meta, tabs = build_packed_arrays(
+                    key, entries, pad_slot=C,
+                    table_width=kvc.max_blocks_per_seq,
+                    trash_block=kvc.trash_block)
                 stalled = any(t is not None for t in slot_task)
                 t0 = time.perf_counter()
-                cache, last_logits = self._chunk_prefill(
+                cache, last_logits = self._ragged_prefill(
                     self.params, cache,
-                    {"tokens": jnp.asarray(chunk[None, :])},
-                    jnp.int32(s), job_row[s], jnp.int32(base))
-                if plan.finishes:
-                    first = int(jnp.argmax(last_logits))
-                else:
-                    jax.block_until_ready(last_logits)
+                    {"tokens": jnp.asarray(tokens_arr)},
+                    jnp.asarray(token_chunk), jnp.asarray(meta),
+                    jnp.asarray(tabs), chunk_pad=Tp)
+                # greedy-pick on device: only (Cp,) token ids cross the
+                # host link, not the (Cp, V) logits
+                next_ids = np.asarray(jax.block_until_ready(
+                    jnp.argmax(last_logits, axis=-1)))
                 dt = time.perf_counter() - t0
                 now += dt
-                if stalled:          # live slots waited out this chunk
+                self.prefill_dispatches += 1     # ONE launch, all chunks
+                if stalled:      # live slots waited out this launch
                     self.prefill_stall_s += dt
                     iter_stall += dt
-                if plan.finishes:
+                for ci, ch in enumerate(batch_plan.chunks):
+                    if not ch.finishes:
+                        continue
+                    s = ch.slot
+                    task = ch.job.task
+                    first = int(next_ids[ci])
                     if pc is not None:
                         pc.commit(task.task.task_id, job_tokens[s])
                     cap = job_cap.pop(s)
@@ -876,6 +952,7 @@ class ServingEngine:
             active = [s for s in range(C) if slot_task[s] is not None]
             if plans or active:
                 self.budget_trace.append((len(active0), prefill_toks))
+                self.prefill_dispatch_trace.append(1 if plans else 0)
             if active:
                 self.peak_concurrency = max(self.peak_concurrency,
                                             len(active))

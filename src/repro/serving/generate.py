@@ -11,6 +11,7 @@ Two drivers:
 from __future__ import annotations
 
 import functools
+import logging
 from typing import Optional
 
 import jax
@@ -20,6 +21,28 @@ from jax import lax
 from repro.models import model as model_lib, transformer
 
 PAD_ID = 0
+
+logger = logging.getLogger(__name__)
+_warned_jnp_fallback = False
+
+
+def resolve_use_pallas(use_pallas: Optional[bool]) -> bool:
+    """Resolve the ``use_pallas=None`` auto-detection: the compiled
+    Pallas kernels on TPU, the exact jnp fallbacks elsewhere (the
+    kernels would run in slow interpret mode).  Logs a ONE-TIME warning
+    when auto-detection falls back to the jnp path, so silent CPU
+    fallbacks are visible in benchmark runs."""
+    global _warned_jnp_fallback
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+        if not use_pallas and not _warned_jnp_fallback:
+            _warned_jnp_fallback = True
+            logger.warning(
+                "use_pallas auto-detection: backend %r is not TPU — "
+                "falling back to the exact jnp kernel paths (pass "
+                "use_pallas=True to force the Pallas kernels in "
+                "interpret mode)", jax.default_backend())
+    return use_pallas
 
 
 def make_prefill_fn(cfg, max_len: int):
@@ -71,8 +94,7 @@ def make_paged_decode_fn(cfg, use_pallas: Optional[bool] = None):
     ``None`` auto-selects: on TPU the compiled kernel, elsewhere the
     exact jnp gather fallback (the kernel would run in slow interpret
     mode there)."""
-    if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
+    use_pallas = resolve_use_pallas(use_pallas)
 
     @jax.jit
     def paged_decode_fn(params, cache, token, tables):
@@ -82,23 +104,71 @@ def make_paged_decode_fn(cfg, use_pallas: Optional[bool] = None):
     return paged_decode_fn
 
 
+_chunk_fn_memo: dict = {}
+
+
+def _memoized(key, build):
+    """Process-wide factory memo: engines sharing a (hashable) key
+    reuse ONE jitted function — and therefore one trace cache — so
+    per-shape executables compile once per process instead of once per
+    engine instance.  An unhashable key skips the memo."""
+    try:
+        cached = _chunk_fn_memo.get(key)
+    except TypeError:                      # unhashable cfg: no memo
+        return build()
+    if cached is None:
+        cached = _chunk_fn_memo[key] = build()
+    return cached
+
+
 def make_chunk_prefill_fn(cfg, use_pallas: Optional[bool] = None):
     """Jitted chunked-prefill step: run one (1, T) prompt chunk of slot
     ``slot`` against the paged cache at traced context offset
     ``ctx_len``, scattering its K/V through ``table_row``.  Slot, table
     and offset are traced operands, so ONE executable serves every
-    chunk of every request (one retrace per distinct chunk length —
-    at most two: ``chunk_size`` and the prompt-tail remainder)."""
-    if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
+    chunk of every request (one retrace per distinct chunk length).
+    Memoized per ``(cfg, use_pallas)``."""
+    use_pallas = resolve_use_pallas(use_pallas)
 
-    @jax.jit
-    def chunk_prefill_fn(params, cache, batch, slot, table_row, ctx_len):
-        return model_lib.prefill_chunk(params, cfg, cache, batch, slot,
-                                       table_row, ctx_len,
-                                       use_pallas=use_pallas)
+    def build():
+        @jax.jit
+        def chunk_prefill_fn(params, cache, batch, slot, table_row,
+                             ctx_len):
+            return model_lib.prefill_chunk(params, cfg, cache, batch,
+                                           slot, table_row, ctx_len,
+                                           use_pallas=use_pallas)
 
-    return chunk_prefill_fn
+        return chunk_prefill_fn
+
+    return _memoized((cfg, use_pallas), build)
+
+
+def make_ragged_prefill_fn(cfg, use_pallas: Optional[bool] = None):
+    """Jitted FUSED chunked prefill: every scheduled chunk of one
+    engine iteration in a single launch (``model.prefill_chunks``).
+
+    The packed token stream, per-token chunk ids, metadata rows
+    ``[slot, ctx_len, chunk_len, q_offset]`` and per-chunk block
+    tables all ride as traced operands; ``chunk_pad`` (the padded
+    per-chunk view width) is static.  jit therefore memoizes one
+    executable per padded shape key ``(padded_tokens, padded_chunks,
+    padded_chunk_len)`` — the ``ChunkBatch.shape_key`` buckets —
+    instead of retracing per ``(chunk_len, offset)`` pair.  Memoized
+    per ``(cfg, use_pallas)`` like ``make_chunk_prefill_fn``."""
+    use_pallas = resolve_use_pallas(use_pallas)
+
+    def build():
+        @functools.partial(jax.jit, static_argnames=("chunk_pad",))
+        def ragged_prefill_fn(params, cache, batch, token_chunk, meta,
+                              tables, *, chunk_pad):
+            return model_lib.prefill_chunks(params, cfg, cache, batch,
+                                            token_chunk, meta, tables,
+                                            chunk_pad=chunk_pad,
+                                            use_pallas=use_pallas)
+
+        return ragged_prefill_fn
+
+    return _memoized(("ragged", cfg, use_pallas), build)
 
 
 def make_copy_block_fn(cfg):

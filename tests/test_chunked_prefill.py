@@ -160,6 +160,102 @@ def test_scheduler_validation():
 # ---------------------------------------------------------------------------
 
 
+def _packed_iteration(ragged_fn, params, cache, chunks, kvc, *,
+                      num_slots, key):
+    """Drive one fused launch the way the engine does (same
+    ``build_packed_arrays`` layout): chunks is a list of
+    (slot, toks, start, length); key = (TT_pad, C_pad, T_pad)."""
+    from repro.prefill import build_packed_arrays
+    entries = [(slot, start, toks[start:start + ln], kvc.tables[slot])
+               for slot, toks, start, ln in chunks]
+    tokens, token_chunk, meta, tabs = build_packed_arrays(
+        key, entries, pad_slot=num_slots,
+        table_width=kvc.max_blocks_per_seq, trash_block=kvc.trash_block)
+    return ragged_fn(params, cache, {"tokens": jnp.asarray(tokens)},
+                     jnp.asarray(token_chunk), jnp.asarray(meta),
+                     jnp.asarray(tabs), chunk_pad=key[2])
+
+
+def test_prefill_chunks_matches_sequential(setup):
+    """The FUSED packed executable reproduces sequential per-chunk
+    ``prefill_chunk`` calls BIT FOR BIT — caches and last-position
+    logits — across two interleaved iterations of two requests with
+    ragged chunk lengths (including padding chunks and columns)."""
+    cfg, params, _, _, test = setup
+    S, bs = BUCKET, 4
+    max_len = S + MAX_NEW + 8
+    kvc_a = PagedKVCache(cfg, 2, 16, bs, max_len)
+    kvc_b = PagedKVCache(cfg, 2, 16, bs, max_len)
+    alloc = BlockAllocator(16, bs)
+    toks = {}
+    for s in range(2):
+        blocks = alloc.allocate_n(s, alloc.blocks_for(S))
+        kvc_a.set_table(s, blocks)
+        kvc_b.set_table(s, blocks)
+        arr = np.zeros((S,), np.int32)
+        seq = hash_tokenize(test[s].text, cfg.vocab_size, S)
+        arr[S - len(seq):] = seq
+        toks[s] = arr
+    # iteration 1: slot0 [0:3], slot1 [0:5]; iteration 2: the tails
+    iters = [[(0, toks[0], 0, 3), (1, toks[1], 0, 5)],
+             [(0, toks[0], 3, 5), (1, toks[1], 5, 3)]]
+    cf = generate.make_chunk_prefill_fn(cfg, use_pallas=False)
+    cache_a = kvc_a.state
+    for it in iters:
+        for slot, tk, start, ln in it:
+            cache_a, logits_a = cf(
+                params, cache_a,
+                {"tokens": jnp.asarray(tk[None, start:start + ln])},
+                jnp.int32(slot), kvc_a.table_row(slot), jnp.int32(start))
+    rf = generate.make_ragged_prefill_fn(cfg, use_pallas=False)
+    cache_b = kvc_b.state
+    for it in iters:
+        # padded buckets deliberately LARGER than the real work (a
+        # padding chunk row plus padding columns must be inert)
+        cache_b, logits_b = _packed_iteration(
+            rf, params, cache_b, it, kvc_b, num_slots=2, key=(16, 4, 8))
+    for la, lb in zip(jax.tree.leaves(cache_a), jax.tree.leaves(cache_b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    # row 1 of the fused logits is slot1's tail chunk — the same final
+    # prompt position the last sequential call returned
+    np.testing.assert_array_equal(np.asarray(logits_a),
+                                  np.asarray(logits_b[1]))
+
+
+def test_prefill_chunks_use_pallas_parity(setup):
+    """The fused Pallas kernel path (interpret mode on CPU) matches the
+    jnp fallback: identical page pools, argmax-identical logits."""
+    cfg, params, _, _, test = setup
+    S, bs = BUCKET, 4
+    max_len = S + MAX_NEW + 8
+    caches = {}
+    for flag in (False, True):
+        kvc = PagedKVCache(cfg, 2, 16, bs, max_len)
+        alloc = BlockAllocator(16, bs)
+        chunks = []
+        for s in range(2):
+            kvc.set_table(s, alloc.allocate_n(s, alloc.blocks_for(S)))
+            arr = np.zeros((S,), np.int32)
+            seq = hash_tokenize(test[s].text, cfg.vocab_size, S)
+            arr[S - len(seq):] = seq
+            chunks.append((s, arr, 0, S))
+        rf = generate.make_ragged_prefill_fn(cfg, use_pallas=flag)
+        cache, logits = _packed_iteration(
+            rf, params, kvc.state, chunks, kvc, num_slots=2,
+            key=(16, 2, 8))
+        caches[flag] = (cache, logits)
+    np.testing.assert_allclose(np.asarray(caches[True][1]),
+                               np.asarray(caches[False][1]),
+                               atol=5e-2, rtol=5e-2)
+    assert (np.argmax(np.asarray(caches[True][1]), -1)
+            == np.argmax(np.asarray(caches[False][1]), -1)).all()
+    for la, lb in zip(jax.tree.leaves(caches[True][0]),
+                      jax.tree.leaves(caches[False][0])):
+        np.testing.assert_allclose(np.asarray(la).astype(np.float32),
+                                   np.asarray(lb).astype(np.float32),
+                                   atol=5e-2, rtol=5e-2)
+
+
 @pytest.mark.parametrize("chunk", [3, 4, BUCKET])
 def test_prefill_chunk_matches_full_prefill(setup, chunk):
     cfg, params, _, _, test = setup
@@ -221,6 +317,20 @@ def test_chunked_matches_stall_token_for_token(setup):
     for decode_toks, prefill_toks in res["chunked"]["budget_trace"]:
         assert prefill_toks <= max(0, BUDGET - decode_toks)
     assert res["chunked"]["prefill"]["kind"] == "chunked"
+    # fused dispatch: the chunked engine issues EXACTLY ONE prefill
+    # launch per iteration with scheduled chunks — never one per chunk
+    trace = res["chunked"]["prefill_dispatch_trace"]
+    assert len(trace) == len(res["chunked"]["budget_trace"])
+    assert all(d in (0, 1) for d in trace)
+    assert [d > 0 for d in trace] == \
+        [p > 0 for _, p in res["chunked"]["budget_trace"]]
+    assert res["chunked"]["prefill_dispatches"] == sum(trace)
+    # and strictly fewer launches than the per-admission stall path
+    # whenever prompts split into more than one chunk per iteration
+    assert res["chunked"]["exec_cache_misses"] >= 1
+    assert (res["chunked"]["exec_cache_hits"]
+            + res["chunked"]["exec_cache_misses"]
+            == res["chunked"]["prefill_dispatches"])
 
 
 def test_tail_latency_metrics_reported(setup):
@@ -269,6 +379,11 @@ def test_engine_vs_sim_chunked_parity(setup, policy_name):
         token_budget=BUDGET)
     assert res["completion_order"] == [t.task.task_id for t in sim.tasks]
     assert res["budget_trace"] == sim.budget_trace
+    # dispatch + fused-executable-cache accounting parity
+    assert res["prefill_dispatches"] == sim.prefill_dispatches
+    assert res["prefill_dispatch_trace"] == sim.prefill_dispatch_trace
+    assert res["exec_cache_hits"] == sim.exec_cache_hits
+    assert res["exec_cache_misses"] == sim.exec_cache_misses
 
 
 def test_engine_vs_sim_chunked_parity_tight_budget(setup):
@@ -292,6 +407,30 @@ def test_engine_vs_sim_chunked_parity_tight_budget(setup):
     assert res["completion_order"] == [t.task.task_id for t in sim.tasks]
     assert res["rejected_for_memory"] == sim.kv_rejected
     assert res["budget_trace"] == sim.budget_trace
+    assert res["prefill_dispatches"] == sim.prefill_dispatches
+    assert res["prefill_dispatch_trace"] == sim.prefill_dispatch_trace
+    assert res["exec_cache_hits"] == sim.exec_cache_hits
+    assert res["exec_cache_misses"] == sim.exec_cache_misses
+
+
+def test_engine_vs_sim_dispatch_parity_stall(setup):
+    """Stall admission issues one prefill launch PER ADMISSION (the
+    burst the fused path collapses); the simulator mirrors the total
+    and the per-iteration burst sizes exactly."""
+    cfg, params, persona, profile, test = setup
+    pcfg = dataclasses.replace(profile.policy_config(), tau=1e18)
+    eng = _engine(setup, kv="paged", kv_block_size=4)
+    res = eng.serve(_requests(test, CAPS))
+    sim = simulator.simulate_continuous(
+        _sim_tasks(test, CAPS, profile, persona),
+        sched.POLICIES["fifo"](persona, pcfg))
+    assert res["prefill_dispatches"] == len(CAPS) == sim.prefill_dispatches
+    assert res["prefill_dispatch_trace"] == sim.prefill_dispatch_trace
+    # a burst of several admissions in one iteration means several
+    # launches per iteration — the O(#admissions) regime
+    assert max(res["prefill_dispatch_trace"]) > 1
+    assert res["exec_cache_hits"] == sim.exec_cache_hits == 0
+    assert res["exec_cache_misses"] == sim.exec_cache_misses == 0
 
 
 def test_sim_chunked_bounds_itl_vs_stall():

@@ -9,7 +9,8 @@ import pytest
 
 from repro.kernels import (chunked_prefill_attention as cpa,
                            decode_attention as fd, flash_attention as fa,
-                           paged_decode_attention as pfd, ref,
+                           paged_decode_attention as pfd,
+                           ragged_chunked_prefill as rcp, ref,
                            rmsnorm as rn)
 
 DTYPES = [jnp.float32, jnp.bfloat16]
@@ -198,6 +199,129 @@ def test_chunked_prefill_matches_full_causal():
                                                interpret=True)
     np.testing.assert_allclose(np.asarray(got_kernel), np.asarray(want),
                                atol=2e-5, rtol=2e-5)
+
+
+def _ragged_case(lens, ctxs, *, H=4, KV=2, D=32, bs=16, seed=0,
+                 dtype=jnp.float32):
+    """Build a fused ragged-prefill case: C chunks with the given
+    lengths and prior-context lengths, each owning its own permuted
+    block table (plus spare garbage pages), queries padded to the
+    power-of-two chunk bucket like the engine's packed layout."""
+    C = len(lens)
+    Tp = 1
+    while Tp < max(lens):
+        Tp *= 2
+    nb = max(-(-(c + l) // bs) for c, l in zip(ctxs, lens)) + 1
+    N = C * nb + 3
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (C, Tp, H, D), jnp.float32).astype(dtype)
+    kn = jax.random.normal(ks[1], (C, Tp, KV, D), jnp.float32).astype(dtype)
+    vn = jax.random.normal(ks[2], (C, Tp, KV, D), jnp.float32).astype(dtype)
+    kp = jax.random.normal(ks[3], (N, bs, KV, D), jnp.float32).astype(dtype)
+    vp = jax.random.normal(ks[4], (N, bs, KV, D), jnp.float32).astype(dtype)
+    rng = np.random.default_rng(seed * 7 + C)
+    perm = rng.permutation(N)
+    tables = jnp.asarray(perm[:C * nb].reshape(C, nb).astype(np.int32))
+    off, meta = 0, []
+    for c, (ln, ctx) in enumerate(zip(lens, ctxs)):
+        meta.append([c, ctx, ln, off])
+        off += ln
+    return q, kn, vn, kp, vp, tables, jnp.asarray(meta, jnp.int32)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("lens,ctxs", [
+    ([1, 1, 1], [0, 5, 31]),          # single-token chunks
+    ([10, 24], [13, 7]),              # chunks crossing page boundaries
+    ([16, 8, 4], [0, 0, 0]),          # zero prior context everywhere
+    ([32], [9]),                      # one-request degenerate batch
+    ([16, 64, 128, 64, 16], [3, 0, 40, 16, 128]),  # mixed {16,64,128}
+])
+def test_ragged_chunked_prefill_sweep(lens, ctxs, dtype):
+    """Fused ragged kernel vs the jnp oracle: attention output on every
+    VALID row (rows past chunk_len are undefined padding) and the page
+    pools — the in-kernel scatter must match the oracle's drop-mode
+    packed scatter bit for bit."""
+    q, kn, vn, kp, vp, tables, meta = _ragged_case(lens, ctxs, dtype=dtype)
+    out, nk, nv = rcp.ragged_chunked_prefill(q, kn, vn, kp, vp, tables,
+                                             meta, interpret=True)
+    want, wk, wv = ref.ragged_chunked_prefill_ref(q, kn, vn, kp, vp,
+                                                  tables, meta)
+    np.testing.assert_array_equal(np.asarray(nk), np.asarray(wk))
+    np.testing.assert_array_equal(np.asarray(nv), np.asarray(wv))
+    assert out.shape == q.shape and out.dtype == dtype
+    for c, ln in enumerate(lens):
+        np.testing.assert_allclose(
+            np.asarray(out[c, :ln]).astype(np.float32),
+            np.asarray(want[c, :ln]).astype(np.float32), **_tol(dtype))
+
+
+def test_ragged_matches_per_chunk_kernel():
+    """Triangle closure: one fused launch over C chunks equals C
+    separate ``chunked_prefill_attention`` launches run after a
+    separate scatter pass (same pages, same masks)."""
+    lens, ctxs = [16, 64, 128], [5, 0, 30]
+    q, kn, vn, kp, vp, tables, meta = _ragged_case(lens, ctxs, seed=3)
+    out, nk, nv = rcp.ragged_chunked_prefill(q, kn, vn, kp, vp, tables,
+                                             meta, interpret=True)
+    # per-chunk reference: scatter each chunk, then run the per-chunk
+    # kernel against the post-scatter pages
+    _, sk, sv = ref.ragged_chunked_prefill_ref(q, kn, vn, kp, vp,
+                                               tables, meta)
+    for c, ln in enumerate(lens):
+        got_c = cpa.chunked_prefill_attention(
+            q[c:c + 1, :ln], sk, sv, tables[c:c + 1],
+            meta[c:c + 1, 1], interpret=True)
+        np.testing.assert_allclose(np.asarray(out[c, :ln]),
+                                   np.asarray(got_c[0]),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_ragged_padding_chunk_writes_nothing():
+    """A padding chunk (chunk_len == 0, trash-only table — the engine's
+    contract: a scattered page is never revisited by another chunk)
+    must leave every page bit-identical and not disturb its batch
+    siblings."""
+    lens, ctxs = [8, 4], [0, 16]
+    q, kn, vn, kp, vp, tables, meta = _ragged_case(lens, ctxs, seed=5)
+    # append a padding chunk whose table points only at a spare (trash)
+    # page no real chunk owns, exactly as the engine builds it
+    meta_pad = jnp.concatenate(
+        [meta, jnp.asarray([[2, 0, 0, 12]], jnp.int32)])
+    # _ragged_case keeps 3 spare pages; pick one no chunk's table uses
+    spare = (set(range(kp.shape[0])) - set(np.asarray(tables).ravel()
+                                           .tolist())).pop()
+    tables_pad = jnp.concatenate(
+        [tables, jnp.full_like(tables[:1], spare)])
+    q3 = jnp.concatenate([q, q[:1]])
+    kn3 = jnp.concatenate([kn, kn[:1]])
+    vn3 = jnp.concatenate([vn, vn[:1]])
+    out3, nk3, nv3 = rcp.ragged_chunked_prefill(
+        q3, kn3, vn3, kp, vp, tables_pad, meta_pad, interpret=True)
+    out, nk, nv = rcp.ragged_chunked_prefill(q, kn, vn, kp, vp, tables,
+                                             meta, interpret=True)
+    np.testing.assert_array_equal(np.asarray(nk3), np.asarray(nk))
+    np.testing.assert_array_equal(np.asarray(nv3), np.asarray(nv))
+    for c, ln in enumerate(lens):
+        np.testing.assert_array_equal(np.asarray(out3[c, :ln]),
+                                      np.asarray(out[c, :ln]))
+
+
+def test_ops_ragged_wrapper_dispatch():
+    """ops.ragged_chunked_prefill: kernel (interpret) vs oracle path."""
+    from repro.kernels import ops
+    lens, ctxs = [4, 16], [0, 9]
+    q, kn, vn, kp, vp, tables, meta = _ragged_case(lens, ctxs, seed=11)
+    a_out, a_k, a_v = ops.ragged_chunked_prefill(
+        q, kn, vn, kp, vp, tables, meta, use_pallas=True, interpret=True)
+    b_out, b_k, b_v = ops.ragged_chunked_prefill(
+        q, kn, vn, kp, vp, tables, meta, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(b_k))
+    np.testing.assert_array_equal(np.asarray(a_v), np.asarray(b_v))
+    for c, ln in enumerate(lens):
+        np.testing.assert_allclose(np.asarray(a_out[c, :ln]),
+                                   np.asarray(b_out[c, :ln]),
+                                   atol=1e-4, rtol=1e-4)
 
 
 @pytest.mark.parametrize("dtype", DTYPES)
