@@ -222,6 +222,96 @@ def run_paged(policy_name="fifo", n_engine=32, seed=SEED):
     }
 
 
+def run_decode_dispatch(policy_name="fifo", n_engine=24, seed=SEED,
+                        steps=4):
+    """Async host pipeline: decode dispatches per serve at N=1 vs N=4.
+
+    Every decode window is ONE device launch covering N steps, so
+    dispatches per executed decode step fall EXACTLY Nx (1 -> 1/N,
+    asserted) while the greedy tokens stay identical (asserted) — this
+    benchmark is the acceptance gate for the multi-step pipeline, not
+    just a reporter.  The END-TO-END launch-count reduction is
+    workload-dependent and lands below N: admission waits for window
+    boundaries and finished slots ride their window to its end
+    (eviction in arrears), so windows carry dead slot-steps —
+    ``step_inflation_x`` reports that overhang cost next to the
+    dispatch win, and a >= 2x floor is asserted as the regression
+    gate.  Results land in experiments/bench/decode_dispatch.json.
+    """
+    import jax
+    from repro import configs
+    from repro.models import model as model_lib
+    from repro.serving.engine import Request, ServingEngine
+
+    persona = persona_for_bench()
+    # decode-dominated, all-at-once variant of the bimodal workload:
+    # caps of 4 would spend most of every 4-step window on finished
+    # slots (the ratio would measure tail waste, not the pipeline),
+    # and staggered arrivals race real wall-clock time — admission
+    # timing, hence the launch counts, would jitter run to run
+    train, test, caps, arrivals = build_workload(n=n_engine, seed=seed,
+                                                 short=16, window=0.0)
+    profile = sched.offline_profile(train, persona, epochs=20, seed=seed)
+    cfg = configs.get_smoke_config("starcoder2-3b")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = [Request(text=t.text, arrival=a, task_id=i, max_new_tokens=c)
+            for i, (t, c, a) in enumerate(zip(test, caps, arrivals))]
+    out = {"decode_steps": steps, "n_requests": n_engine}
+    for prefill, pkw in (("stall", {}),
+                         ("chunked", dict(chunk_size=4, token_budget=16))):
+        col, tokens = {}, {}
+        for n in (1, steps):
+            policy = sched.POLICIES[policy_name](persona,
+                                                 profile.policy_config())
+            eng = ServingEngine(params, cfg, policy, profile,
+                                input_bucket=INPUT_BUCKET,
+                                max_new_tokens=LONG, mode="continuous",
+                                eos_id=-1, kv="paged", prefill=prefill,
+                                decode_steps=n, **pkw)
+            t0 = time.time()
+            res = eng.serve(reqs)
+            eng.allocator.check_no_leaks()
+            # every window launch executes exactly N steps
+            assert (res["decode_steps_executed"]
+                    == n * res["decode_dispatches"]), (
+                f"{prefill} N={n}: steps_executed != N * dispatches")
+            tokens[n] = {t.task.task_id: list(t.task.out_tokens)
+                         for t in res["tasks"]}
+            col[f"n{n}"] = {
+                "decode_dispatches": res["decode_dispatches"],
+                "decode_steps_executed": res["decode_steps_executed"],
+                "steps_per_launch": (res["decode_steps_executed"]
+                                     / max(1, res["decode_dispatches"])),
+                "mean_response_s": res["mean_response_s"],
+                "wall_s": time.time() - t0,
+            }
+        # multi-step windows must not change greedy output ...
+        assert tokens[1] == tokens[steps], (
+            f"{prefill}: tokens differ between N=1 and N={steps}")
+        # ... and the per-step dispatch rate must fall EXACTLY Nx
+        # (1 launch/step -> 1 launch per N steps; exact because every
+        # window executes its full N steps, finished slots included)
+        per_step = ((col["n1"]["decode_dispatches"]
+                     / col["n1"]["decode_steps_executed"])
+                    / (col[f"n{steps}"]["decode_dispatches"]
+                       / col[f"n{steps}"]["decode_steps_executed"]))
+        assert abs(per_step - steps) < 1e-9, (
+            f"{prefill}: per-step dispatch reduction {per_step} != {steps}")
+        # end-to-end launch count: workload-dependent (window
+        # quantization adds dead slot-steps), floor-asserted
+        ratio = (col["n1"]["decode_dispatches"]
+                 / max(1, col[f"n{steps}"]["decode_dispatches"]))
+        assert ratio >= 2.5, (
+            f"{prefill}: dispatch reduction {ratio:.2f}x < 2.5x floor")
+        col["dispatch_per_step_reduction_x"] = per_step
+        col["dispatch_reduction_x"] = ratio
+        col["step_inflation_x"] = (
+            col[f"n{steps}"]["decode_steps_executed"]
+            / col["n1"]["decode_steps_executed"])
+        out[prefill] = col
+    return out
+
+
 def main(seed=SEED):
     t0 = time.time()
     sim = run_sim("fifo", seed=seed)
@@ -244,6 +334,15 @@ def main(seed=SEED):
                 f"{paged['engine']['concurrency_gain']:.2f},"
                 f"engine_throughput_x="
                 f"{paged['engine']['throughput_ratio']:.2f}")
+    t0 = time.time()
+    dd = run_decode_dispatch("fifo", seed=seed)
+    common.save("decode_dispatch", dd)
+    spl = dd["stall"]["n%d" % dd["decode_steps"]]["steps_per_launch"]
+    common.emit("decode_dispatch", time.time() - t0,
+                f"stall_dispatch_x={dd['stall']['dispatch_reduction_x']:.2f},"
+                f"chunked_dispatch_x="
+                f"{dd['chunked']['dispatch_reduction_x']:.2f},"
+                f"steps_per_launch={spl:.0f}")
 
 
 if __name__ == "__main__":

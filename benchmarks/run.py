@@ -93,6 +93,17 @@ def run_roofline(only=None):
 
 
 def run_continuous(only=None, seed=0):
+    if only == "decode_dispatch":
+        t0 = time.time()
+        dd = continuous_vs_batch.run_decode_dispatch("fifo", seed=seed)
+        common.save("decode_dispatch", dd)
+        spl = dd["stall"]["n%d" % dd["decode_steps"]]["steps_per_launch"]
+        common.emit(
+            "decode_dispatch", time.time() - t0,
+            f"stall_dispatch_x={dd['stall']['dispatch_reduction_x']:.2f},"
+            f"chunked_dispatch_x="
+            f"{dd['chunked']['dispatch_reduction_x']:.2f},"
+            f"steps_per_launch={spl:.0f}")
     if only is None or only in ("continuous_vs_batch_sim",
                                 "continuous_vs_batch_engine",
                                 "continuous_vs_batch",

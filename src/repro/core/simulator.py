@@ -46,8 +46,9 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.kvcache import BlockAllocator, PrefixCache, blocks_for_tokens
-from repro.prefill import ChunkScheduler, pack_plans
+from repro.kvcache import (BlockAllocator, PrefixCache, blocks_for_tokens,
+                           window_target_tokens)
+from repro.prefill import ChunkScheduler, pack_plans, suffix_shape_key
 
 from . import scheduler as sched_lib
 from .personas import Persona
@@ -101,6 +102,14 @@ class SimResult:
     cached_tokens_reused: int = 0
     cow_copies: int = 0
     prefix_evictions: int = 0
+    # decode-dispatch accounting (async host pipeline mirror of the
+    # engine's multi-step decode window): launches, total steps
+    # (steps/dispatches == decode_steps exactly) and steps per window
+    # (chunked mode aligns entries with budget_trace, 0 = prefill-only
+    # iteration) — all three parity-match ServingEngine._result.
+    decode_dispatches: int = 0
+    decode_steps_executed: int = 0
+    decode_dispatch_trace: List = dataclasses.field(default_factory=list)
 
     # ---- paper metrics ------------------------------------------------
     @property
@@ -253,6 +262,26 @@ def simulate(tasks: Sequence[SimTask], policy: sched_lib.Policy, *,
                      prefill_dispatch_trace=dispatch_trace)
 
 
+@dataclasses.dataclass
+class PrefixState:
+    """Prefix-cache state surviving across ``simulate_continuous``
+    calls — the simulator mirror of
+    ``ServingEngine(persist_prefix_cache=True)``, whose page pool,
+    allocator and prefix index outlive a single ``serve()``.  Build one
+    with ``make_prefix_state`` and pass it to successive calls; each
+    call resets the per-run counters (``PrefixCache.reset_stats``)
+    while the index and its block pins carry over."""
+
+    alloc: BlockAllocator
+    pc: PrefixCache
+
+
+def make_prefix_state(kv_num_blocks: int,
+                      kv_block_size: int) -> PrefixState:
+    alloc = BlockAllocator(kv_num_blocks, kv_block_size)
+    return PrefixState(alloc=alloc, pc=PrefixCache(alloc, kv_block_size))
+
+
 def simulate_continuous(tasks: Sequence[SimTask],
                         policy: sched_lib.Policy, *,
                         xi: float = 2.0,
@@ -265,7 +294,10 @@ def simulate_continuous(tasks: Sequence[SimTask],
                         chunk_size: Optional[int] = None,
                         token_budget: Optional[int] = None,
                         prefix_cache: bool = False,
-                        prompt_tokens=None) -> SimResult:
+                        prompt_tokens=None,
+                        decode_steps: int = 1,
+                        prefix_state: Optional[PrefixState] = None
+                        ) -> SimResult:
     """Iteration-level (continuous) batching over C decode slots.
 
     Mirrors the real engine's step loop exactly (serving/engine.py
@@ -311,6 +343,21 @@ def simulate_continuous(tasks: Sequence[SimTask],
     trace agree bit-for-bit.  Prefill cost scales with the UNCACHED
     suffix: stall admission charges ``item_time * suffix / prompt_len``
     and chunk jobs cover only the suffix — cache hits shorten TTFT.
+
+    Multi-step decode windows (``decode_steps=N`` — the cost model of
+    the engine's async host pipeline): each decode iteration advances
+    every active slot by N steps in one modeled launch, block tables
+    are pre-extended to ``kvcache.window_target_tokens`` (clamped at
+    the admission reservation, so rejection decisions are independent
+    of N), tokens are consumed step-major, and EVICTION IS IN ARREARS:
+    a sequence finishing at window step j frees its blocks — and its
+    slot — only at window end, exactly as the engine does.  Admissions
+    therefore happen only at window boundaries, one utilization sample
+    is taken per window, and ``decode_dispatch_trace`` records steps
+    per window; ``decode_steps=1`` reduces bit-for-bit to the
+    synchronous per-step model.  ``prefix_state``
+    (``make_prefix_state``) carries the allocator + prefix index across
+    calls — the mirror of ``persist_prefix_cache=True``.
     """
     persona = policy.persona
     pending = sorted(tasks, key=lambda t: t.r)
@@ -327,7 +374,11 @@ def simulate_continuous(tasks: Sequence[SimTask],
             raise ValueError('prefill="chunked" needs chunk_size and '
                              'token_budget')
         sched = ChunkScheduler(chunk_size, token_budget)
+    if decode_steps < 1:
+        raise ValueError(f"decode_steps must be >= 1, got {decode_steps}")
     pc = None
+    if prefix_state is not None and not prefix_cache:
+        raise ValueError("prefix_state requires prefix_cache=True")
     if prefix_cache:
         if not kv_model:
             raise ValueError('prefix_cache=True needs kv_block_size and '
@@ -337,8 +388,12 @@ def simulate_continuous(tasks: Sequence[SimTask],
         if prompt_tokens is None:
             raise ValueError('prefix_cache=True needs a prompt_tokens '
                              'callable (task -> padded token bucket)')
-        alloc = BlockAllocator(kv_num_blocks, kv_block_size)
-        pc = PrefixCache(alloc, kv_block_size)
+        if prefix_state is not None:
+            alloc, pc = prefix_state.alloc, prefix_state.pc
+            pc.reset_stats()
+        else:
+            alloc = BlockAllocator(kv_num_blocks, kv_block_size)
+            pc = PrefixCache(alloc, kv_block_size)
     if kv_model:
         worst = max((blocks_for_tokens(
             prompt_len + max(1, t.true_out_len) - 1, kv_block_size)
@@ -365,6 +420,9 @@ def simulate_continuous(tasks: Sequence[SimTask],
     exec_keys: set = set()          # fused-executable shape-key novelty
     exec_hits = 0
     exec_misses = 0
+    dispatches_dec = 0              # decode windows (engine mirror)
+    steps_dec = 0                   # decode steps across all windows
+    dec_trace: List[int] = []       # steps per window
     ttfts: List[float] = []
     itls: List[float] = []
     last_tok = [0.0] * C            # last token emission time per slot
@@ -478,6 +536,11 @@ def simulate_continuous(tasks: Sequence[SimTask],
                 budget_trace.append(
                     (len(active0), sum(p.length for p in plans)))
                 dispatch_trace.append(1 if plans else 0)
+                # aligned with budget_trace, as in the engine: steps
+                # launched this iteration (0 = prefill-only iteration)
+                dec_trace.append(decode_steps
+                                 if any(t is not None for t in slots)
+                                 else 0)
         else:
             # admissions into freed slots (uncertainty-aware, stalling
             # the loop for one amortized prefill per admission — and
@@ -499,6 +562,16 @@ def simulate_continuous(tasks: Sequence[SimTask],
                     # path makes, so counters match bit for bit
                     toks = tuple(prompt_tokens(task))
                     adm = pc.admit(id(task), toks)
+                    if adm.start > 0:
+                        # the engine routes the uncached suffix through
+                        # the fused ragged executable as a single-chunk
+                        # launch; mirror its shape-key novelty
+                        key = suffix_shape_key(prompt_len - adm.start)
+                        if key in exec_keys:
+                            exec_hits += 1
+                        else:
+                            exec_keys.add(key)
+                            exec_misses += 1
                     now += (persona.item_time
                             * (prompt_len - adm.start) / prompt_len)
                     pc.commit(id(task), toks)
@@ -525,29 +598,36 @@ def simulate_continuous(tasks: Sequence[SimTask],
         if any(t is not None for t in slots):
             active = [s for s in range(C) if slots[s] is not None]
             peak_conc = max(peak_conc, len(active))
-            now += persona.eta                 # one decode step, all slots
+            nsteps = decode_steps
             if kv_model and pc is not None:
                 # real-allocator model (prefix mode): mirror the
-                # engine's lazy boundary-crossing allocation host-side,
-                # then sample the allocator directly — shared prefix
-                # blocks and cached-but-unreferenced blocks count once,
+                # engine's pre-window extension host-side (every useful
+                # write of the next nsteps launches, clamped at the
+                # reservation — kvcache.window_target_tokens), then
+                # sample the allocator directly — shared prefix blocks
+                # and cached-but-unreferenced blocks count once,
                 # exactly as in the engine's utilization samples
                 for s in active:
                     key = id(slots[s])
-                    if (blocks_for_tokens(prompt_len + produced[s],
-                                          kv_block_size)
-                            > len(alloc.table(key))):
+                    target = blocks_for_tokens(window_target_tokens(
+                        prompt_len, produced[s],
+                        max(1, slots[s].true_out_len), nsteps),
+                        kv_block_size)
+                    while target > len(alloc.table(key)):
                         alloc.allocate(key)
                 kv_util.append(alloc.utilization())
             elif kv_model:
-                # lazy-allocation model: this step writes logical
-                # position prompt + produced - 1, so each slot holds
-                # blocks_for(prompt + produced) physical blocks; slots
+                # lazy-allocation model: the window writes logical
+                # positions up to the window target (clamped at the
+                # sequence's reservation), so each slot holds
+                # blocks_for(window_target) physical blocks; slots
                 # mid-chunked-prefill hold their whole prompt's blocks
                 # (allocated at admission, as in the engine)
-                held = sum(blocks_for_tokens(prompt_len + produced[s],
-                                             kv_block_size)
-                           for s in active)
+                held = sum(blocks_for_tokens(window_target_tokens(
+                    prompt_len, produced[s],
+                    max(1, slots[s].true_out_len), nsteps),
+                    kv_block_size)
+                    for s in active)
                 if chunked:
                     held += (len(sched.slots_in_prefill())
                              * blocks_for_tokens(prompt_len,
@@ -555,19 +635,38 @@ def simulate_continuous(tasks: Sequence[SimTask],
                 kv_util.append(held / kv_num_blocks)
             else:
                 kv_util.append(len(active) / C)
-            for s in range(C):
-                if slots[s] is None:
+            dispatches_dec += 1
+            steps_dec += nsteps
+            if not chunked:
+                # stall mode: one trace entry per executed window (the
+                # chunked entry was appended with budget_trace above)
+                dec_trace.append(nsteps)
+            # N-step window, consumed step-major; a sequence finishing
+            # at window step j stops producing but keeps its slot and
+            # blocks until window end (eviction in arrears — the
+            # engine's eviction-lag invariant)
+            finished: List[int] = []
+            for _ in range(nsteps):
+                now += persona.eta         # one decode step, all slots
+                for s in active:
+                    if s in finished:
+                        continue
+                    produced[s] += 1
+                    itls.append(now - last_tok[s])
+                    last_tok[s] = now
+                    if produced[s] >= slots[s].true_out_len:
+                        slots[s].finish = now
+                        done.append(slots[s])
+                        finished.append(s)
+            # window-end frees in slot order (matches the engine, so
+            # allocator free-list state stays bit-identical)
+            for s in active:
+                if s not in finished:
                     continue
-                produced[s] += 1
-                itls.append(now - last_tok[s])
-                last_tok[s] = now
-                if produced[s] >= slots[s].true_out_len:
-                    slots[s].finish = now      # evicted THIS step
-                    done.append(slots[s])
-                    if pc is not None:
-                        alloc.free_sequence(id(slots[s]))
-                    slots[s] = None
-                    reserved[s] = 0
+                if pc is not None:
+                    alloc.free_sequence(id(slots[s]))
+                slots[s] = None
+                reserved[s] = 0
             progressed = True
 
         if cpu.free_at <= now + 1e-12 and cpu_queue:
@@ -606,6 +705,9 @@ def simulate_continuous(tasks: Sequence[SimTask],
                      prefill_dispatch_trace=dispatch_trace,
                      exec_cache_hits=exec_hits,
                      exec_cache_misses=exec_misses,
+                     decode_dispatches=dispatches_dec,
+                     decode_steps_executed=steps_dec,
+                     decode_dispatch_trace=dec_trace,
                      prefix_hit_rate=pstats.get("prefix_hit_rate", 0.0),
                      cached_tokens_reused=pstats.get(
                          "cached_tokens_reused", 0),

@@ -17,6 +17,12 @@ system prompts) can map many sequences to the same physical blocks.
       ``ceil(tokens / block_size)`` used by the engine's admission gate
       and the simulator's block-budget model (they must agree exactly
       for engine-vs-sim parity).
+  allocator.window_target_tokens — the multi-step decode-window
+      extension target (eviction-lag accounting for the async host
+      pipeline): pre-window allocation covers every USEFUL write of an
+      N-step launch, clamped at the admission reservation so overhang
+      writes past EOS/cap never touch foreign blocks and rejection
+      decisions are independent of N.
   paged.PagedKVCache — device-side paged K/V store (one
       ``(num_blocks, block_size, kv_heads, head_dim)`` array pair per
       layer) plus the pure-jnp gather/scatter/copy primitives the
@@ -39,6 +45,7 @@ the same host-side prefix-cache model), kernels/ (Pallas
 tables).  See docs/ARCHITECTURE.md for the full configuration matrix.
 """
 
-from .allocator import BlockAllocator, blocks_for_tokens  # noqa: F401
+from .allocator import (BlockAllocator, blocks_for_tokens,  # noqa: F401
+                        window_target_tokens)
 from .paged import PagedKVCache  # noqa: F401
 from .prefix import PrefixCache, block_hashes  # noqa: F401

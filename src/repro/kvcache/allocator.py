@@ -48,6 +48,34 @@ def blocks_for_tokens(num_tokens: int, block_size: int) -> int:
     return -(-num_tokens // block_size)
 
 
+def window_target_tokens(prompt_len: int, produced: int, cap: int,
+                         steps: int) -> int:
+    """Tokens a slot's block table must cover before an N-step decode
+    window (the multi-step launch of the async host pipeline).
+
+    A slot that has ``produced`` tokens sits at write position
+    ``prompt + produced - 1``; window step j (1-based) writes position
+    ``prompt + produced + j - 2`` and emits token ``produced + j``.
+    Readback — and therefore EOS/cap detection and eviction — happens
+    only at window END (in arrears), so a sequence may be stepped up
+    to ``steps - 1`` times past its logical end.  The LAST useful write
+    is the one emitting token ``cap`` (position ``prompt + cap - 2``),
+    which is why the target clamps at ``prompt + cap - 1``: overhang
+    writes past the cap fall off the sequence's table onto the trash
+    page (the scatter primitives clamp the block index to the table
+    width), and post-EOS writes before the cap land in the slot's own
+    still-held private blocks, freed untouched at window end.
+
+    The clamp is the eviction-lag invariant: the target never exceeds
+    the admission reservation ``blocks_for(prompt + cap - 1)``, so
+    admission/rejection decisions are identical for every ``steps`` —
+    the engine and the simulator both allocate against this formula.
+    ``steps=1`` reduces exactly to the synchronous per-step rule
+    ``prompt + produced`` (the pre-window state of the original loop).
+    """
+    return prompt_len + min(produced + steps, cap) - 1
+
+
 class OutOfBlocksError(RuntimeError):
     """Raised when an allocation is requested from an empty free list.
 

@@ -110,9 +110,13 @@ class PrefixCache:
     Owns no device state: it drives a ``BlockAllocator`` (share /
     allocate / cow_block / drop_ref) and an insertion-ordered
     ``hash -> physical block`` map whose order IS the LRU order
-    (entries are re-appended on every hit).  One instance per
-    ``serve()`` — the device page pool is rebuilt per serve, so cached
-    block ids must not outlive it.
+    (entries are re-appended on every hit).  Cached block ids index ONE
+    device page pool: by default the engine builds a fresh instance per
+    ``serve()`` alongside a fresh pool, but with
+    ``ServingEngine(persist_prefix_cache=True)`` the pool, allocator
+    and this index survive across serves (repeat traffic hits warm) —
+    the engine then calls ``reset_stats()`` at each serve start so the
+    counters stay per-serve while the index persists.
     """
 
     def __init__(self, allocator: BlockAllocator, block_size: int):
@@ -140,6 +144,16 @@ class PrefixCache:
         self.lookup_blocks = 0           # full blocks probed
         self.hit_blocks = 0              # probes that hit
         self.tokens_reused = 0           # prompt tokens NOT recomputed
+        self.cow_copies = 0
+        self.evictions = 0
+
+    def reset_stats(self) -> None:
+        """Zero the per-serve counters WITHOUT touching the index or
+        its block references (persistent-cache serve start: metrics are
+        per serve, cached content carries over)."""
+        self.lookup_blocks = 0
+        self.hit_blocks = 0
+        self.tokens_reused = 0
         self.cow_copies = 0
         self.evictions = 0
 

@@ -280,6 +280,56 @@ def decode_step_paged(params: dict, cfg, cache: dict, token: Array,
     return next_token, logits, new_cache
 
 
+def decode_steps(params: dict, cfg, cache: dict, token: Array, *,
+                 num_steps: int):
+    """``num_steps`` greedy decode steps as ONE ``lax.scan`` launch (the
+    async host pipeline's multi-step decode window).
+
+    token: (B, 1) i32 — the previous step's sampled token for every row.
+    Returns (tokens (B, num_steps) i32, new_cache): column j holds the
+    token emitted by window step j; the last column is the next window's
+    input.  The scan body is exactly ``decode_step``, so ``num_steps=1``
+    is bit-identical to a single step — the engine's N=1 parity default.
+
+    EOS/cap handling stays on the HOST at window end (in arrears): every
+    row is stepped all ``num_steps`` times, and the caller discards the
+    columns past a sequence's logical end.  The overhang writes are
+    harmless by the eviction-lag invariant (``kvcache.allocator.
+    window_target_tokens``) — the contiguous ring confines them to the
+    dead row, the paged scatter clamps them onto the trash page.
+    """
+    def body(carry, _):
+        tok, c = carry
+        nt, _, c = decode_step(params, cfg, c, tok)
+        return (nt, c), nt[:, 0]
+
+    (_, new_cache), toks = lax.scan(
+        body, (token, cache), None, length=num_steps)
+    return toks.T, new_cache                          # (B, num_steps)
+
+
+def decode_steps_paged(params: dict, cfg, cache: dict, token: Array,
+                       tables: Array, *, num_steps: int,
+                       use_pallas: bool = False):
+    """Paged twin of ``decode_steps``: ``num_steps`` ``decode_step_paged``
+    iterations in one ``lax.scan`` launch against the page pool.
+
+    The block tables are fixed for the WHOLE window — the engine extends
+    every active slot's table to ``window_target_tokens`` before the
+    launch, so each step's scatter lands in a pre-backed (or trash)
+    block and no host round-trip interrupts the scan.
+    """
+    def body(carry, _):
+        tok, c = carry
+        nt, _, c = decode_step_paged(params, cfg, c, tok, tables,
+                                     use_pallas=use_pallas)
+        return (nt, c), nt[:, 0]
+
+    (_, new_cache), toks = lax.scan(
+        body, (token, cache), None, length=num_steps)
+    return toks.T, new_cache                          # (B, num_steps)
+
+
 def prefill_into_paged(params: dict, cfg, cache: dict, batch: dict, slot,
                        table_row, max_len: int, cache_dtype=jnp.bfloat16):
     """Prefill ONE request (batch dim 1) and scatter its KV into the

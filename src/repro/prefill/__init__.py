@@ -38,16 +38,18 @@ stack, and each attention layer either calls the fused Pallas
 block-table indirection, K/V scatter fused in via aliased page
 outputs) under ``use_pallas``, or the exact jnp path (drop-mode packed
 scatter ``kvcache.paged.scatter_packed`` + per-chunk
-``layers.chunked_attention`` over the gathered view) elsewhere.  The
-single-chunk path (``model.prefill_chunk`` →
-``transformer.prefill_chunk_paged`` → ``scatter_chunk`` + the
-``chunked_prefill_attention`` kernel) remains for prefix-cached STALL
-admission suffixes.  All paths are bit-identical to the stall prefill,
-so chunking never changes greedy output.
+``layers.chunked_attention`` over the gathered view) elsewhere.
+Prefix-cached STALL admission routes its uncached suffix through the
+SAME fused executable as a single-chunk launch (``suffix_shape_key``),
+so a prefix hit pays one fused dispatch, not the per-chunk path.  All
+paths are bit-identical to the stall prefill, so chunking never
+changes greedy output.
 """
 
 from .scheduler import (ChunkBatch, ChunkJob, ChunkPlan, ChunkScheduler,
-                        PackedChunk, build_packed_arrays, pack_plans)
+                        PackedChunk, build_packed_arrays, pack_plans,
+                        pow2_bucket, suffix_shape_key)
 
 __all__ = ["ChunkBatch", "ChunkJob", "ChunkPlan", "ChunkScheduler",
-           "PackedChunk", "build_packed_arrays", "pack_plans"]
+           "PackedChunk", "build_packed_arrays", "pack_plans",
+           "pow2_bucket", "suffix_shape_key"]

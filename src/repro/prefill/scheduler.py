@@ -98,6 +98,25 @@ def _pow2(n: int) -> int:
     return p
 
 
+def pow2_bucket(n: int) -> int:
+    """Public alias of the shape-bucketing rule.  The stall-mode
+    prefix-suffix launch (a single-chunk ``ChunkBatch`` equivalent)
+    must compute the SAME shape key as ``pack_plans`` would — engine
+    and simulator both derive ``(pow2(L), 1, pow2(L))`` for a suffix of
+    L tokens from this function, keeping their executable-cache
+    counters parity-comparable."""
+    return _pow2(n)
+
+
+def suffix_shape_key(suffix_len: int) -> tuple:
+    """``ChunkBatch.shape_key`` of a single-chunk launch of
+    ``suffix_len`` tokens — what ``pack_plans`` yields for one plan
+    covering the whole suffix (the stall-mode prefix-cached admission
+    path)."""
+    p = _pow2(suffix_len)
+    return (p, 1, p)
+
+
 @dataclasses.dataclass
 class PackedChunk:
     """One merged, contiguous ragged chunk of a ``ChunkBatch``.

@@ -68,6 +68,7 @@ and the jitted prefill/decode executables are reused across batches.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -80,15 +81,27 @@ from repro.core import priority as prio
 from repro.core import scheduler as sched_lib
 from repro.core.simulator import _pct as pct
 from repro.core.personas import Persona
-from repro.kvcache import BlockAllocator, blocks_for_tokens
+from repro.kvcache import (BlockAllocator, blocks_for_tokens,
+                           window_target_tokens)
 from repro.kvcache.paged import PagedKVCache
 from repro.kvcache.prefix import PrefixCache
 from repro.models import transformer
-from repro.prefill import ChunkScheduler, build_packed_arrays, pack_plans
+from repro.prefill import (ChunkScheduler, build_packed_arrays, pack_plans,
+                           suffix_shape_key)
 
 from . import generate
+from .pipeline import CompletionWorker
+
+logger = logging.getLogger(__name__)
 
 EOS_ID = 1
+# max_len headroom past input_bucket + max_new_tokens.  It doubles as
+# the multi-step decode window's OVERHANG budget: with readback in
+# arrears a slot may be stepped up to decode_steps - 1 times past its
+# logical end, and those dead-row writes must stay inside the slot's
+# own ring (contiguous) / its table's clamp range (paged) — hence the
+# constructor's ``decode_steps - 1 <= _MAX_LEN_SLACK`` validation.
+_MAX_LEN_SLACK = 8
 
 
 def hash_tokenize(text: str, vocab_size: int, max_len: int) -> List[int]:
@@ -162,7 +175,10 @@ class ServingEngine:
                  chunk_size: int = 16,
                  token_budget: Optional[int] = None,
                  use_pallas: Optional[bool] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 decode_steps: int = 1,
+                 aot_warmup: bool = True,
+                 persist_prefix_cache: bool = False):
         if mode not in ("batch", "continuous"):
             raise ValueError(f"unknown mode {mode!r}")
         if kv not in ("contiguous", "paged"):
@@ -177,6 +193,21 @@ class ServingEngine:
         if prefix_cache and kv != "paged":
             raise ValueError('prefix_cache=True requires mode="continuous"'
                              ', kv="paged"')
+        if decode_steps < 1:
+            raise ValueError(f"decode_steps must be >= 1, got "
+                             f"{decode_steps}")
+        if decode_steps > 1 and mode != "continuous":
+            raise ValueError('decode_steps > 1 requires mode="continuous" '
+                             "(batch mode has no persistent decode loop)")
+        if decode_steps - 1 > _MAX_LEN_SLACK:
+            raise ValueError(
+                f"decode_steps={decode_steps}: the eviction lag "
+                f"(decode_steps - 1 overhang writes past a sequence's "
+                f"end) exceeds the max_len slack ({_MAX_LEN_SLACK}) that "
+                "keeps dead-row writes inside the slot's own KV range")
+        if persist_prefix_cache and not prefix_cache:
+            raise ValueError("persist_prefix_cache=True requires "
+                             "prefix_cache=True")
         self.params = params
         self.cfg = cfg
         self.policy = policy
@@ -188,7 +219,13 @@ class ServingEngine:
         self.mode = mode
         self.eos_id = eos_id
         self.kv = kv
-        self.max_len = input_bucket + max_new_tokens + 8
+        self.max_len = input_bucket + max_new_tokens + _MAX_LEN_SLACK
+        # async host pipeline knobs: N decode steps per launch (N=1 is
+        # the bit-parity synchronous default) and AOT executable warmup
+        # at serve() start
+        self.decode_steps = decode_steps
+        self.aot_warmup = aot_warmup
+        self.persist_prefix_cache = persist_prefix_cache
         # continuous-mode decode width; paged engines raise it above the
         # persona batch size so the BLOCK BUDGET (not worst-case slot
         # length) bounds concurrency
@@ -232,24 +269,34 @@ class ServingEngine:
         self._prefill = generate.make_prefill_fn(cfg, self.max_len)
         self._decode = generate.make_decode_fn(cfg)
         self._slot_prefill = generate.make_slot_prefill_fn(cfg, self.max_len)
+        self._decode_steps_fn = generate.make_decode_steps_fn(cfg)
         self.prefix_cache_enabled = prefix_cache
         if kv == "paged":
             self._paged_prefill = generate.make_paged_prefill_fn(
                 cfg, self.max_len)
             self._paged_decode = generate.make_paged_decode_fn(
                 cfg, use_pallas)
-            if prefill == "chunked":
+            self._paged_decode_steps = generate.make_paged_decode_steps_fn(
+                cfg, use_pallas)
+            if prefill == "chunked" or prefix_cache:
                 # the FUSED executable: every scheduled chunk of an
-                # iteration in one launch (padded-shape-keyed memo)
+                # iteration in one launch (padded-shape-keyed memo).
+                # Prefix-cached STALL admission routes its uncached
+                # suffix through the same executable as a single-chunk
+                # launch, so a prefix hit pays one fused dispatch.
                 self._ragged_prefill = generate.make_ragged_prefill_fn(
                     cfg, use_pallas)
             if prefix_cache:
-                # prefix-cached stall admission prefills only the
-                # uncached SUFFIX, which needs the traced-offset chunk
-                # executable even in prefill="stall" mode
-                self._chunk_prefill = generate.make_chunk_prefill_fn(
-                    cfg, use_pallas)
                 self._copy_block = generate.make_copy_block_fn(cfg)
+        # AOT warm keys: the factory memo shares JitExecutables across
+        # same-cfg engines, so every key carries the dims that fix this
+        # engine's array shapes — two engines with identical dims share
+        # warmed executables; differing dims never collide.
+        self._aot_dims = (self.num_slots, self.input_bucket, self.max_len,
+                          self.kv, self.kv_num_blocks, self.kv_block_size)
+        self._window_key = ("window", self._aot_dims, self.decode_steps)
+        self._admit_key = ("admit", self._aot_dims)
+        self._cow_key = ("cow", self._aot_dims)
         self.scheduler_overhead_s = 0.0
         # exposed for the slot-recycling tests: per-slot cache after the
         # last continuous serve, and the admission audit trail
@@ -285,6 +332,18 @@ class ServingEngine:
         self.exec_cache_hits = 0
         self.exec_cache_misses = 0
         self._exec_keys: set = set()
+        # decode-dispatch accounting (reset per serve): launches and
+        # steps of the multi-step decode window — steps/dispatches ==
+        # decode_steps exactly (every window launches the full N; dead
+        # rows ride along and are discarded at readback).  The trace
+        # records steps per window (chunked mode aligns entries with
+        # budget_trace, 0 = no decode that iteration).  The simulator
+        # mirrors all three.
+        self.decode_dispatches = 0
+        self.decode_steps_total = 0
+        self.decode_dispatch_trace: List[int] = []
+        # completion worker (serving.pipeline) of the serve in flight
+        self._worker: Optional[CompletionWorker] = None
 
     # ------------------------------------------------------------------
     def _to_sim_task(self, req: Request) -> prio.SimTask:
@@ -375,12 +434,28 @@ class ServingEngine:
         self.exec_cache_hits = 0
         self.exec_cache_misses = 0
         self._exec_keys = set()
-        self.prefix_cache = None
-        if self.mode == "continuous":
-            if self.prefill == "chunked":
-                return self._serve_continuous_chunked(requests)
-            return self._serve_continuous(requests)
-        return self._serve_batch(requests)
+        self.decode_dispatches = 0
+        self.decode_steps_total = 0
+        self.decode_dispatch_trace = []
+        # the jnp-fallback warning is one-time PER SERVE (a process
+        # running many engines must not mask later serves' fallbacks)
+        generate.reset_fallback_warning()
+        if not self.persist_prefix_cache:
+            # default: the device page pool is rebuilt per serve, so
+            # cached block ids must not outlive it.  With persistence
+            # the pool, allocator and index survive (the continuous
+            # setup reuses them and resets the per-serve counters).
+            self.prefix_cache = None
+        try:
+            self._worker = CompletionWorker()
+            if self.mode == "continuous":
+                if self.prefill == "chunked":
+                    return self._serve_continuous_chunked(requests)
+                return self._serve_continuous(requests)
+            return self._serve_batch(requests)
+        finally:
+            self._worker.close()
+            self._worker = None
 
     def _result(self, done: List[prio.SimTask], n: int) -> Dict:
         ps = (self.prefix_cache.stats()
@@ -448,6 +523,13 @@ class ServingEngine:
             "prefill_dispatch_trace": list(self.prefill_dispatch_trace),
             "exec_cache_hits": self.exec_cache_hits,
             "exec_cache_misses": self.exec_cache_misses,
+            # decode-dispatch accounting (async host pipeline): one
+            # launch per N-step window, so steps/dispatches ==
+            # decode_steps exactly; the trace holds steps per window.
+            # All three parity-match SimResult.
+            "decode_dispatches": self.decode_dispatches,
+            "decode_steps_executed": self.decode_steps_total,
+            "decode_dispatch_trace": list(self.decode_dispatch_trace),
             # prefix-cache metrics (kvcache.prefix counters; the
             # simulator's cache model reports the identical fields —
             # the engine-vs-sim parity tests compare them directly).
@@ -465,6 +547,10 @@ class ServingEngine:
             "prefill": {"kind": self.prefill,
                         "chunk_size": self.chunk_size,
                         "token_budget": self.token_budget},
+            "pipeline": {"decode_steps": self.decode_steps,
+                         "aot_warmup": self.aot_warmup,
+                         "persist_prefix_cache":
+                             self.persist_prefix_cache},
         }
 
     def _serve_batch(self, requests: Sequence[Request]) -> Dict:
@@ -517,47 +603,178 @@ class ServingEngine:
     # continuous batching: persistent decode loop with slot recycling
     # ------------------------------------------------------------------
 
-    def _extend_block_tables(self, active, slot_task, slot_gen, alloc,
-                             kvc) -> None:
-        """Boundary crossings before a paged decode step: the step
-        writes position S + slot_gen - 1 for each active slot; allocate
-        its block lazily (the admission reservation guarantees one is
-        free).  Shared by the stall and chunked serve loops."""
+    def _extend_block_tables(self, active, slot_task, slot_gen, slot_cap,
+                             alloc, kvc, steps: int) -> None:
+        """Boundary crossings before a paged decode WINDOW: extend each
+        active slot's table to cover every useful write of the next
+        ``steps`` launches-in-one (``kvcache.window_target_tokens`` —
+        clamped at the admission reservation, so the pool can never run
+        dry and rejection decisions are independent of ``steps``).
+        Overhang writes past the clamp land on the trash page via the
+        scatter primitives' table-width clamp.  Shared by the stall and
+        chunked serve loops; ``steps=1`` is the original synchronous
+        per-step rule."""
         S = self.input_bucket
         for s in active:
             tid = slot_task[s].task.task_id
+            target = alloc.blocks_for(window_target_tokens(
+                S, slot_gen[s], slot_cap[s], steps))
             have = len(alloc.table(tid))
-            if alloc.blocks_for(S + slot_gen[s]) > have:
+            while target > have:
                 kvc.extend_table(s, have, alloc.allocate(tid))
+                have += 1
 
-    def _advance_decoded_slots(self, active, next_host, now, slot_task,
-                               slot_gen, slot_cap, tokens, done, *,
-                               alloc=None, kvc=None,
+    def _advance_decode_window(self, active, window_host, now, dt,
+                               slot_task, slot_gen, slot_cap, tokens,
+                               done, *, alloc=None, kvc=None,
                                reserved=None) -> None:
-        """Post-decode bookkeeping shared by the stall and chunked
-        serve loops: record each active slot's token + emission time,
-        evict finished sequences THE SAME step (in slot order — the
-        completion order the simulator mirrors), and, when paged
-        (``alloc`` given), return their blocks and point the table at
-        the trash page."""
+        """Window-END (in-arrears) bookkeeping shared by the stall and
+        chunked serve loops: consume the (C, n) window tokens STEP-MAJOR
+        (step j, slots in slot order — for n=1 this is exactly the old
+        per-step loop, including completion order), record each token
+        with its interpolated emission time, mark sequences finished at
+        their EOS/cap step and discard their remaining window columns.
+        Eviction happens only after the whole window is consumed: a
+        finished sequence's blocks stayed held while the device stepped
+        past its end (the eviction-lag invariant — overhang writes hit
+        the slot's own blocks or the trash page, never a freed or
+        foreign block), and are returned here, before any admission
+        decision that could reuse them."""
+        n = window_host.shape[1]
+        finished: List[int] = []
+        for j in range(n):
+            t_j = now - dt + dt * (j + 1) / n
+            for s in active:
+                if slot_task[s] is None or s in finished:
+                    continue
+                tok = int(window_host[s, j])
+                slot_gen[s] += 1
+                task = slot_task[s]
+                task.task.out_tokens.append(tok)
+                task.task.token_times.append(t_j)
+                if tok == self.eos_id or slot_gen[s] >= slot_cap[s]:
+                    task.finish = t_j
+                    task.task.finish = t_j
+                    task.task.out_len = slot_gen[s]
+                    done.append(task)
+                    finished.append(s)
+                else:
+                    tokens[s, 0] = tok
+        # eviction in arrears: frees happen at window end, in slot
+        # order (the simulator frees in the same order, so allocator
+        # free-list state stays bit-identical)
         for s in active:
-            slot_gen[s] += 1
-            tokens[s, 0] = int(next_host[s, 0])
-            task = slot_task[s]
-            task.task.out_tokens.append(int(next_host[s, 0]))
-            task.task.token_times.append(now)
-            if (int(next_host[s, 0]) == self.eos_id
-                    or slot_gen[s] >= slot_cap[s]):
-                task.finish = now
-                task.task.finish = now
-                task.task.out_len = slot_gen[s]
-                done.append(task)
-                slot_task[s] = None
-                tokens[s, 0] = generate.PAD_ID
-                if alloc is not None:
-                    alloc.free_sequence(task.task.task_id)
-                    kvc.clear_table(s)
-                    reserved[s] = 0
+            if s not in finished:
+                continue
+            tid = slot_task[s].task.task_id
+            slot_task[s] = None
+            tokens[s, 0] = generate.PAD_ID
+            if alloc is not None:
+                alloc.free_sequence(tid)
+                kvc.clear_table(s)
+                reserved[s] = 0
+
+    # ------------------------------------------------------------------
+    def _paged_setup(self):
+        """Build — or, with ``persist_prefix_cache=True``, revive — the
+        paged serve state (page pool, allocator, prefix cache).  On the
+        persistent path the device pool's cached blocks carry their KV
+        content across serves (all decode slots were evicted at the
+        previous serve's end, so only cache-pinned blocks are live) and
+        the prefix index keeps its entries while its per-serve counters
+        reset."""
+        C = self.num_slots
+        if (self.persist_prefix_cache and self.paged_cache is not None
+                and self.prefix_cache is not None):
+            kvc, alloc = self.paged_cache, self.allocator
+            pc = self.prefix_cache
+            pc.reset_stats()
+            return kvc, alloc, pc, kvc.state
+        kvc = PagedKVCache(self.cfg, C, self.kv_num_blocks,
+                           self.kv_block_size, self.max_len)
+        alloc = BlockAllocator(self.kv_num_blocks, self.kv_block_size)
+        self.paged_cache, self.allocator = kvc, alloc
+        pc = None
+        if self.prefix_cache_enabled:
+            pc = PrefixCache(alloc, self.kv_block_size)
+            self.prefix_cache = pc
+        return kvc, alloc, pc, kvc.state
+
+    def _ragged_aot_key(self, shape_key: tuple) -> tuple:
+        return ("ragged", self._aot_dims, shape_key)
+
+    def _aot_warm(self, cache, kvc=None) -> None:
+        """AOT-compile the continuous serve loop's executables at
+        ``serve()`` start (``jit.lower(avals).compile()`` per shape
+        key), so the first request pays neither trace nor compile time.
+        ``lower().compile()`` does NOT populate the jit call cache —
+        the ``Compiled`` objects live in each ``JitExecutable``'s AOT
+        store (shared across same-shape engines via the factory memo)
+        and the loops dispatch through ``call_aot``.
+
+        Warmed: the N-step decode window, the admission prefill (stall
+        mode), the CoW page copy and the block-quantized
+        prefix-suffix ragged keys (prefix cache), and the single-chunk
+        ragged keys a chunked serve typically opens with.  Ragged keys
+        outside the warmed set (workload-dependent ChunkBatch shapes)
+        fall back to jit-on-first-call, counted by exec_cache_misses as
+        before.  Warmup failure degrades to jit-on-first-call."""
+        if not self.aot_warmup:
+            return
+        C, S, n = self.num_slots, self.input_bucket, self.decode_steps
+
+        def sds(tree):
+            return jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+        p_s, c_s = sds(self.params), sds(cache)
+        tok_s = jax.ShapeDtypeStruct((C, 1), jnp.int32)
+        i32 = jax.ShapeDtypeStruct((), jnp.int32)
+        batch_s = {"tokens": jax.ShapeDtypeStruct((1, S), jnp.int32)}
+        try:
+            if self.kv == "paged":
+                nb = kvc.max_blocks_per_seq
+                tables_s = jax.ShapeDtypeStruct((C, nb), jnp.int32)
+                row_s = jax.ShapeDtypeStruct((nb,), jnp.int32)
+                self._paged_decode_steps.warm(
+                    self._window_key, (p_s, c_s, tok_s, tables_s),
+                    {"num_steps": n})
+                if self.prefill == "stall":
+                    self._paged_prefill.warm(
+                        self._admit_key, (p_s, c_s, batch_s, i32, row_s))
+                ragged_lens: set = set()
+                if self.prefix_cache_enabled:
+                    self._copy_block.warm(self._cow_key, (c_s, i32, i32))
+                    if self.prefill == "stall":
+                        # every reachable uncached-suffix length: prefix
+                        # matches are block-quantized, plus the L=1
+                        # full-match recompute
+                        bs = self.kv_block_size
+                        ragged_lens |= {S - k * bs
+                                        for k in range(1, S // bs + 1)
+                                        if S - k * bs > 0} | {1}
+                if self.prefill == "chunked":
+                    ragged_lens |= {min(self.chunk_size, S), S}
+                for L in sorted(ragged_lens):
+                    key = suffix_shape_key(L)
+                    TTp, Cp, Tp = key
+                    self._ragged_prefill.warm(
+                        self._ragged_aot_key(key),
+                        (p_s, c_s,
+                         {"tokens": jax.ShapeDtypeStruct((1, TTp),
+                                                         jnp.int32)},
+                         jax.ShapeDtypeStruct((TTp,), jnp.int32),
+                         jax.ShapeDtypeStruct((Cp, 4), jnp.int32),
+                         jax.ShapeDtypeStruct((Cp, nb), jnp.int32)),
+                        {"chunk_pad": Tp})
+            else:
+                self._decode_steps_fn.warm(
+                    self._window_key, (p_s, c_s, tok_s), {"num_steps": n})
+                self._slot_prefill.warm(
+                    self._admit_key, (p_s, c_s, batch_s, i32))
+        except Exception as exc:  # pragma: no cover - environment-specific
+            logger.warning("AOT warmup failed (%s); executables will "
+                           "trace on first call", exc)
 
     def _serve_continuous(self, requests: Sequence[Request]) -> Dict:
         persona = self.persona
@@ -571,18 +788,13 @@ class ServingEngine:
         bulk: List[prio.SimTask] = []
         done: List[prio.SimTask] = []
         pc = None
+        kvc = alloc = None
         if paged:
-            kvc = PagedKVCache(self.cfg, C, self.kv_num_blocks,
-                               self.kv_block_size, self.max_len)
-            alloc = BlockAllocator(self.kv_num_blocks, self.kv_block_size)
+            kvc, alloc, pc, cache = self._paged_setup()
             reserved = [0] * C       # per-slot worst-case block holdback
-            cache = kvc.state
-            self.paged_cache, self.allocator = kvc, alloc
-            if self.prefix_cache_enabled:
-                pc = PrefixCache(alloc, self.kv_block_size)
-                self.prefix_cache = pc
         else:
             cache = transformer.init_slot_cache(self.cfg, C, self.max_len)
+        self._aot_warm(cache, kvc)
         slot_task: List[Optional[prio.SimTask]] = [None] * C
         slot_gen = [0] * C
         slot_cap = [0] * C
@@ -634,37 +846,54 @@ class ServingEngine:
                     # longest-cached-prefix admission: matched blocks
                     # are SHARED into the table (refcounted), the CoW
                     # page copy covers a full-prompt match, and prefill
-                    # runs only from the first uncached position (the
-                    # traced-offset chunk executable)
+                    # runs only from the first uncached position —
+                    # through the SAME fused ragged executable as
+                    # chunked mode, as a single-chunk launch
                     reserved[slot] = need
                     tid = task.task.task_id
                     plan = pc.admit(tid, toks)
                     kvc.set_table(slot, alloc.table(tid))
                     for src, dst in plan.cow:
-                        cache = self._copy_block(cache, jnp.int32(src),
-                                                 jnp.int32(dst))
+                        cache = self._copy_block.call_aot(
+                            self._cow_key, cache, jnp.int32(src),
+                            jnp.int32(dst))
                     if plan.start == 0:
-                        cache, last_logits = self._paged_prefill(
-                            self.params, cache, batch, jnp.int32(slot),
-                            kvc.table_row(slot))
+                        cache, last_logits = self._paged_prefill.call_aot(
+                            self._admit_key, self.params, cache, batch,
+                            jnp.int32(slot), kvc.table_row(slot))
                     else:
-                        cache, last_logits = self._chunk_prefill(
-                            self.params, cache,
-                            {"tokens": jnp.asarray(
-                                toks[None, plan.start:])},
-                            jnp.int32(slot), kvc.table_row(slot),
-                            jnp.int32(plan.start))
+                        key = suffix_shape_key(S - plan.start)
+                        if key in self._exec_keys:
+                            self.exec_cache_hits += 1
+                        else:
+                            self._exec_keys.add(key)
+                            self.exec_cache_misses += 1
+                        tokens_arr, token_chunk, meta, tabs = \
+                            build_packed_arrays(
+                                key,
+                                [(slot, plan.start, toks[plan.start:],
+                                  alloc.table(tid))],
+                                pad_slot=C,
+                                table_width=kvc.max_blocks_per_seq,
+                                trash_block=kvc.trash_block)
+                        cache, last_logits = self._ragged_prefill.call_aot(
+                            self._ragged_aot_key(key), self.params, cache,
+                            {"tokens": jnp.asarray(tokens_arr)},
+                            jnp.asarray(token_chunk), jnp.asarray(meta),
+                            jnp.asarray(tabs), chunk_pad=key[2])
+                        last_logits = last_logits[0]   # chunk row 0
                     pc.commit(tid, toks)
                 elif paged:
                     reserved[slot] = need
                     kvc.set_table(slot, alloc.allocate_n(
                         task.task.task_id, alloc.blocks_for(S)))
-                    cache, last_logits = self._paged_prefill(
-                        self.params, cache, batch, jnp.int32(slot),
-                        kvc.table_row(slot))
+                    cache, last_logits = self._paged_prefill.call_aot(
+                        self._admit_key, self.params, cache, batch,
+                        jnp.int32(slot), kvc.table_row(slot))
                 else:
-                    cache, last_logits = self._slot_prefill(
-                        self.params, cache, batch, jnp.int32(slot))
+                    cache, last_logits = self._slot_prefill.call_aot(
+                        self._admit_key, self.params, cache, batch,
+                        jnp.int32(slot))
                 first = int(jnp.argmax(last_logits))
                 dt = time.perf_counter() - t0
                 now += dt
@@ -702,26 +931,38 @@ class ServingEngine:
             if active:
                 self.peak_concurrency = max(self.peak_concurrency,
                                             len(active))
-                # --- one decode step over ALL slots (single executable)
+                # --- one N-step decode WINDOW over ALL slots: a single
+                # scanned launch; the completion worker handles the
+                # blocking readback off the scheduler thread, and all
+                # bookkeeping (token recording, eviction) happens at
+                # window end, in arrears
+                nsteps = self.decode_steps
                 t0 = time.perf_counter()
                 if paged:
                     self._extend_block_tables(active, slot_task,
-                                              slot_gen, alloc, kvc)
-                    next_tok, _, cache = self._paged_decode(
-                        self.params, cache, jnp.asarray(tokens),
-                        kvc.tables_device())
+                                              slot_gen, slot_cap,
+                                              alloc, kvc, nsteps)
+                    window_tok, cache = self._paged_decode_steps.call_aot(
+                        self._window_key, self.params, cache,
+                        jnp.asarray(tokens), kvc.tables_device(),
+                        num_steps=nsteps)
                 else:
-                    next_tok, _, cache = self._decode(
-                        self.params, cache, jnp.asarray(tokens))
-                next_host = np.array(jax.block_until_ready(next_tok))
-                now += time.perf_counter() - t0
-                step += 1
+                    window_tok, cache = self._decode_steps_fn.call_aot(
+                        self._window_key, self.params, cache,
+                        jnp.asarray(tokens), num_steps=nsteps)
+                self._worker.submit(window_tok, t0)
+                window_host, dt = self._worker.collect()
+                now += dt
+                step += nsteps
+                self.decode_dispatches += 1
+                self.decode_steps_total += nsteps
+                self.decode_dispatch_trace.append(nsteps)
                 if paged:
                     self.kv_util_samples.append(alloc.utilization())
                 else:
                     self.kv_util_samples.append(len(active) / C)
-                self._advance_decoded_slots(
-                    active, next_host, now, slot_task, slot_gen,
+                self._advance_decode_window(
+                    active, window_host, now, dt, slot_task, slot_gen,
                     slot_cap, tokens, done,
                     alloc=alloc if paged else None,
                     kvc=kvc if paged else None,
@@ -781,16 +1022,9 @@ class ServingEngine:
         queue: List[prio.SimTask] = []
         bulk: List[prio.SimTask] = []
         done: List[prio.SimTask] = []
-        kvc = PagedKVCache(self.cfg, C, self.kv_num_blocks,
-                           self.kv_block_size, self.max_len)
-        alloc = BlockAllocator(self.kv_num_blocks, self.kv_block_size)
+        kvc, alloc, pc, cache = self._paged_setup()
         reserved = [0] * C           # per-slot worst-case block holdback
-        cache = kvc.state
-        self.paged_cache, self.allocator = kvc, alloc
-        pc = None
-        if self.prefix_cache_enabled:
-            pc = PrefixCache(alloc, self.kv_block_size)
-            self.prefix_cache = pc
+        self._aot_warm(cache, kvc)
         sched = ChunkScheduler(self.chunk_size, self.token_budget)
         slot_task: List[Optional[prio.SimTask]] = [None] * C  # decoding
         slot_gen = [0] * C
@@ -850,8 +1084,9 @@ class ServingEngine:
                     plan = pc.admit(task.task.task_id, toks)
                     start = plan.start
                     for src, dst in plan.cow:
-                        cache = self._copy_block(cache, jnp.int32(src),
-                                                 jnp.int32(dst))
+                        cache = self._copy_block.call_aot(
+                            self._cow_key, cache, jnp.int32(src),
+                            jnp.int32(dst))
                 else:
                     alloc.allocate_n(task.task.task_id,
                                      alloc.blocks_for(S))
@@ -901,16 +1136,16 @@ class ServingEngine:
                     trash_block=kvc.trash_block)
                 stalled = any(t is not None for t in slot_task)
                 t0 = time.perf_counter()
-                cache, last_logits = self._ragged_prefill(
-                    self.params, cache,
+                cache, last_logits = self._ragged_prefill.call_aot(
+                    self._ragged_aot_key(key), self.params, cache,
                     {"tokens": jnp.asarray(tokens_arr)},
                     jnp.asarray(token_chunk), jnp.asarray(meta),
                     jnp.asarray(tabs), chunk_pad=Tp)
                 # greedy-pick on device: only (Cp,) token ids cross the
-                # host link, not the (Cp, V) logits
-                next_ids = np.asarray(jax.block_until_ready(
-                    jnp.argmax(last_logits, axis=-1)))
-                dt = time.perf_counter() - t0
+                # host link, not the (Cp, V) logits; the completion
+                # worker does the blocking readback off this thread
+                self._worker.submit(jnp.argmax(last_logits, axis=-1), t0)
+                next_ids, dt = self._worker.collect()
                 now += dt
                 self.prefill_dispatches += 1     # ONE launch, all chunks
                 if stalled:      # live slots waited out this launch
@@ -950,25 +1185,34 @@ class ServingEngine:
                                            iter_stall)
 
             active = [s for s in range(C) if slot_task[s] is not None]
+            nsteps = self.decode_steps
             if plans or active:
                 self.budget_trace.append((len(active0), prefill_toks))
                 self.prefill_dispatch_trace.append(1 if plans else 0)
+                # aligned with budget_trace: steps launched this
+                # iteration (0 = prefill-only iteration, no decode)
+                self.decode_dispatch_trace.append(nsteps if active else 0)
             if active:
                 self.peak_concurrency = max(self.peak_concurrency,
                                             len(active))
-                # --- one decode step over ALL slots (single executable)
+                # --- one N-step decode WINDOW over ALL slots (see
+                # _serve_continuous; identical launch/readback recipe)
                 t0 = time.perf_counter()
                 self._extend_block_tables(active, slot_task, slot_gen,
-                                          alloc, kvc)
-                next_tok, _, cache = self._paged_decode(
-                    self.params, cache, jnp.asarray(tokens),
-                    kvc.tables_device())
-                next_host = np.array(jax.block_until_ready(next_tok))
-                now += time.perf_counter() - t0
-                step += 1
+                                          slot_cap, alloc, kvc, nsteps)
+                window_tok, cache = self._paged_decode_steps.call_aot(
+                    self._window_key, self.params, cache,
+                    jnp.asarray(tokens), kvc.tables_device(),
+                    num_steps=nsteps)
+                self._worker.submit(window_tok, t0)
+                window_host, dt = self._worker.collect()
+                now += dt
+                step += nsteps
+                self.decode_dispatches += 1
+                self.decode_steps_total += nsteps
                 self.kv_util_samples.append(alloc.utilization())
-                self._advance_decoded_slots(
-                    active, next_host, now, slot_task, slot_gen,
+                self._advance_decode_window(
+                    active, window_host, now, dt, slot_task, slot_gen,
                     slot_cap, tokens, done, alloc=alloc, kvc=kvc,
                     reserved=reserved)
                 continue

@@ -12,6 +12,8 @@ from __future__ import annotations
 
 import functools
 import logging
+import weakref
+from collections import OrderedDict
 from typing import Optional
 
 import jax
@@ -24,6 +26,18 @@ PAD_ID = 0
 
 logger = logging.getLogger(__name__)
 _warned_jnp_fallback = False
+
+
+def reset_fallback_warning() -> None:
+    """Re-arm the one-time jnp-fallback warning.
+
+    The engine calls this at every ``serve()`` start so the warning is
+    one-time PER SERVE, not per process — otherwise the first engine
+    constructed in a long-lived multi-config process (or the first test
+    in a session) consumes the warning and every later serve's silent
+    CPU fallback goes unreported."""
+    global _warned_jnp_fallback
+    _warned_jnp_fallback = False
 
 
 def resolve_use_pallas(use_pallas: Optional[bool]) -> bool:
@@ -45,44 +59,144 @@ def resolve_use_pallas(use_pallas: Optional[bool]) -> bool:
     return use_pallas
 
 
-def make_prefill_fn(cfg, max_len: int):
-    @functools.partial(jax.jit, static_argnames=())
-    def prefill_fn(params, batch):
-        return model_lib.prefill(params, cfg, batch, max_len)
+class JitExecutable:
+    """A jitted entry point plus its AOT-compiled per-shape executables.
 
-    return prefill_fn
+    Transparent to existing callers — ``__call__`` forwards to the jit
+    function (trace-on-first-call as before).  The serving engine's
+    warmup path additionally pins ahead-of-time executables per shape
+    key: ``jax.jit(...).lower(avals).compile()`` does NOT populate the
+    jit call cache, so the ``Compiled`` objects are stored here and
+    invoked directly via ``call_aot`` — first-request TTFT then pays
+    neither trace nor compile time.  A ``call_aot`` at an unwarmed key
+    falls back to the jit function (static kwargs included), so warmup
+    is strictly an optimization, never a correctness dependency.
+    """
+
+    def __init__(self, fn):
+        self.fn = fn
+        self.aot: dict = {}
+
+    def __call__(self, *args, **kwargs):
+        return self.fn(*args, **kwargs)
+
+    def warm(self, key, args, static_kwargs: Optional[dict] = None):
+        """AOT-compile for the abstract ``args`` (ShapeDtypeStruct
+        pytrees) under ``key``; idempotent per key."""
+        if key not in self.aot:
+            self.aot[key] = self.fn.lower(
+                *args, **(static_kwargs or {})).compile()
+        return self.aot[key]
+
+    def call_aot(self, key, *args, **static_kwargs):
+        """Dispatch through the warmed executable for ``key`` when one
+        exists (array args only — statics were baked at lower time),
+        else through the jit function."""
+        compiled = self.aot.get(key)
+        if compiled is not None:
+            return compiled(*args)
+        return self.fn(*args, **static_kwargs)
+
+
+# Factory memo: values are held WEAKLY, keyed by (kind, cfg, ...), so
+# an executable's lifetime is bounded by the engines that hold it —
+# dropping every engine for a config drops its traces and AOT
+# executables with it (the unbounded-growth fix for long-lived
+# multi-config processes).  A small strong LRU rides alongside so the
+# common churn pattern (tests constructing engine after engine for ONE
+# config) keeps its executables hot across instances; its capacity is
+# the hard bound on what the module itself keeps alive.
+_fn_memo: "weakref.WeakValueDictionary" = weakref.WeakValueDictionary()
+_fn_lru: "OrderedDict" = OrderedDict()
+_FN_LRU_CAP = 8
+
+
+def _memoized(key, build) -> JitExecutable:
+    """Bounded factory memo: engines sharing a (hashable) key reuse ONE
+    ``JitExecutable`` — one trace cache AND one AOT store — for as long
+    as any of them (or the strong LRU) keeps it alive.  An unhashable
+    key skips the memo."""
+    try:
+        cached = _fn_memo.get(key)
+    except TypeError:                      # unhashable cfg: no memo
+        return JitExecutable(build())
+    if cached is None:
+        cached = JitExecutable(build())
+        _fn_memo[key] = cached
+    _fn_lru[key] = cached
+    _fn_lru.move_to_end(key)
+    while len(_fn_lru) > _FN_LRU_CAP:
+        _fn_lru.popitem(last=False)
+    return cached
+
+
+def make_prefill_fn(cfg, max_len: int):
+    def build():
+        @functools.partial(jax.jit, static_argnames=())
+        def prefill_fn(params, batch):
+            return model_lib.prefill(params, cfg, batch, max_len)
+
+        return prefill_fn
+
+    return _memoized(("prefill", cfg, max_len), build)
 
 
 def make_decode_fn(cfg):
-    @jax.jit
-    def decode_fn(params, cache, token):
-        return model_lib.decode_step(params, cfg, cache, token)
+    def build():
+        @jax.jit
+        def decode_fn(params, cache, token):
+            return model_lib.decode_step(params, cfg, cache, token)
 
-    return decode_fn
+        return decode_fn
+
+    return _memoized(("decode", cfg), build)
+
+
+def make_decode_steps_fn(cfg):
+    """Jitted multi-step decode window over a per-slot contiguous cache
+    (``model.decode_steps``): ``num_steps`` (static) scan iterations in
+    ONE launch, returning the (B, num_steps) window tokens the engine
+    reads back in arrears.  ``num_steps=1`` is bit-identical to
+    ``make_decode_fn``'s single step."""
+    def build():
+        @functools.partial(jax.jit, static_argnames=("num_steps",))
+        def decode_steps_fn(params, cache, token, *, num_steps):
+            return model_lib.decode_steps(params, cfg, cache, token,
+                                          num_steps=num_steps)
+
+        return decode_steps_fn
+
+    return _memoized(("decode_steps", cfg), build)
 
 
 def make_slot_prefill_fn(cfg, max_len: int):
     """Jitted continuous-batching admission: prefill one (1, S) request
     into slot ``slot`` of a per-slot decode cache.  The slot index is a
     traced operand, so ONE executable serves every slot."""
-    @jax.jit
-    def slot_prefill_fn(params, cache, batch, slot):
-        return model_lib.prefill_into_slot(params, cfg, cache, batch,
-                                           slot, max_len)
+    def build():
+        @jax.jit
+        def slot_prefill_fn(params, cache, batch, slot):
+            return model_lib.prefill_into_slot(params, cfg, cache, batch,
+                                               slot, max_len)
 
-    return slot_prefill_fn
+        return slot_prefill_fn
+
+    return _memoized(("slot_prefill", cfg, max_len), build)
 
 
 def make_paged_prefill_fn(cfg, max_len: int):
     """Jitted paged admission: prefill one (1, S) request into the page
     pool at the blocks named by ``table_row``.  Slot index and table
     are traced operands, so ONE executable serves every admission."""
-    @jax.jit
-    def paged_prefill_fn(params, cache, batch, slot, table_row):
-        return model_lib.prefill_into_paged(params, cfg, cache, batch,
-                                            slot, table_row, max_len)
+    def build():
+        @jax.jit
+        def paged_prefill_fn(params, cache, batch, slot, table_row):
+            return model_lib.prefill_into_paged(params, cfg, cache, batch,
+                                                slot, table_row, max_len)
 
-    return paged_prefill_fn
+        return paged_prefill_fn
+
+    return _memoized(("paged_prefill", cfg, max_len), build)
 
 
 def make_paged_decode_fn(cfg, use_pallas: Optional[bool] = None):
@@ -96,29 +210,37 @@ def make_paged_decode_fn(cfg, use_pallas: Optional[bool] = None):
     mode there)."""
     use_pallas = resolve_use_pallas(use_pallas)
 
-    @jax.jit
-    def paged_decode_fn(params, cache, token, tables):
-        return model_lib.decode_step_paged(params, cfg, cache, token,
-                                           tables, use_pallas=use_pallas)
+    def build():
+        @jax.jit
+        def paged_decode_fn(params, cache, token, tables):
+            return model_lib.decode_step_paged(params, cfg, cache, token,
+                                               tables,
+                                               use_pallas=use_pallas)
 
-    return paged_decode_fn
+        return paged_decode_fn
+
+    return _memoized(("paged_decode", cfg, use_pallas), build)
 
 
-_chunk_fn_memo: dict = {}
+def make_paged_decode_steps_fn(cfg, use_pallas: Optional[bool] = None):
+    """Jitted paged multi-step decode window (``model.decode_steps_paged``):
+    ``num_steps`` (static) scan iterations against the page pool in ONE
+    launch.  Block tables are fixed across the window — the engine
+    pre-extends them to ``kvcache.window_target_tokens`` — so the scan
+    needs no host round-trip."""
+    use_pallas = resolve_use_pallas(use_pallas)
 
+    def build():
+        @functools.partial(jax.jit, static_argnames=("num_steps",))
+        def paged_decode_steps_fn(params, cache, token, tables, *,
+                                  num_steps):
+            return model_lib.decode_steps_paged(
+                params, cfg, cache, token, tables, num_steps=num_steps,
+                use_pallas=use_pallas)
 
-def _memoized(key, build):
-    """Process-wide factory memo: engines sharing a (hashable) key
-    reuse ONE jitted function — and therefore one trace cache — so
-    per-shape executables compile once per process instead of once per
-    engine instance.  An unhashable key skips the memo."""
-    try:
-        cached = _chunk_fn_memo.get(key)
-    except TypeError:                      # unhashable cfg: no memo
-        return build()
-    if cached is None:
-        cached = _chunk_fn_memo[key] = build()
-    return cached
+        return paged_decode_steps_fn
+
+    return _memoized(("paged_decode_steps", cfg, use_pallas), build)
 
 
 def make_chunk_prefill_fn(cfg, use_pallas: Optional[bool] = None):
@@ -127,7 +249,7 @@ def make_chunk_prefill_fn(cfg, use_pallas: Optional[bool] = None):
     ``ctx_len``, scattering its K/V through ``table_row``.  Slot, table
     and offset are traced operands, so ONE executable serves every
     chunk of every request (one retrace per distinct chunk length).
-    Memoized per ``(cfg, use_pallas)``."""
+    Memoized (weakly) per ``(cfg, use_pallas)``."""
     use_pallas = resolve_use_pallas(use_pallas)
 
     def build():
@@ -140,7 +262,7 @@ def make_chunk_prefill_fn(cfg, use_pallas: Optional[bool] = None):
 
         return chunk_prefill_fn
 
-    return _memoized((cfg, use_pallas), build)
+    return _memoized(("chunk", cfg, use_pallas), build)
 
 
 def make_ragged_prefill_fn(cfg, use_pallas: Optional[bool] = None):
@@ -154,7 +276,7 @@ def make_ragged_prefill_fn(cfg, use_pallas: Optional[bool] = None):
     executable per padded shape key ``(padded_tokens, padded_chunks,
     padded_chunk_len)`` — the ``ChunkBatch.shape_key`` buckets —
     instead of retracing per ``(chunk_len, offset)`` pair.  Memoized
-    per ``(cfg, use_pallas)`` like ``make_chunk_prefill_fn``."""
+    (weakly) per ``(cfg, use_pallas)`` like ``make_chunk_prefill_fn``."""
     use_pallas = resolve_use_pallas(use_pallas)
 
     def build():
@@ -178,11 +300,14 @@ def make_copy_block_fn(cfg):
     ONE executable serves every CoW copy."""
     del cfg  # the cache pytree fixes every shape
 
-    @jax.jit
-    def copy_block_fn(cache, src, dst):
-        return transformer.copy_paged_block(cache, src, dst)
+    def build():
+        @jax.jit
+        def copy_block_fn(cache, src, dst):
+            return transformer.copy_paged_block(cache, src, dst)
 
-    return copy_block_fn
+        return copy_block_fn
+
+    return _memoized(("copy_block",), build)
 
 
 def generate(params, cfg, batch: dict, *, max_new_tokens: int,
