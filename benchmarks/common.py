@@ -103,12 +103,81 @@ def run(variance: str, persona_name: str, policy: str, *,
     return simulator.run_policy(tasks, policy, persona, pcfg)
 
 
-def save(name: str, payload) -> str:
+def provenance(seed: int = SEED) -> Dict:
+    """Reproducibility stamp attached to every saved benchmark JSON:
+    enough to re-run the exact measurement (git_sha of the tree,
+    jax version, backend platform, workload seed, wall timestamp)."""
+    import subprocess
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            timeout=10).stdout.strip() or "unknown"
+    except Exception:                       # noqa: BLE001 - no git
+        sha = "unknown"
+    try:
+        import jax
+        jax_version = jax.__version__
+        platform = jax.default_backend()
+    except Exception:                       # noqa: BLE001 - jax-free use
+        jax_version = platform = "unknown"
+    return {
+        "git_sha": sha,
+        "jax_version": jax_version,
+        "platform": platform,
+        "seed": seed,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }
+
+
+def save(name: str, payload, seed: int = SEED) -> str:
     os.makedirs(OUTDIR, exist_ok=True)
     path = os.path.join(OUTDIR, f"{name}.json")
+    # stamp provenance without disturbing the payload rows: dict
+    # payloads get a "_provenance" key, anything else is wrapped
+    stamp = provenance(seed)
+    if isinstance(payload, dict):
+        payload = {"_provenance": stamp, **payload}
+    else:
+        payload = {"_provenance": stamp, "rows": payload}
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     return path
+
+
+def summarize(outdir: str = None) -> Dict:
+    """Collate every ``<outdir>/*.json`` into one BENCH_SUMMARY.json:
+    per-benchmark provenance + top-level scalar fields (nested rows are
+    elided — the summary is a cross-run index, not a data copy)."""
+    outdir = outdir or OUTDIR
+    summary: Dict[str, Dict] = {}
+    for fname in sorted(os.listdir(outdir) if os.path.isdir(outdir)
+                        else []):
+        if not fname.endswith(".json") or fname == "BENCH_SUMMARY.json":
+            continue
+        path = os.path.join(outdir, fname)
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            continue
+        entry: Dict = {}
+        if isinstance(payload, dict):
+            entry["provenance"] = payload.get("_provenance")
+            entry["scalars"] = {
+                k: v for k, v in payload.items()
+                if k != "_provenance"
+                and isinstance(v, (int, float, str, bool))}
+            entry["keys"] = sorted(k for k in payload
+                                   if k != "_provenance")
+        else:
+            entry["keys"] = [f"list[{len(payload)}]"]
+        summary[fname[:-len(".json")]] = entry
+    out = {"generated": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+           "n_benchmarks": len(summary), "benchmarks": summary}
+    with open(os.path.join(outdir, "BENCH_SUMMARY.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
 
 
 def emit(name: str, wall_s: float, derived: str):

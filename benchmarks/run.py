@@ -121,7 +121,14 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0,
                     help="workload/profile seed for the serving "
                          "benchmarks (deterministic JSONs per seed)")
+    ap.add_argument("--summary", action="store_true",
+                    help="collate experiments/bench/*.json into "
+                         "BENCH_SUMMARY.json (runs no benchmarks)")
     args = ap.parse_args(argv)
+    if args.summary:
+        out = common.summarize()
+        print(f"BENCH_SUMMARY.json: {out['n_benchmarks']} benchmarks")
+        return 0
     print("name,us_per_call,derived")
     run_paper_tables(args.only)
     run_kernels(args.only)

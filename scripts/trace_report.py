@@ -1,0 +1,179 @@
+#!/usr/bin/env python
+"""Render a serve/simulation trace (repro.obs JSONL) in the terminal.
+
+    PYTHONPATH=src python scripts/trace_report.py trace.jsonl
+    PYTHONPATH=src python scripts/trace_report.py trace.jsonl \
+        --perfetto trace.json          # + Chrome trace_event export
+    PYTHONPATH=src python scripts/trace_report.py trace.jsonl --width 100
+
+Reads the JSONL sink written by ``Observability`` /
+``TraceRecorder.to_jsonl`` (engine or simulator — same schema), then
+prints:
+
+  * a per-request WATERFALL — one row per request, phases drawn over
+    the trace's time extent (``.`` queued, ``=`` prefill/admission,
+    ``#`` decode, ``R`` rejection retries marker);
+  * a PERCENTILE TABLE — TTFT / inter-token latency / queue wait
+    reconstructed from the event stream via ``repro.obs.timelines``
+    (the same reconstruction the acceptance test checks against the
+    engine's result dict) plus per-request chunk counts;
+  * a span/counter summary when the trace carries engine-side spans.
+
+Exits non-zero on schema violations (unknown event kind — the typed
+vocabulary is ``repro.obs.EVENT_KINDS``), so CI can smoke-check any
+committed trace.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs import EVENT_KINDS, TraceRecorder, timelines
+from repro.obs.metrics import Histogram
+
+
+def validate(rec: TraceRecorder) -> list:
+    """Schema check: every event kind must be in the typed vocabulary."""
+    return sorted({e.kind for e in rec.events} - EVENT_KINDS)
+
+
+def waterfall(rec: TraceRecorder, width: int = 72) -> str:
+    tls = timelines(rec)
+    if not tls:
+        return "(no request events)"
+    t0 = min(t.arrival for t in tls.values() if t.arrival >= 0)
+    t1 = max(max(t.complete_ts, t.first_token_ts, t.admit_ts,
+                 t.arrival) for t in tls.values())
+    span = max(t1 - t0, 1e-9)
+
+    def col(ts: float) -> int:
+        return min(width - 1, max(0, int((ts - t0) / span * (width - 1))))
+
+    lines = [f"waterfall  t0={t0:.3f}s  extent={span:.3f}s  "
+             f"(. queued  = prefill  # decode  R rejected-retry)"]
+    for tid in sorted(tls):
+        t = tls[tid]
+        row = [" "] * width
+        anchors = [x for x in (t.arrival, t.admit_ts, t.first_token_ts,
+                               t.complete_ts) if x >= 0]
+        if not anchors:
+            continue
+        end = max(anchors)
+        for marker, a, b in (
+                (".", t.arrival, t.admit_ts),
+                ("=", t.admit_ts, t.first_token_ts),
+                ("#", t.first_token_ts, t.complete_ts)):
+            if a < 0 or b < 0:
+                continue
+            for c in range(col(a), col(b) + 1):
+                row[c] = marker
+        if t.rejected:
+            row[col(t.arrival if t.arrival >= 0 else end)] = "R"
+        extra = f" chunks={t.chunks}" if t.chunks else ""
+        rej = f" rejected×{t.rejected}" if t.rejected else ""
+        lines.append(f"req {tid:>4} |{''.join(row)}|{extra}{rej}")
+    return "\n".join(lines)
+
+
+def percentile_table(rec: TraceRecorder) -> str:
+    tls = timelines(rec)
+    hists = {"ttft_s": Histogram(), "itl_s": Histogram(),
+             "queue_wait_s": Histogram()}
+    for t in tls.values():
+        if t.ttft is not None:
+            hists["ttft_s"].record(t.ttft)
+        if t.queue_wait is not None:
+            hists["queue_wait_s"].record(t.queue_wait)
+        for itl in t.itls:
+            hists["itl_s"].record(itl)
+    head = (f"{'metric':<14} {'count':>7} {'mean':>10} {'p50':>10} "
+            f"{'p90':>10} {'p99':>10} {'max':>10}")
+    lines = [head, "-" * len(head)]
+    for name, h in hists.items():
+        if h.count == 0:
+            lines.append(f"{name:<14} {0:>7}")
+            continue
+        lines.append(
+            f"{name:<14} {h.count:>7} {h.mean:>10.4f} "
+            f"{h.quantile(0.50):>10.4f} {h.quantile(0.90):>10.4f} "
+            f"{h.quantile(0.99):>10.4f} {h.max:>10.4f}")
+    return "\n".join(lines)
+
+
+def span_summary(rec: TraceRecorder) -> str:
+    if not rec.spans and not rec.counters:
+        return ""
+    by_name: dict = {}
+    for s in rec.spans:
+        h = by_name.setdefault(s.name, Histogram())
+        h.record(s.dur)
+    lines = ["", f"{'span':<16} {'count':>7} {'total_s':>10} "
+                 f"{'mean_s':>10} {'p99_s':>10}"]
+    for name in sorted(by_name):
+        h = by_name[name]
+        lines.append(f"{name:<16} {h.count:>7} {h.total:>10.4f} "
+                     f"{h.mean:>10.6f} {h.quantile(0.99):>10.6f}")
+    if rec.counters:
+        names = sorted({n for n, _, _ in rec.counters})
+        lines.append(f"counter tracks: {', '.join(names)} "
+                     f"({len(rec.counters)} samples)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="JSONL trace (TraceRecorder.to_jsonl)")
+    ap.add_argument("--width", type=int, default=72,
+                    help="waterfall width in columns")
+    ap.add_argument("--perfetto", metavar="OUT.json", default=None,
+                    help="also export Chrome trace_event JSON "
+                         "(open in ui.perfetto.dev)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the percentile table as JSON instead "
+                         "of text (machine-readable smoke checks)")
+    args = ap.parse_args(argv)
+
+    rec = TraceRecorder.load_jsonl(args.trace)
+    unknown = validate(rec)
+    if unknown:
+        print(f"schema violation: unknown event kinds {unknown} "
+              f"(expected subset of {sorted(EVENT_KINDS)})",
+              file=sys.stderr)
+        return 1
+    if not rec.events and not rec.spans:
+        print("empty trace", file=sys.stderr)
+        return 1
+
+    if args.json:
+        tls = timelines(rec)
+        ttft = Histogram()
+        for t in tls.values():
+            if t.ttft is not None:
+                ttft.record(t.ttft)
+        print(json.dumps({
+            "events": len(rec.events), "spans": len(rec.spans),
+            "requests": len(tls),
+            "ttft_p50": ttft.quantile(0.50),
+            "ttft_p99": ttft.quantile(0.99)}))
+    else:
+        print(f"{args.trace}: {len(rec.events)} events, "
+              f"{len(rec.spans)} spans, {len(rec.counters)} counter "
+              f"samples, {len(rec.task_ids())} requests")
+        print()
+        print(waterfall(rec, width=args.width))
+        print()
+        print(percentile_table(rec))
+        s = span_summary(rec)
+        if s:
+            print(s)
+    if args.perfetto:
+        rec.export_perfetto(args.perfetto)
+        print(f"perfetto export: {args.perfetto} "
+              f"(open in ui.perfetto.dev)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.kvcache import (BlockAllocator, PrefixCache, blocks_for_tokens,
                            window_target_tokens)
+from repro.obs.metrics import Histogram
 from repro.prefill import ChunkScheduler, pack_plans, suffix_shape_key
 
 from . import scheduler as sched_lib
@@ -58,6 +59,13 @@ from .priority import SimTask
 def _pct(samples, q: float) -> float:
     return float(np.quantile(np.asarray(samples), q)) if len(samples) \
         else 0.0
+
+
+def _tid(t: SimTask):
+    """Event task id: the wrapped request's task_id when present (the
+    engine stamps the same id, which is what makes event streams
+    comparable), else None."""
+    return getattr(getattr(t, "task", None), "task_id", None)
 
 
 @dataclasses.dataclass
@@ -74,11 +82,26 @@ class SimResult:
     # tail-latency metrics (engine-side mirrors in _result): TTFT per
     # task, pooled inter-token latencies — p99 ITL is where stall
     # prefill shows up as decode jitter.  batch mode models streaming
-    # linearly across the batch's decode horizon.
+    # linearly across the batch's decode horizon.  All percentile
+    # fields come from ``repro.obs.metrics.Histogram`` (log-bucketed
+    # streaming state — the same substrate the engine's _result uses),
+    # so they are estimates within one bucket's relative width
+    # (~2.5%) of the exact order statistic.
     ttft_p50: float = 0.0
+    ttft_p90: float = 0.0
     ttft_p99: float = 0.0
     itl_p50: float = 0.0
+    itl_p90: float = 0.0
     itl_p99: float = 0.0
+    # per-request time from arrival to admission (bulk lane: batch
+    # start) — engine mirror stamps Request.queue_wait_s
+    queue_wait_p50: float = 0.0
+    queue_wait_p90: float = 0.0
+    queue_wait_p99: float = 0.0
+    # engine mirror counts rate-limited kernel/warmup fallbacks
+    # (repro.obs.log); the simulator runs no kernels, so always 0 —
+    # kept so result dicts stay field-compatible
+    fallback_events: int = 0
     # chunked-prefill mode: per-iteration (decode_tokens,
     # prefill_tokens) — the engine records the identical trace
     budget_trace: List = dataclasses.field(default_factory=list)
@@ -141,9 +164,14 @@ class SimResult:
             "miss_rate": self.miss_rate,
             "n_tasks": len(self.tasks),
             "ttft_p50": self.ttft_p50,
+            "ttft_p90": self.ttft_p90,
             "ttft_p99": self.ttft_p99,
             "itl_p50": self.itl_p50,
+            "itl_p90": self.itl_p90,
             "itl_p99": self.itl_p99,
+            "queue_wait_p50": self.queue_wait_p50,
+            "queue_wait_p90": self.queue_wait_p90,
+            "queue_wait_p99": self.queue_wait_p99,
         }
 
 
@@ -155,8 +183,10 @@ class Lane:
 
     def run_batch(self, batch: List[SimTask], now: float,
                   persona: Persona, lane_name: str,
-                  ttfts: Optional[list] = None,
-                  itls: Optional[list] = None) -> float:
+                  ttfts: Optional[Histogram] = None,
+                  itls: Optional[Histogram] = None,
+                  qwaits: Optional[Histogram] = None,
+                  obs=None) -> float:
         start = max(now, self.free_at)
         dur = persona.batch_latency(
             [t.true_out_len for t in batch]) * self.slowdown
@@ -165,23 +195,45 @@ class Lane:
         # max(out_len) steps over ``dur``, so token j of every member is
         # emitted at a linear fraction of the horizon (uniform ITL)
         horizon = max(max((t.true_out_len for t in batch), default=1), 1)
+        if obs is not None:
+            # the engine's _run_batch emits the identical sequence
+            # (events carry no step — bulk batches run outside the
+            # iteration loop)
+            obs.inc("prefill.dispatches")
+            obs.span("bulk_batch", start, dur, lane=lane_name,
+                     size=len(batch))
         for t in batch:
             t.start, t.finish, t.lane = start, finish, lane_name
             if ttfts is not None:
-                ttfts.append(start + dur / horizon - t.r)
+                ttfts.record(start + dur / horizon - t.r)
             if itls is not None and t.true_out_len > 1:
-                itls.extend([dur / horizon] * (t.true_out_len - 1))
+                itls.record(dur / horizon, t.true_out_len - 1)
+            if qwaits is not None:
+                qwaits.record(start - t.r)
+            if obs is not None:
+                if t.true_out_len >= 1:
+                    obs.event("first_token", start + dur / horizon,
+                              _tid(t), lane=lane_name)
+                obs.event("complete", finish, _tid(t), lane=lane_name,
+                          out_len=t.true_out_len)
+                obs.inc("sched.completions")
         self.free_at = finish
         self.busy_time += dur
         return finish
 
 
 def simulate(tasks: Sequence[SimTask], policy: sched_lib.Policy, *,
-             xi: float = 2.0, per_task_overhead_s: float = 0.0) -> SimResult:
+             xi: float = 2.0, per_task_overhead_s: float = 0.0,
+             obs=None) -> SimResult:
     """Run the full trace through the node under ``policy``.
 
     per_task_overhead_s models the scheduler's own latency (Table VII);
     it is added to the dispatch instant of every formed batch.
+
+    ``obs`` — optional ``repro.obs.Observability``: records the same
+    lifecycle event stream / counters as ``ServingEngine`` in batch
+    mode (enqueue / first_token / complete, ``sched.completions``,
+    ``prefill.dispatches``).
     """
     persona = policy.persona
     pending = sorted(tasks, key=lambda t: t.r)
@@ -193,8 +245,7 @@ def simulate(tasks: Sequence[SimTask], policy: sched_lib.Policy, *,
     cpu = Lane(persona.cpu_slowdown)
     now = 0.0
     overhead_total = 0.0
-    ttfts: List[float] = []
-    itls: List[float] = []
+    ttft_h, itl_h, qw_h = Histogram(), Histogram(), Histogram()
     dispatches = 0                  # one prefill launch per run batch
     dispatch_trace: List[int] = []
     i = 0
@@ -214,6 +265,8 @@ def simulate(tasks: Sequence[SimTask], policy: sched_lib.Policy, *,
     while len(done) < n_total:
         # admit arrivals up to `now`
         while i < n_total and pending[i].r <= now + 1e-12:
+            if obs is not None:
+                obs.event("enqueue", pending[i].r, _tid(pending[i]))
             queue.append(pending[i])
             i += 1
 
@@ -226,14 +279,15 @@ def simulate(tasks: Sequence[SimTask], policy: sched_lib.Policy, *,
                 oh = per_task_overhead_s * len(gpu_batch)
                 overhead_total += oh
                 gpu.run_batch(gpu_batch, now + oh, persona, "gpu",
-                              ttfts, itls)
+                              ttft_h, itl_h, qw_h, obs)
                 done.extend(gpu_batch)
                 dispatches += 1
                 dispatch_trace.append(1)
                 progressed = True
         if cpu.free_at <= now + 1e-12 and cpu_queue:
             batch, cpu_queue = cpu_queue[:C], cpu_queue[C:]
-            cpu.run_batch(batch, now, persona, "cpu", ttfts, itls)
+            cpu.run_batch(batch, now, persona, "cpu", ttft_h, itl_h,
+                          qw_h, obs)
             done.extend(batch)
             dispatches += 1
             dispatch_trace.append(1)
@@ -256,8 +310,15 @@ def simulate(tasks: Sequence[SimTask], policy: sched_lib.Policy, *,
     makespan = max(t.finish for t in done) - min(t.r for t in done)
     return SimResult(tasks=done, makespan=makespan,
                      overhead_s=overhead_total,
-                     ttft_p50=_pct(ttfts, 0.50), ttft_p99=_pct(ttfts, 0.99),
-                     itl_p50=_pct(itls, 0.50), itl_p99=_pct(itls, 0.99),
+                     ttft_p50=ttft_h.quantile(0.50),
+                     ttft_p90=ttft_h.quantile(0.90),
+                     ttft_p99=ttft_h.quantile(0.99),
+                     itl_p50=itl_h.quantile(0.50),
+                     itl_p90=itl_h.quantile(0.90),
+                     itl_p99=itl_h.quantile(0.99),
+                     queue_wait_p50=qw_h.quantile(0.50),
+                     queue_wait_p90=qw_h.quantile(0.90),
+                     queue_wait_p99=qw_h.quantile(0.99),
                      prefill_dispatches=dispatches,
                      prefill_dispatch_trace=dispatch_trace)
 
@@ -296,8 +357,8 @@ def simulate_continuous(tasks: Sequence[SimTask],
                         prefix_cache: bool = False,
                         prompt_tokens=None,
                         decode_steps: int = 1,
-                        prefix_state: Optional[PrefixState] = None
-                        ) -> SimResult:
+                        prefix_state: Optional[PrefixState] = None,
+                        obs=None) -> SimResult:
     """Iteration-level (continuous) batching over C decode slots.
 
     Mirrors the real engine's step loop exactly (serving/engine.py
@@ -358,6 +419,17 @@ def simulate_continuous(tasks: Sequence[SimTask],
     synchronous per-step model.  ``prefix_state``
     (``make_prefix_state``) carries the allocator + prefix index across
     calls — the mirror of ``persist_prefix_cache=True``.
+
+    Observability (``obs`` — a ``repro.obs.Observability``): the
+    simulator emits the SAME request-lifecycle event stream as the
+    engine's serve loops, from the same decision points, with the same
+    non-wall fields (slot, step, uncertainty score, kv blocks, dispatch
+    shape key, ...) — ``TraceRecorder.parity_events()`` of an engine
+    run and a sim run of the same trace compare EQUAL, and every
+    counter both sides emit (``MetricsRegistry.counters()``) matches
+    bit-for-bit (tests/test_obs.py::test_engine_vs_sim_event_parity).
+    Only wall-clock fields (event timestamps, span durations) differ:
+    the sim stamps model time, the engine stamps its virtual clock.
     """
     persona = policy.persona
     pending = sorted(tasks, key=lambda t: t.r)
@@ -373,7 +445,9 @@ def simulate_continuous(tasks: Sequence[SimTask],
         if chunk_size is None or token_budget is None:
             raise ValueError('prefill="chunked" needs chunk_size and '
                              'token_budget')
-        sched = ChunkScheduler(chunk_size, token_budget)
+        sched = ChunkScheduler(
+            chunk_size, token_budget,
+            metrics=obs.metrics if obs is not None else None)
     if decode_steps < 1:
         raise ValueError(f"decode_steps must be >= 1, got {decode_steps}")
     pc = None
@@ -394,6 +468,9 @@ def simulate_continuous(tasks: Sequence[SimTask],
         else:
             alloc = BlockAllocator(kv_num_blocks, kv_block_size)
             pc = PrefixCache(alloc, kv_block_size)
+        # same registry hookup the engine's _paged_setup makes, so the
+        # "prefix.*" counters stream into the shared parity view
+        pc.metrics = obs.metrics if obs is not None else None
     if kv_model:
         worst = max((blocks_for_tokens(
             prompt_len + max(1, t.true_out_len) - 1, kv_block_size)
@@ -423,11 +500,13 @@ def simulate_continuous(tasks: Sequence[SimTask],
     dispatches_dec = 0              # decode windows (engine mirror)
     steps_dec = 0                   # decode steps across all windows
     dec_trace: List[int] = []       # steps per window
-    ttfts: List[float] = []
-    itls: List[float] = []
+    ttft_h, itl_h, qw_h = Histogram(), Histogram(), Histogram()
     last_tok = [0.0] * C            # last token emission time per slot
     peak_conc = 0
     i = 0
+    step = 0                        # decode steps executed so far — the
+    # engine's iteration coordinate; stamped on every event so engine
+    # and sim streams line up position for position
 
     def _admit_one(running):
         """Shared admission prologue: one ``policy.admit`` consultation
@@ -450,10 +529,17 @@ def simulate_continuous(tasks: Sequence[SimTask],
             if need > kv_num_blocks - sum(reserved):
                 queue = prev_queue             # leave it queued
                 rejected_ids.add(id(task))
+                if obs is not None:
+                    obs.event("reject", now, _tid(task), step,
+                              kv_blocks=need)
+                    obs.inc("sched.rejections")
                 return "stop", None, 0
         overhead_total += per_task_overhead_s
         now += per_task_overhead_s
         if lane == "cpu":
+            if obs is not None:
+                obs.event("offload", now, _tid(task), step)
+                obs.inc("sched.offloads")
             cpu_queue.append(task)
             return "cpu", None, 0
         if not running:
@@ -462,6 +548,9 @@ def simulate_continuous(tasks: Sequence[SimTask],
 
     while len(done) < n_total:
         while i < n_total and pending[i].r <= now + 1e-12:
+            if obs is not None:
+                obs.event("enqueue", pending[i].r, _tid(pending[i]),
+                          step)
             queue.append(pending[i])
             i += 1
 
@@ -484,6 +573,12 @@ def simulate_continuous(tasks: Sequence[SimTask],
                 s = free.pop(0)
                 if kv_model:
                     reserved[s] = need
+                qw_h.record(now - task.r)
+                if obs is not None:
+                    obs.event("admit", now, _tid(task), step, slot=s,
+                              u=task.u, kv_blocks=need)
+                    obs.inc("sched.admissions")
+                    obs.observe("queue_wait_s", now - task.r)
                 total = prompt_len
                 if pc is not None:
                     # matched prefix blocks shared at admission (same
@@ -491,6 +586,11 @@ def simulate_continuous(tasks: Sequence[SimTask],
                     # the uncached suffix
                     toks = tuple(prompt_tokens(task))
                     adm = pc.admit(id(task), toks)
+                    if obs is not None and adm.matched_blocks:
+                        obs.event("prefix_hit", now, _tid(task), step,
+                                  cached_tokens=adm.start,
+                                  matched_blocks=adm.matched_blocks,
+                                  cow=len(adm.cow))
                     slot_toks[s] = toks
                     total = prompt_len - adm.start
                 sched.add(task, s, total,
@@ -507,11 +607,34 @@ def simulate_continuous(tasks: Sequence[SimTask],
             chunk_batch = pack_plans(plans)
             if chunk_batch is not None:
                 dispatches += 1
-                if chunk_batch.shape_key in exec_keys:
+                hit = chunk_batch.shape_key in exec_keys
+                if hit:
                     exec_hits += 1
                 else:
                     exec_keys.add(chunk_batch.shape_key)
                     exec_misses += 1
+                if obs is not None:
+                    # mirror of the engine's fused-launch emission: one
+                    # exec_cache probe then one prefill_chunk per MERGED
+                    # chunk (the ragged batch the engine launches), all
+                    # before any finishing first_token — identical
+                    # stream order, from the same pack_plans result
+                    obs.event("exec_cache", now, None, step, hit=hit,
+                              shape_key=str(chunk_batch.shape_key))
+                    obs.inc("exec_cache.hits" if hit
+                            else "exec_cache.misses")
+                    obs.inc("prefill.dispatches")
+                    pf_cost = (persona.item_time
+                               * chunk_batch.total_tokens / prompt_len)
+                    obs.span("prefill.ragged", now, pf_cost,
+                             chunks=len(chunk_batch.chunks),
+                             tokens=chunk_batch.total_tokens)
+                    for ch in chunk_batch.chunks:
+                        obs.event("prefill_chunk", now,
+                                  _tid(ch.job.task), step, slot=ch.slot,
+                                  start=ch.start, length=ch.length,
+                                  finishes=ch.finishes,
+                                  shape_key=str(chunk_batch.shape_key))
             for plan in plans:
                 now += persona.item_time * plan.length / prompt_len
                 if plan.finishes:
@@ -519,13 +642,22 @@ def simulate_continuous(tasks: Sequence[SimTask],
                     if pc is not None:
                         pc.commit(id(task), slot_toks.pop(s))
                     task.start, task.lane = now, "gpu"
-                    ttfts.append(now - task.r)
+                    ttft_h.record(now - task.r)
+                    if obs is not None:
+                        obs.event("first_token", now, _tid(task), step,
+                                  slot=s)
                     if task.true_out_len <= 1:  # first token already EOS
                         task.finish = now
                         done.append(task)
                         reserved[s] = 0
                         if pc is not None:
                             alloc.free_sequence(id(task))
+                        if obs is not None:
+                            obs.event("complete", now, _tid(task), step,
+                                      lane="gpu", out_len=1)
+                            obs.event("evict", now, _tid(task), step,
+                                      slot=s)
+                            obs.inc("sched.completions")
                     else:
                         slots[s] = task         # joins THIS step's decode
                         produced[s] = 1         # prefill emits token 1
@@ -556,36 +688,75 @@ def simulate_continuous(tasks: Sequence[SimTask],
                     continue
                 dispatches += 1
                 iter_launches += 1
+                # slot chosen BEFORE prefill (as the engine does): the
+                # admit event carries it even for an immediate finish
+                s = slots.index(None)
+                tid = _tid(task)
+                qw_h.record(now - task.r)
+                if obs is not None:
+                    obs.event("admit", now, tid, step, slot=s,
+                              u=task.u, kv_blocks=need)
+                    obs.inc("sched.admissions")
+                    obs.observe("queue_wait_s", now - task.r)
+                pf_t0 = now
+                pf_start, pf_key, pf_hit = 0, "admit", False
                 if pc is not None:
                     # prefill cost scales with the uncached suffix —
                     # the same admit/commit calls the engine's stall
                     # path makes, so counters match bit for bit
                     toks = tuple(prompt_tokens(task))
                     adm = pc.admit(id(task), toks)
+                    if obs is not None and adm.matched_blocks:
+                        obs.event("prefix_hit", now, tid, step,
+                                  cached_tokens=adm.start,
+                                  matched_blocks=adm.matched_blocks,
+                                  cow=len(adm.cow))
                     if adm.start > 0:
                         # the engine routes the uncached suffix through
                         # the fused ragged executable as a single-chunk
                         # launch; mirror its shape-key novelty
                         key = suffix_shape_key(prompt_len - adm.start)
-                        if key in exec_keys:
+                        pf_hit = key in exec_keys
+                        if pf_hit:
                             exec_hits += 1
                         else:
                             exec_keys.add(key)
                             exec_misses += 1
+                        pf_start, pf_key = adm.start, str(key)
                     now += (persona.item_time
                             * (prompt_len - adm.start) / prompt_len)
                     pc.commit(id(task), toks)
                 else:
                     now += persona.item_time   # per-member bandwidth term
                 task.start, task.lane = now, "gpu"
-                ttfts.append(now - task.r)
+                ttft_h.record(now - task.r)
+                if obs is not None:
+                    # same post-launch emission the engine's stall path
+                    # makes (exec_cache only on the prefix-suffix path)
+                    if pf_key != "admit":
+                        obs.event("exec_cache", now, tid, step,
+                                  hit=pf_hit, shape_key=pf_key)
+                        obs.inc("exec_cache.hits" if pf_hit
+                                else "exec_cache.misses")
+                    obs.inc("prefill.dispatches")
+                    obs.span("prefill.admit", pf_t0, now - pf_t0,
+                             task=tid, slot=s)
+                    obs.event("prefill_chunk", now, tid, step, slot=s,
+                              start=pf_start,
+                              length=prompt_len - pf_start,
+                              finishes=True, shape_key=pf_key)
+                    obs.event("first_token", now, tid, step, slot=s)
                 if task.true_out_len <= 1:     # first token already EOS
                     task.finish = now
                     done.append(task)
                     if pc is not None:
                         alloc.free_sequence(id(task))
+                    if obs is not None:
+                        obs.event("complete", now, tid, step,
+                                  lane="gpu", out_len=1)
+                        obs.event("evict", now, tid, step, slot=s)
+                        obs.inc("sched.completions")
                 else:
-                    s = slots.index(None)
                     slots[s] = task
                     produced[s] = 1            # prefill emits token 1
                     last_tok[s] = now
@@ -637,32 +808,61 @@ def simulate_continuous(tasks: Sequence[SimTask],
                 kv_util.append(len(active) / C)
             dispatches_dec += 1
             steps_dec += nsteps
+            step += nsteps
             if not chunked:
                 # stall mode: one trace entry per executed window (the
                 # chunked entry was appended with budget_trace above)
                 dec_trace.append(nsteps)
+            if obs is not None:
+                # mirror of the engine's per-window emission (the
+                # engine stamps the step coordinate AFTER advancing it,
+                # as here; event timestamps are model time)
+                obs.inc("decode.dispatches")
+                obs.inc("decode.steps", nsteps)
+                obs.gauge("kv.util", kv_util[-1])
+                obs.counter_sample("kv.util", now, kv_util[-1])
+                obs.span("decode.window", now, nsteps * persona.eta,
+                         steps=nsteps, active=len(active))
+                obs.event("decode_window", now, None, step,
+                          steps=nsteps, active=len(active),
+                          dur=nsteps * persona.eta)
             # N-step window, consumed step-major; a sequence finishing
             # at window step j stops producing but keeps its slot and
             # blocks until window end (eviction in arrears — the
             # engine's eviction-lag invariant)
             finished: List[int] = []
-            for _ in range(nsteps):
+            for j in range(nsteps):
                 now += persona.eta         # one decode step, all slots
                 for s in active:
                     if s in finished:
                         continue
                     produced[s] += 1
-                    itls.append(now - last_tok[s])
+                    itl_h.record(now - last_tok[s])
                     last_tok[s] = now
+                    if obs is not None:
+                        obs.event("token", now, _tid(slots[s]), step,
+                                  slot=s, idx=produced[s])
                     if produced[s] >= slots[s].true_out_len:
                         slots[s].finish = now
                         done.append(slots[s])
                         finished.append(s)
+                        if obs is not None:
+                            obs.event("complete", now, _tid(slots[s]),
+                                      step, lane="gpu",
+                                      out_len=produced[s])
+                            obs.inc("sched.completions")
+                            # eviction lag: window steps this slot's
+                            # blocks stay held past its logical end
+                            obs.observe("decode.eviction_lag_steps",
+                                        nsteps - 1 - j)
             # window-end frees in slot order (matches the engine, so
             # allocator free-list state stays bit-identical)
             for s in active:
                 if s not in finished:
                     continue
+                if obs is not None:
+                    obs.event("evict", now, _tid(slots[s]), step,
+                              slot=s)
                 if pc is not None:
                     alloc.free_sequence(id(slots[s]))
                 slots[s] = None
@@ -671,7 +871,8 @@ def simulate_continuous(tasks: Sequence[SimTask],
 
         if cpu.free_at <= now + 1e-12 and cpu_queue:
             batch, cpu_queue = cpu_queue[:C], cpu_queue[C:]
-            cpu.run_batch(batch, now, persona, "cpu", ttfts, itls)
+            cpu.run_batch(batch, now, persona, "cpu", ttft_h, itl_h,
+                          qw_h, obs)
             done.extend(batch)
             # bulk-lane launches count in the total only: the trace is
             # the decode loop's per-iteration launch profile (engine
@@ -698,8 +899,15 @@ def simulate_continuous(tasks: Sequence[SimTask],
                      kv_util_peak=float(util.max()),
                      kv_util_mean=float(util.mean()),
                      peak_concurrency=peak_conc,
-                     ttft_p50=_pct(ttfts, 0.50), ttft_p99=_pct(ttfts, 0.99),
-                     itl_p50=_pct(itls, 0.50), itl_p99=_pct(itls, 0.99),
+                     ttft_p50=ttft_h.quantile(0.50),
+                     ttft_p90=ttft_h.quantile(0.90),
+                     ttft_p99=ttft_h.quantile(0.99),
+                     itl_p50=itl_h.quantile(0.50),
+                     itl_p90=itl_h.quantile(0.90),
+                     itl_p99=itl_h.quantile(0.99),
+                     queue_wait_p50=qw_h.quantile(0.50),
+                     queue_wait_p90=qw_h.quantile(0.90),
+                     queue_wait_p99=qw_h.quantile(0.99),
                      budget_trace=budget_trace,
                      prefill_dispatches=dispatches,
                      prefill_dispatch_trace=dispatch_trace,

@@ -146,6 +146,11 @@ class PrefixCache:
         self.tokens_reused = 0           # prompt tokens NOT recomputed
         self.cow_copies = 0
         self.evictions = 0
+        # optional repro.obs MetricsRegistry: when set (the serve loops
+        # assign it at serve start), the same counters also stream into
+        # the shared registry under "prefix.*" — deterministic
+        # quantities, so they stay engine-vs-sim parity-comparable
+        self.metrics = None
 
     def reset_stats(self) -> None:
         """Zero the per-serve counters WITHOUT touching the index or
@@ -201,6 +206,9 @@ class PrefixCache:
             self._entries.move_to_end(h)
             matched.append(blk)
         self.hit_blocks += len(matched)
+        if self.metrics is not None:
+            self.metrics.counter("prefix.lookup_blocks").inc(len(hashes))
+            self.metrics.counter("prefix.hit_blocks").inc(len(matched))
         # share FIRST: the sequence's references pin the matched blocks
         # against the LRU reclaim the allocations below may trigger
         for blk in matched:
@@ -216,6 +224,8 @@ class PrefixCache:
             start = S - 1
             cow.append(self.alloc.cow_block(seq_id, len(matched) - 1))
             self.cow_copies += 1
+            if self.metrics is not None:
+                self.metrics.counter("prefix.cow_copies").inc()
         self.tokens_reused += start
         need = blocks_for_tokens(S, self.block_size) \
             - len(self.alloc.table(seq_id))
@@ -266,6 +276,8 @@ class PrefixCache:
             return False
         self.alloc.drop_ref(self._entries.pop(victim)[0])
         self.evictions += 1
+        if self.metrics is not None:
+            self.metrics.counter("prefix.evictions").inc()
         return True
 
     def clear(self) -> int:

@@ -1,0 +1,141 @@
+"""Observability substrate shared by the engine and the simulator.
+
+``repro.obs`` is the telemetry layer under the serving stack's
+bit-parity twin discipline: the real engine
+(``ServingEngine(obs=...)``) and the simulator
+(``simulate_continuous(obs=...)``) drive the SAME recorder and the
+SAME metrics registry from the same decision points, so
+
+  * the lifecycle EVENT stream (``obs.trace``) compares equal between
+    engine and simulator up to wall-clock fields, and
+  * every COUNTER both sides emit compares bit-for-bit,
+
+exactly like the dispatch/budget traces in ``_result``/``SimResult``.
+Recording is OFF by default (``obs=None`` everywhere): the serve loops
+only touch the recorder behind ``if obs is not None`` guards, and the
+no-obs serve path is bit-identical to the pre-obs engine
+(tests/test_obs.py::test_obs_none_results_unchanged).
+
+Three pieces:
+
+  * ``obs.trace``   — typed per-request lifecycle events + engine
+    spans, JSONL sink, Chrome/Perfetto ``trace_event`` exporter;
+  * ``obs.metrics`` — counters, gauges, log-bucketed streaming
+    histograms with mergeable state and deterministic quantiles (the
+    percentile substrate of ``_result``/``SimResult``);
+  * ``obs.log``     — rate-limited warnings with countable fallback
+    events (``fallback_events`` in serve results).
+
+``Observability`` bundles one recorder + one registry per run; build
+one with ``Observability()`` and pass it to ``ServingEngine(obs=...)``
+/ ``simulate_continuous(obs=...)``, then export with
+``obs.trace.to_jsonl(path)`` and inspect with
+``scripts/trace_report.py`` (waterfall + percentile table) or
+``ui.perfetto.dev`` (via ``obs.trace.export_perfetto``).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from .log import FALLBACKS, RateLimitedLogger, fallback_count, warn_once
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      percentiles)
+from .trace import (EVENT_KINDS, WALL_FIELDS, Event, RequestTimeline,
+                    Span, TraceRecorder, timelines)
+
+__all__ = [
+    "Counter", "Event", "EVENT_KINDS", "FALLBACKS", "Gauge",
+    "Histogram", "MetricsRegistry", "Observability", "RateLimitedLogger",
+    "RequestTimeline", "Span", "TraceRecorder", "WALL_FIELDS",
+    "fallback_count", "percentiles", "timelines", "warn_once",
+]
+
+
+class Observability:
+    """One serve/simulation run's telemetry bundle.
+
+    ``trace`` and ``metrics`` may individually be disabled (``None``);
+    the convenience emitters no-op for a disabled piece, so call sites
+    need only the single outer ``if obs is not None`` guard.
+
+    ``overhead_s`` accumulates the wall-clock the ENGINE measured
+    around its per-iteration emission blocks (``measure()``) — the
+    measured-overhead guard: recording never touches the engine's
+    virtual clock (events are emitted outside the timed device
+    regions), and the measured wall cost is reported alongside the
+    results so regressions are visible, not guessed.
+    """
+
+    def __init__(self, *, trace: bool = True, metrics: bool = True,
+                 max_events: int = 1_000_000):
+        self.trace: Optional[TraceRecorder] = \
+            TraceRecorder(max_events) if trace else None
+        self.metrics: Optional[MetricsRegistry] = \
+            MetricsRegistry() if metrics else None
+        self.overhead_s = 0.0
+
+    # ------------------------------------------------------------------
+    # no-op-safe emitters — each self-times into ``overhead_s``
+    # ------------------------------------------------------------------
+    def event(self, kind: str, ts: float, task_id=None, step=None,
+              **fields) -> None:
+        if self.trace is not None:
+            t0 = time.perf_counter()
+            self.trace.event(kind, ts, task_id, step, **fields)
+            self.overhead_s += time.perf_counter() - t0
+
+    def span(self, name: str, ts: float, dur: float,
+             track: str = "engine", **fields) -> None:
+        if self.trace is not None:
+            t0 = time.perf_counter()
+            self.trace.span(name, ts, dur, track, **fields)
+            self.overhead_s += time.perf_counter() - t0
+
+    def counter_sample(self, name: str, ts: float, value: float) -> None:
+        if self.trace is not None:
+            t0 = time.perf_counter()
+            self.trace.counter(name, ts, value)
+            self.overhead_s += time.perf_counter() - t0
+
+    def inc(self, name: str, n: int = 1) -> None:
+        if self.metrics is not None:
+            t0 = time.perf_counter()
+            self.metrics.counter(name).inc(n)
+            self.overhead_s += time.perf_counter() - t0
+
+    def gauge(self, name: str, value: float) -> None:
+        if self.metrics is not None:
+            t0 = time.perf_counter()
+            self.metrics.gauge(name).set(value)
+            self.overhead_s += time.perf_counter() - t0
+
+    def observe(self, name: str, value: float, n: int = 1) -> None:
+        if self.metrics is not None:
+            t0 = time.perf_counter()
+            self.metrics.histogram(name).record(value, n)
+            self.overhead_s += time.perf_counter() - t0
+
+    # ------------------------------------------------------------------
+    def measure(self):
+        """Context manager accumulating wall time into ``overhead_s``."""
+        return _Measure(self)
+
+    def event_count(self) -> int:
+        return len(self.trace.events) if self.trace is not None else 0
+
+
+class _Measure:
+    __slots__ = ("obs", "t0")
+
+    def __init__(self, obs: Observability):
+        self.obs = obs
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.obs.overhead_s += time.perf_counter() - self.t0
+        return False

@@ -1,0 +1,83 @@
+"""Rate-limited warnings with countable fallback events.
+
+The serving stack degrades silently in two places: ``use_pallas=None``
+auto-detection falls back to the jnp kernel paths off-TPU, and AOT
+warmup failure degrades to jit-on-first-call.  Both used to be ad-hoc
+one-shot ``logger.warning`` patterns — visible once in stderr, then
+gone, and never countable.  This module centralizes the pattern:
+
+  * each degradation site calls ``warn_once(logger, key, msg, ...)``;
+  * the FIRST occurrence per key logs at WARNING; repeats within
+    ``min_interval_s`` are suppressed (rate limit, not one-shot — a
+    long-lived process resurfaces a persistent fallback periodically);
+  * EVERY occurrence increments the key's counter, so
+    ``fallback_count()`` deltas make silent fallbacks countable in
+    serve results (``ServingEngine._result["fallback_events"]``)
+    instead of only greppable in stderr;
+  * ``reset(key)`` re-arms logging without clearing counts — what
+    ``generate.reset_fallback_warning`` maps onto, keeping the
+    per-serve re-arm semantics of the old pattern.
+
+A module-level singleton (``FALLBACKS``) backs the serving stack; unit
+tests may construct private ``RateLimitedLogger`` instances.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+
+class RateLimitedLogger:
+    """Per-key rate-limited warning emitter with occurrence counters."""
+
+    def __init__(self, min_interval_s: float = 300.0):
+        self.min_interval_s = min_interval_s
+        self._last_emit: Dict[str, float] = {}
+        self.counts: Dict[str, int] = {}
+        self.suppressed: Dict[str, int] = {}
+
+    # ------------------------------------------------------------------
+    def warn(self, logger, key: str, msg: str, *args) -> bool:
+        """Count the occurrence; emit at WARNING unless the key logged
+        within ``min_interval_s``.  Returns True when emitted."""
+        self.counts[key] = self.counts.get(key, 0) + 1
+        now = time.monotonic()
+        last = self._last_emit.get(key)
+        if last is not None and now - last < self.min_interval_s:
+            self.suppressed[key] = self.suppressed.get(key, 0) + 1
+            return False
+        self._last_emit[key] = now
+        logger.warning(msg, *args)
+        return True
+
+    # ------------------------------------------------------------------
+    def reset(self, key: Optional[str] = None) -> None:
+        """Re-arm emission (counts are NOT cleared — they are the
+        observable record).  ``None`` re-arms every key."""
+        if key is None:
+            self._last_emit.clear()
+        else:
+            self._last_emit.pop(key, None)
+
+    def count(self, key: Optional[str] = None) -> int:
+        if key is not None:
+            return self.counts.get(key, 0)
+        return sum(self.counts.values())
+
+
+#: process-wide fallback ledger for the serving stack.  Keys in use:
+#:   "jnp-fallback"  — use_pallas auto-detection fell back off-TPU
+#:   "aot-warmup"    — AOT warmup failed; degraded to jit-on-first-call
+FALLBACKS = RateLimitedLogger()
+
+
+def warn_once(logger, key: str, msg: str, *args) -> bool:
+    """Module-level convenience over the shared ``FALLBACKS`` ledger."""
+    return FALLBACKS.warn(logger, key, msg, *args)
+
+
+def fallback_count() -> int:
+    """Total degradation events so far (all keys) — serve results report
+    deltas of this."""
+    return FALLBACKS.count()

@@ -70,6 +70,7 @@ class ChunkJob:
     priority: float              # Policy.assign_priority at admission
     seq: int                     # admission order (FIFO tie-break)
     done: int = 0                # tokens prefetched so far
+    added_at_call: int = 0       # scheduler call index at admission
 
     @property
     def remaining(self) -> int:
@@ -233,9 +234,20 @@ def build_packed_arrays(key: tuple,
 
 
 class ChunkScheduler:
-    """Token-budgeted chunk packer shared by engine and simulator."""
+    """Token-budgeted chunk packer shared by engine and simulator.
 
-    def __init__(self, chunk_size: int, token_budget: int):
+    When a ``repro.obs`` ``MetricsRegistry`` is supplied, each
+    ``schedule`` call with pending jobs records the iteration's budget
+    utilization ((decode + scheduled chunk tokens) / token_budget) into
+    the ``prefill.budget_fill`` histogram, and each job COMPLETING
+    prefill records how many ``schedule`` calls it spent in the queue
+    into ``prefill.queue_age_iters``.  Both quantities are functions of
+    the scheduling decisions alone — the engine and the simulator drive
+    the same scheduler, so these histograms compare bit-for-bit in the
+    parity tests.
+    """
+
+    def __init__(self, chunk_size: int, token_budget: int, metrics=None):
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
         if token_budget < chunk_size:
@@ -247,6 +259,8 @@ class ChunkScheduler:
         self.token_budget = token_budget
         self.jobs: List[ChunkJob] = []
         self._seq = 0
+        self.metrics = metrics
+        self._calls = 0
 
     # ------------------------------------------------------------------
     @property
@@ -260,7 +274,8 @@ class ChunkScheduler:
         if total < 1:
             raise ValueError(f"total must be >= 1, got {total}")
         job = ChunkJob(task=task, slot=slot, total=total,
-                       priority=priority, seq=self._seq)
+                       priority=priority, seq=self._seq,
+                       added_at_call=self._calls)
         self._seq += 1
         self.jobs.append(job)
         return job
@@ -275,6 +290,7 @@ class ChunkScheduler:
         front-runner's next chunk no longer fits.  Completed jobs are
         removed; the caller executes the returned plans in order.
         """
+        had_jobs = bool(self.jobs)
         rem = max(0, self.token_budget - decode_tokens)
         plans: List[ChunkPlan] = []
         for job in sorted(self.jobs, key=lambda j: (-j.priority, j.seq)):
@@ -288,4 +304,15 @@ class ChunkScheduler:
                 job.done += length
                 rem -= length
         self.jobs = [j for j in self.jobs if j.remaining]
+        if self.metrics is not None:
+            if had_jobs:
+                chunk_tokens = sum(p.length for p in plans)
+                self.metrics.histogram("prefill.budget_fill").record(
+                    (decode_tokens + chunk_tokens) / self.token_budget)
+            for p in plans:
+                if p.finishes:
+                    self.metrics.histogram(
+                        "prefill.queue_age_iters").record(
+                            self._calls - p.job.added_at_call)
+        self._calls += 1
         return plans

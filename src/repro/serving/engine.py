@@ -79,13 +79,16 @@ import jax.numpy as jnp
 
 from repro.core import priority as prio
 from repro.core import scheduler as sched_lib
-from repro.core.simulator import _pct as pct
+from repro.core.simulator import _pct as pct  # noqa: F401 - re-exported
 from repro.core.personas import Persona
 from repro.kvcache import (BlockAllocator, blocks_for_tokens,
                            window_target_tokens)
 from repro.kvcache.paged import PagedKVCache
 from repro.kvcache.prefix import PrefixCache
 from repro.models import transformer
+from repro.obs import Observability
+from repro.obs import log as obslog
+from repro.obs.metrics import Histogram
 from repro.prefill import (ChunkScheduler, build_packed_arrays, pack_plans,
                            suffix_shape_key)
 
@@ -138,6 +141,10 @@ class Request:
     # filled at completion:
     start: float = -1.0
     finish: float = -1.0
+    # admission instant minus arrival (engine clock): how long the
+    # request sat queued before the scheduler committed resources to it
+    # — bulk/batch requests are stamped at batch start
+    queue_wait_s: float = -1.0
     lane: str = ""
     out_len: int = 0
     slot: int = -1               # decode slot served in (continuous mode)
@@ -178,7 +185,12 @@ class ServingEngine:
                  prefix_cache: bool = False,
                  decode_steps: int = 1,
                  aot_warmup: bool = True,
-                 persist_prefix_cache: bool = False):
+                 persist_prefix_cache: bool = False,
+                 obs: Optional[Observability] = None):
+        # snapshot the process-wide fallback ledger FIRST: the kernel
+        # factories below may fire the jnp-fallback warning while they
+        # build, and _result reports the delta since this point
+        self._fallback_base = obslog.fallback_count()
         if mode not in ("batch", "continuous"):
             raise ValueError(f"unknown mode {mode!r}")
         if kv not in ("contiguous", "paged"):
@@ -226,6 +238,10 @@ class ServingEngine:
         self.decode_steps = decode_steps
         self.aot_warmup = aot_warmup
         self.persist_prefix_cache = persist_prefix_cache
+        # observability bundle (repro.obs): OFF by default — every
+        # emission site below is guarded, and with obs=None the serve
+        # path is bit-identical to the unobserved engine
+        self.obs = obs
         # continuous-mode decode width; paged engines raise it above the
         # persona batch size so the BLOCK BUDGET (not worst-case slot
         # length) bounds concurrency
@@ -411,13 +427,27 @@ class ServingEngine:
         # the horizon (uniform ITL = dur / horizon).
         horizon = max(max((int(lengths[i]) for i in range(len(batch))),
                           default=1), 1)
+        ob = self.obs
         for i, t in enumerate(batch):
             t.start, t.finish, t.lane = now, finish, lane
             t.task.start, t.task.finish, t.task.lane = now, finish, lane
+            t.task.queue_wait_s = now - t.r
             t.task.out_len = int(lengths[i]) if i < len(lengths) else 0
             t.task.out_tokens = toks[i, :t.task.out_len].tolist()
             t.task.token_times = [now + dur * (j + 1) / horizon
                                   for j in range(t.task.out_len)]
+        if ob is not None:
+            ob.inc("prefill.dispatches")
+            ob.span("bulk_batch", now, finish - now, lane=lane,
+                    size=len(batch))
+            for t in batch:
+                tid = t.task.task_id
+                if t.task.token_times:
+                    ob.event("first_token", t.task.token_times[0], tid,
+                             lane=lane)
+                ob.event("complete", finish, tid, lane=lane,
+                         out_len=t.task.out_len)
+                ob.inc("sched.completions")
         return finish
 
     # ------------------------------------------------------------------
@@ -447,7 +477,8 @@ class ServingEngine:
             # setup reuses them and resets the per-serve counters).
             self.prefix_cache = None
         try:
-            self._worker = CompletionWorker()
+            self._worker = CompletionWorker(
+                metrics=self.obs.metrics if self.obs is not None else None)
             if self.mode == "continuous":
                 if self.prefill == "chunked":
                     return self._serve_continuous_chunked(requests)
@@ -464,18 +495,22 @@ class ServingEngine:
         util = (np.array(self.kv_util_samples)
                 if self.kv_util_samples else np.zeros(1))
         # tail-latency metrics: TTFT per request (first token emission
-        # minus arrival) and the pooled inter-token latencies of every
-        # request — p99 ITL is where stall-admission prefill shows up
-        # as decode jitter and chunked prefill is measured.  The
-        # percentile helper is shared with the simulator so engine and
-        # sim tail metrics stay comparable.
-        ttfts, itls = [], []
+        # minus arrival), the pooled inter-token latencies of every
+        # request, and the per-request queue wait — all folded into the
+        # shared log-bucketed streaming histograms (repro.obs.metrics),
+        # the same quantile substrate SimResult uses, so engine and sim
+        # tail metrics stay comparable and state stays O(buckets)
+        # regardless of trace length.
+        ttft_h, itl_h, qw_h = Histogram(), Histogram(), Histogram()
         for t in done:
             times = getattr(t.task, "token_times", None) or []
             if times:
-                ttfts.append(times[0] - t.r)
-                if len(times) > 1:
-                    itls.extend(np.diff(times))
+                ttft_h.record(times[0] - t.r)
+                for d in np.diff(times):
+                    itl_h.record(float(d))
+            qw = getattr(t.task, "queue_wait_s", -1.0)
+            if qw >= 0.0:
+                qw_h.record(qw)
         return {
             "mean_response_s": float(rts.mean()),
             "max_response_s": float(rts.max()),
@@ -499,10 +534,26 @@ class ServingEngine:
             "kv_util_mean": float(util.mean()),
             "rejected_for_memory": len(self._rejected_ids),
             "peak_concurrency": self.peak_concurrency,
-            "ttft_p50": pct(ttfts, 0.50),
-            "ttft_p99": pct(ttfts, 0.99),
-            "itl_p50": pct(itls, 0.50),
-            "itl_p99": pct(itls, 0.99),
+            "ttft_p50": ttft_h.quantile(0.50),
+            "ttft_p90": ttft_h.quantile(0.90),
+            "ttft_p99": ttft_h.quantile(0.99),
+            "itl_p50": itl_h.quantile(0.50),
+            "itl_p90": itl_h.quantile(0.90),
+            "itl_p99": itl_h.quantile(0.99),
+            "queue_wait_p50": qw_h.quantile(0.50),
+            "queue_wait_p90": qw_h.quantile(0.90),
+            "queue_wait_p99": qw_h.quantile(0.99),
+            # countable silent degradations (repro.obs.log): jnp-kernel
+            # fallback at factory build, AOT warmup failure — the delta
+            # of the process-wide ledger since this engine's __init__
+            "fallback_events": obslog.fallback_count()
+                               - self._fallback_base,
+            # wall-clock the obs emitters spent recording (0.0 with
+            # obs=None) — the measured-overhead guard: recording happens
+            # outside the timed device regions, so it never perturbs the
+            # virtual clock, and its host cost is reported, not guessed
+            "obs_overhead_s": (self.obs.overhead_s
+                               if self.obs is not None else 0.0),
             # wall-clock spent prefilling while decode slots were live
             # (the head-of-line stall chunked prefill bounds); _max_s is
             # the worst stall injected between two consecutive decode
@@ -565,6 +616,9 @@ class ServingEngine:
         C = self.persona.batch_size
         while len(done) < n:
             while i < n and sim_tasks[i].r <= now + 1e-9:
+                if self.obs is not None:
+                    self.obs.event("enqueue", sim_tasks[i].r,
+                                   sim_tasks[i].task.task_id)
                 queue.append(sim_tasks[i])
                 i += 1
             if queue and (len(queue) >= C
@@ -627,7 +681,7 @@ class ServingEngine:
     def _advance_decode_window(self, active, window_host, now, dt,
                                slot_task, slot_gen, slot_cap, tokens,
                                done, *, alloc=None, kvc=None,
-                               reserved=None) -> None:
+                               reserved=None, step: int = 0) -> None:
         """Window-END (in-arrears) bookkeeping shared by the stall and
         chunked serve loops: consume the (C, n) window tokens STEP-MAJOR
         (step j, slots in slot order — for n=1 this is exactly the old
@@ -640,6 +694,7 @@ class ServingEngine:
         the slot's own blocks or the trash page, never a freed or
         foreign block), and are returned here, before any admission
         decision that could reuse them."""
+        ob = self.obs
         n = window_host.shape[1]
         finished: List[int] = []
         for j in range(n):
@@ -652,12 +707,23 @@ class ServingEngine:
                 task = slot_task[s]
                 task.task.out_tokens.append(tok)
                 task.task.token_times.append(t_j)
+                if ob is not None:
+                    ob.event("token", t_j, task.task.task_id, step,
+                             slot=s, idx=slot_gen[s])
                 if tok == self.eos_id or slot_gen[s] >= slot_cap[s]:
                     task.finish = t_j
                     task.task.finish = t_j
                     task.task.out_len = slot_gen[s]
                     done.append(task)
                     finished.append(s)
+                    if ob is not None:
+                        ob.event("complete", t_j, task.task.task_id,
+                                 step, lane="gpu", out_len=slot_gen[s])
+                        ob.inc("sched.completions")
+                        # eviction lag: window steps this slot's blocks
+                        # stay held past its logical end (in arrears)
+                        ob.observe("decode.eviction_lag_steps",
+                                   n - 1 - j)
                 else:
                     tokens[s, 0] = tok
         # eviction in arrears: frees happen at window end, in slot
@@ -669,6 +735,8 @@ class ServingEngine:
             tid = slot_task[s].task.task_id
             slot_task[s] = None
             tokens[s, 0] = generate.PAD_ID
+            if ob is not None:
+                ob.event("evict", now, tid, step, slot=s)
             if alloc is not None:
                 alloc.free_sequence(tid)
                 kvc.clear_table(s)
@@ -684,11 +752,13 @@ class ServingEngine:
         the prefix index keeps its entries while its per-serve counters
         reset."""
         C = self.num_slots
+        mreg = self.obs.metrics if self.obs is not None else None
         if (self.persist_prefix_cache and self.paged_cache is not None
                 and self.prefix_cache is not None):
             kvc, alloc = self.paged_cache, self.allocator
             pc = self.prefix_cache
             pc.reset_stats()
+            pc.metrics = mreg
             return kvc, alloc, pc, kvc.state
         kvc = PagedKVCache(self.cfg, C, self.kv_num_blocks,
                            self.kv_block_size, self.max_len)
@@ -697,6 +767,7 @@ class ServingEngine:
         pc = None
         if self.prefix_cache_enabled:
             pc = PrefixCache(alloc, self.kv_block_size)
+            pc.metrics = mreg
             self.prefix_cache = pc
         return kvc, alloc, pc, kvc.state
 
@@ -773,11 +844,13 @@ class ServingEngine:
                 self._slot_prefill.warm(
                     self._admit_key, (p_s, c_s, batch_s, i32))
         except Exception as exc:  # pragma: no cover - environment-specific
-            logger.warning("AOT warmup failed (%s); executables will "
-                           "trace on first call", exc)
+            obslog.warn_once(logger, "aot-warmup",
+                             "AOT warmup failed (%s); executables will "
+                             "trace on first call", exc)
 
     def _serve_continuous(self, requests: Sequence[Request]) -> Dict:
         persona = self.persona
+        ob = self.obs
         C = self.num_slots
         S = self.input_bucket
         paged = self.kv == "paged"
@@ -805,6 +878,9 @@ class ServingEngine:
         step = 0
         while len(done) < n:
             while i < n and sim_tasks[i].r <= now + 1e-9:
+                if ob is not None:
+                    ob.event("enqueue", sim_tasks[i].r,
+                             sim_tasks[i].task.task_id, step)
                 queue.append(sim_tasks[i])
                 i += 1
             iter_stall = 0.0
@@ -822,9 +898,13 @@ class ServingEngine:
                     break
                 queue = list(rest)
                 if lane == "cpu":
+                    if ob is not None:
+                        ob.event("offload", now, task.task.task_id, step)
+                        ob.inc("sched.offloads")
                     bulk.append(task)
                     continue
                 cap = self._cap(task.task)
+                need = 0
                 if paged:
                     # admission gate: reserve the sequence's worst case
                     # (prompt + cap - 1 written positions) so boundary
@@ -836,11 +916,24 @@ class ServingEngine:
                     if need > self.kv_num_blocks - sum(reserved):
                         queue = prev_queue       # leave it queued
                         self._rejected_ids.add(task.task.task_id)
+                        if ob is not None:
+                            ob.event("reject", now, task.task.task_id,
+                                     step, kv_blocks=need)
+                            ob.inc("sched.rejections")
                         break
                 slot = slot_task.index(None)
+                tid = task.task.task_id
+                task.task.queue_wait_s = now - task.r
+                if ob is not None:
+                    ob.event("admit", now, tid, step, slot=slot,
+                             u=task.u, kv_blocks=need)
+                    ob.inc("sched.admissions")
+                    ob.observe("queue_wait_s", task.task.queue_wait_s)
                 stalled = any(t is not None for t in slot_task)
                 toks = self._tokenize_padded(task.task.text)
                 batch = {"tokens": jnp.asarray(toks[None, :])}
+                pf_start = 0
+                pf_key = "admit"
                 t0 = time.perf_counter()
                 if paged and pc is not None:
                     # longest-cached-prefix admission: matched blocks
@@ -863,7 +956,9 @@ class ServingEngine:
                             jnp.int32(slot), kvc.table_row(slot))
                     else:
                         key = suffix_shape_key(S - plan.start)
-                        if key in self._exec_keys:
+                        pf_start, pf_key = plan.start, str(key)
+                        pf_hit = key in self._exec_keys
+                        if pf_hit:
                             self.exec_cache_hits += 1
                         else:
                             self._exec_keys.add(key)
@@ -902,6 +997,28 @@ class ServingEngine:
                 if stalled:       # live slots waited out this prefill
                     self.prefill_stall_s += dt
                     iter_stall += dt
+                if ob is not None:
+                    # emitted AFTER the timed launch region so recording
+                    # cost never lands on the virtual clock; the order
+                    # (prefix_hit -> exec_cache -> prefill_chunk ->
+                    # first_token) is what the simulator mirrors
+                    if paged and pc is not None and plan.matched_blocks:
+                        ob.event("prefix_hit", now, tid, step,
+                                 cached_tokens=plan.start,
+                                 matched_blocks=plan.matched_blocks,
+                                 cow=len(plan.cow))
+                    if pf_key != "admit":
+                        ob.event("exec_cache", now, tid, step, hit=pf_hit,
+                                 shape_key=pf_key)
+                        ob.inc("exec_cache.hits" if pf_hit
+                               else "exec_cache.misses")
+                    ob.inc("prefill.dispatches")
+                    ob.span("prefill.admit", now - dt, dt, task=tid,
+                            slot=slot)
+                    ob.event("prefill_chunk", now, tid, step, slot=slot,
+                             start=pf_start, length=S - pf_start,
+                             finishes=True, shape_key=pf_key)
+                    ob.event("first_token", now, tid, step, slot=slot)
                 task.start, task.lane = now, "gpu"
                 task.task.start, task.task.lane = now, "gpu"
                 task.task.slot = slot
@@ -914,6 +1031,11 @@ class ServingEngine:
                     task.finish = now
                     task.task.finish, task.task.out_len = now, 1
                     done.append(task)
+                    if ob is not None:
+                        ob.event("complete", now, tid, step, lane="gpu",
+                                 out_len=1)
+                        ob.event("evict", now, tid, step, slot=slot)
+                        ob.inc("sched.completions")
                     if paged:
                         alloc.free_sequence(task.task.task_id)
                         kvc.clear_table(slot)
@@ -961,12 +1083,22 @@ class ServingEngine:
                     self.kv_util_samples.append(alloc.utilization())
                 else:
                     self.kv_util_samples.append(len(active) / C)
+                if ob is not None:
+                    ob.inc("decode.dispatches")
+                    ob.inc("decode.steps", nsteps)
+                    ob.gauge("kv.util", self.kv_util_samples[-1])
+                    ob.counter_sample("kv.util", now,
+                                      self.kv_util_samples[-1])
+                    ob.span("decode.window", now - dt, dt, steps=nsteps,
+                            active=len(active))
+                    ob.event("decode_window", now, None, step,
+                             steps=nsteps, active=len(active), dur=dt)
                 self._advance_decode_window(
                     active, window_host, now, dt, slot_task, slot_gen,
                     slot_cap, tokens, done,
                     alloc=alloc if paged else None,
                     kvc=kvc if paged else None,
-                    reserved=reserved if paged else None)
+                    reserved=reserved if paged else None, step=step)
                 continue
 
             if bulk and not queue:
@@ -1016,6 +1148,7 @@ class ServingEngine:
         """
         C = self.num_slots
         S = self.input_bucket
+        ob = self.obs
         pending = sorted(requests, key=lambda r: r.arrival)
         sim_tasks = [self._to_sim_task(r) for r in pending]
         n = len(sim_tasks)
@@ -1025,7 +1158,9 @@ class ServingEngine:
         kvc, alloc, pc, cache = self._paged_setup()
         reserved = [0] * C           # per-slot worst-case block holdback
         self._aot_warm(cache, kvc)
-        sched = ChunkScheduler(self.chunk_size, self.token_budget)
+        sched = ChunkScheduler(self.chunk_size, self.token_budget,
+                               metrics=ob.metrics if ob is not None
+                               else None)
         slot_task: List[Optional[prio.SimTask]] = [None] * C  # decoding
         slot_gen = [0] * C
         slot_cap = [0] * C
@@ -1040,6 +1175,9 @@ class ServingEngine:
         step = 0
         while len(done) < n:
             while i < n and sim_tasks[i].r <= now + 1e-9:
+                if ob is not None:
+                    ob.event("enqueue", sim_tasks[i].r,
+                             sim_tasks[i].task.task_id, step)
                 queue.append(sim_tasks[i])
                 i += 1
 
@@ -1059,6 +1197,9 @@ class ServingEngine:
                     break
                 queue = list(rest)
                 if lane == "cpu":
+                    if ob is not None:
+                        ob.event("offload", now, task.task.task_id, step)
+                        ob.inc("sched.offloads")
                     bulk.append(task)
                     continue
                 cap = self._cap(task.task)
@@ -1068,9 +1209,19 @@ class ServingEngine:
                 if need > self.kv_num_blocks - sum(reserved):
                     queue = prev_queue           # leave it queued
                     self._rejected_ids.add(task.task.task_id)
+                    if ob is not None:
+                        ob.event("reject", now, task.task.task_id, step,
+                                 kv_blocks=need)
+                        ob.inc("sched.rejections")
                     break
                 slot = free.pop(0)
                 reserved[slot] = need
+                task.task.queue_wait_s = now - task.r
+                if ob is not None:
+                    ob.event("admit", now, task.task.task_id, step,
+                             slot=slot, u=task.u, kv_blocks=need)
+                    ob.inc("sched.admissions")
+                    ob.observe("queue_wait_s", task.task.queue_wait_s)
                 # all of the prompt's blocks up front: every chunk
                 # position is backed, but kvc's DECODE table row stays
                 # on the trash page until prefill completes (the decode
@@ -1083,6 +1234,11 @@ class ServingEngine:
                     # the chunk job covers only the uncached suffix
                     plan = pc.admit(task.task.task_id, toks)
                     start = plan.start
+                    if ob is not None and plan.matched_blocks:
+                        ob.event("prefix_hit", now, task.task.task_id,
+                                 step, cached_tokens=plan.start,
+                                 matched_blocks=plan.matched_blocks,
+                                 cow=len(plan.cow))
                     for src, dst in plan.cow:
                         cache = self._copy_block.call_aot(
                             self._cow_key, cache, jnp.int32(src),
@@ -1112,11 +1268,17 @@ class ServingEngine:
             batch_plan = pack_plans(plans)
             if batch_plan is not None:
                 key = batch_plan.shape_key
-                if key in self._exec_keys:
+                hit = key in self._exec_keys
+                if hit:
                     self.exec_cache_hits += 1
                 else:
                     self._exec_keys.add(key)
                     self.exec_cache_misses += 1
+                if ob is not None:
+                    ob.event("exec_cache", now, None, step, hit=hit,
+                             shape_key=str(key))
+                    ob.inc("exec_cache.hits" if hit
+                           else "exec_cache.misses")
                 Tp = batch_plan.padded_chunk_len
                 # chunk offsets are relative to the job (the uncached
                 # suffix); job_start shifts them to absolute prompt
@@ -1151,6 +1313,17 @@ class ServingEngine:
                 if stalled:      # live slots waited out this launch
                     self.prefill_stall_s += dt
                     iter_stall += dt
+                if ob is not None:
+                    ob.inc("prefill.dispatches")
+                    ob.span("prefill.ragged", now - dt, dt,
+                            chunks=len(batch_plan.chunks),
+                            tokens=batch_plan.total_tokens)
+                    for ch in batch_plan.chunks:
+                        ob.event("prefill_chunk", now,
+                                 ch.job.task.task.task_id, step,
+                                 slot=ch.slot, start=ch.start,
+                                 length=ch.length, finishes=ch.finishes,
+                                 shape_key=str(key))
                 for ci, ch in enumerate(batch_plan.chunks):
                     if not ch.finishes:
                         continue
@@ -1166,10 +1339,19 @@ class ServingEngine:
                     task.task.slot = s
                     task.task.out_tokens = [first]
                     task.task.token_times = [now]
+                    if ob is not None:
+                        ob.event("first_token", now, task.task.task_id,
+                                 step, slot=s)
                     if first == self.eos_id or cap <= 1:
                         task.finish = now
                         task.task.finish, task.task.out_len = now, 1
                         done.append(task)
+                        if ob is not None:
+                            ob.event("complete", now, task.task.task_id,
+                                     step, lane="gpu", out_len=1)
+                            ob.event("evict", now, task.task.task_id,
+                                     step, slot=s)
+                            ob.inc("sched.completions")
                         alloc.free_sequence(task.task.task_id)
                         reserved[s] = 0
                     else:
@@ -1211,10 +1393,20 @@ class ServingEngine:
                 self.decode_dispatches += 1
                 self.decode_steps_total += nsteps
                 self.kv_util_samples.append(alloc.utilization())
+                if ob is not None:
+                    ob.inc("decode.dispatches")
+                    ob.inc("decode.steps", nsteps)
+                    ob.gauge("kv.util", self.kv_util_samples[-1])
+                    ob.counter_sample("kv.util", now,
+                                      self.kv_util_samples[-1])
+                    ob.span("decode.window", now - dt, dt, steps=nsteps,
+                            active=len(active))
+                    ob.event("decode_window", now, None, step,
+                             steps=nsteps, active=len(active), dur=dt)
                 self._advance_decode_window(
                     active, window_host, now, dt, slot_task, slot_gen,
                     slot_cap, tokens, done, alloc=alloc, kvc=kvc,
-                    reserved=reserved)
+                    reserved=reserved, step=step)
                 continue
             if plans:
                 continue

@@ -21,37 +21,42 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.models import model as model_lib, transformer
+from repro.obs import log as obslog
 
 PAD_ID = 0
 
 logger = logging.getLogger(__name__)
-_warned_jnp_fallback = False
+
+#: obs.log key of the use_pallas auto-detection degradation
+FALLBACK_KEY = "jnp-fallback"
 
 
 def reset_fallback_warning() -> None:
-    """Re-arm the one-time jnp-fallback warning.
+    """Re-arm the rate-limited jnp-fallback warning.
 
     The engine calls this at every ``serve()`` start so the warning is
-    one-time PER SERVE, not per process — otherwise the first engine
-    constructed in a long-lived multi-config process (or the first test
-    in a session) consumes the warning and every later serve's silent
-    CPU fallback goes unreported."""
-    global _warned_jnp_fallback
-    _warned_jnp_fallback = False
+    emitted at least once PER SERVE, not per process — otherwise the
+    first engine constructed in a long-lived multi-config process (or
+    the first test in a session) consumes the warning and every later
+    serve's silent CPU fallback goes unreported.  Occurrence COUNTS
+    are never cleared (``repro.obs.log.FALLBACKS``): ``_result``
+    reports them as ``fallback_events`` so the degradation is
+    countable, not only greppable in stderr."""
+    obslog.FALLBACKS.reset(FALLBACK_KEY)
 
 
 def resolve_use_pallas(use_pallas: Optional[bool]) -> bool:
     """Resolve the ``use_pallas=None`` auto-detection: the compiled
     Pallas kernels on TPU, the exact jnp fallbacks elsewhere (the
-    kernels would run in slow interpret mode).  Logs a ONE-TIME warning
-    when auto-detection falls back to the jnp path, so silent CPU
-    fallbacks are visible in benchmark runs."""
-    global _warned_jnp_fallback
+    kernels would run in slow interpret mode).  Routes the silent
+    fallback through the shared rate-limited ledger
+    (``repro.obs.log``) — warned once per re-arm window AND counted
+    every time."""
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
-        if not use_pallas and not _warned_jnp_fallback:
-            _warned_jnp_fallback = True
-            logger.warning(
+        if not use_pallas:
+            obslog.warn_once(
+                logger, FALLBACK_KEY,
                 "use_pallas auto-detection: backend %r is not TPU — "
                 "falling back to the exact jnp kernel paths (pass "
                 "use_pallas=True to force the Pallas kernels in "
@@ -71,14 +76,22 @@ class JitExecutable:
     neither trace nor compile time.  A ``call_aot`` at an unwarmed key
     falls back to the jit function (static kwargs included), so warmup
     is strictly an optimization, never a correctness dependency.
+
+    Every dispatch runs inside a ``jax.profiler.TraceAnnotation`` named
+    scope (``dispatch:<name>`` — the factory kind, e.g.
+    ``dispatch:ragged``), so a ``jax.profiler.trace()`` capture of a
+    serve shows which executable each device launch belongs to; the
+    annotation is a no-op when no profiler is attached.
     """
 
-    def __init__(self, fn):
+    def __init__(self, fn, name: str = "jit"):
         self.fn = fn
+        self.name = f"dispatch:{name}"
         self.aot: dict = {}
 
     def __call__(self, *args, **kwargs):
-        return self.fn(*args, **kwargs)
+        with jax.profiler.TraceAnnotation(self.name):
+            return self.fn(*args, **kwargs)
 
     def warm(self, key, args, static_kwargs: Optional[dict] = None):
         """AOT-compile for the abstract ``args`` (ShapeDtypeStruct
@@ -92,10 +105,11 @@ class JitExecutable:
         """Dispatch through the warmed executable for ``key`` when one
         exists (array args only — statics were baked at lower time),
         else through the jit function."""
-        compiled = self.aot.get(key)
-        if compiled is not None:
-            return compiled(*args)
-        return self.fn(*args, **static_kwargs)
+        with jax.profiler.TraceAnnotation(self.name):
+            compiled = self.aot.get(key)
+            if compiled is not None:
+                return compiled(*args)
+            return self.fn(*args, **static_kwargs)
 
 
 # Factory memo: values are held WEAKLY, keyed by (kind, cfg, ...), so
@@ -115,13 +129,15 @@ def _memoized(key, build) -> JitExecutable:
     """Bounded factory memo: engines sharing a (hashable) key reuse ONE
     ``JitExecutable`` — one trace cache AND one AOT store — for as long
     as any of them (or the strong LRU) keeps it alive.  An unhashable
-    key skips the memo."""
+    key skips the memo.  The key's leading element is the factory kind
+    and becomes the executable's profiler-annotation name."""
+    name = key[0] if isinstance(key, tuple) and key else "jit"
     try:
         cached = _fn_memo.get(key)
     except TypeError:                      # unhashable cfg: no memo
-        return JitExecutable(build())
+        return JitExecutable(build(), name)
     if cached is None:
-        cached = JitExecutable(build())
+        cached = JitExecutable(build(), name)
         _fn_memo[key] = cached
     _fn_lru[key] = cached
     _fn_lru.move_to_end(key)

@@ -46,11 +46,19 @@ class CompletionWorker:
     to its virtual clock).  ``collect()`` returns results strictly in
     submission order; worker-side exceptions re-raise there, so device
     failures surface on the scheduler thread at the consume point.
+
+    When a ``MetricsRegistry`` is supplied, each ``collect()`` records
+    how long the scheduler thread actually blocked waiting on the
+    worker into the ``pipeline.collect_wait_s`` histogram — near-zero
+    waits mean the pipeline overlapped host work with device compute;
+    waits tracking the device dt mean the loop is device-bound.
     """
 
-    def __init__(self, name: str = "completion-worker"):
+    def __init__(self, name: str = "completion-worker", metrics=None):
         self._in: "queue.Queue" = queue.Queue()
         self._out: "queue.Queue" = queue.Queue()
+        self._wait_hist = (metrics.histogram("pipeline.collect_wait_s")
+                           if metrics is not None else None)
         self._thread = threading.Thread(target=self._run, name=name,
                                         daemon=True)
         self._thread.start()
@@ -79,7 +87,12 @@ class CompletionWorker:
     def collect(self) -> Tuple[object, float]:
         """Block for the OLDEST submitted result; returns (host, dt).
         Raises whatever the readback raised on the worker thread."""
-        host, dt, exc = self._out.get()
+        if self._wait_hist is not None:
+            t0 = time.perf_counter()
+            host, dt, exc = self._out.get()
+            self._wait_hist.record(time.perf_counter() - t0)
+        else:
+            host, dt, exc = self._out.get()
         if exc is not None:
             raise exc
         return host, dt

@@ -454,6 +454,13 @@ def test_sim_chunked_bounds_itl_vs_stall():
         sched.POLICIES["fifo"](persona, pcfg), prompt_len=prompt,
         prefill="chunked", chunk_size=16, token_budget=24)
     assert chunked.itl_p99 < stall.itl_p99
+    # the improvement holds through the body of the distribution too
+    # (p90), and the new percentile fields are populated on both runs
+    assert chunked.itl_p90 <= stall.itl_p90
+    for res in (stall, chunked):
+        assert res.itl_p50 <= res.itl_p90 <= res.itl_p99
+        assert res.ttft_p50 <= res.ttft_p90 <= res.ttft_p99
+        assert res.queue_wait_p50 <= res.queue_wait_p99
     assert len(chunked.tasks) == len(stall.tasks) == n
 
 
