@@ -18,7 +18,8 @@ import time
 import traceback
 
 from . import (common, continuous_vs_batch, kernel_bench, paper_tables,
-               prefill_interference, prefix_cache, roofline_report)
+               prefill_interference, prefix_cache, roofline_report,
+               slo_calibration)
 
 
 def run_paper_tables(only=None):
@@ -113,6 +114,8 @@ def run_continuous(only=None, seed=0):
         prefill_interference.main(seed=seed)
     if only is None or only == "prefix_cache":
         prefix_cache.main(seed=seed)
+    if only is None or only == "slo_calibration":
+        slo_calibration.main(seed=seed)
 
 
 def main(argv=None):

@@ -1,0 +1,214 @@
+"""Windowed SLO attainment + uncertainty calibration on a mixed-class
+workload (PR 8 observability tentpole).
+
+Two measurements land in experiments/bench/slo_calibration.json:
+
+  * ``sim``    — a Poisson-ramp mixed-class workload (3:1
+    interactive:batch, per-class targets declared via
+    ``workload.make_traffic_classes``) through the chunked continuous
+    simulator with the SLO monitor + calibration ledger + periodic
+    health snapshots on: per-class cumulative and live-window
+    attainment, predictor MAE/bias, per-u-bucket reliability rows, and
+    the windowed drift score;
+  * ``parity`` — the acceptance discipline asserted IN-benchmark: a
+    small all-at-t0 classed workload served by the real engine and by
+    the simulator produces bit-for-bit identical per-class SLO
+    counters, calibration counters, and snapshot observation vectors
+    (targets pinned to +inf / -1.0 so ok/total judgments are invariant
+    to the wall-derived clock skew between the two sides).
+
+    PYTHONPATH=src python -m benchmarks.slo_calibration [--seed N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+from repro.core import (priority as prio, scheduler as sched, simulator,
+                        workload)
+from repro.obs import Observability, SLOSpec
+from repro.serving.engine import Request
+
+from . import common
+
+N_SIM = 400
+SIM_SLOTS = 8
+SIM_BUCKET = 64
+SIM_MAX_OUT = 48
+SNAPSHOT_EVERY = 32
+PERSONA = "bart"
+VARIANCE = "normal"
+SEED = 0
+
+# per-class targets: interactive is judged on responsiveness (TTFT +
+# inter-token cadence + end-to-end), batch only on a looser e2e bound —
+# pinned near the workload's p80-p95 latencies so the attainment
+# fractions discriminate (all-1.0 tables measure nothing)
+CLASS_SPEC = {
+    "interactive": {"slo": {"ttft_s": 0.4, "itl_s": 0.06, "e2e_s": 1.5},
+                    "weight": 3.0},
+    "batch": {"slo": {"e2e_s": 2.0}},
+}
+
+# the parity column's fixture (mirrors tests/test_slo.py)
+PAR_CAPS = [2, 6, 1, 4, 6, 2, 3, 5, 1, 6, 2, 4]
+PAR_SLOTS = 3
+PAR_MAX_NEW = 6
+PAR_BUCKET = 8
+PAR_BS = 4
+
+
+def _sim_tasks(test, caps, arrivals, cls_assign, profile, persona):
+    out = []
+    for i, (t, c, a) in enumerate(zip(test, caps, arrivals)):
+        text = t if isinstance(t, str) else t.text
+        u = profile.predictor.score(text)
+        d = prio.priority_point(float(a), len(text.split()), persona.phi,
+                                None, xi=2.0)
+        out.append(prio.SimTask(
+            task=Request(text=text, arrival=float(a), task_id=i,
+                         traffic_class=cls_assign[i]),
+            u=float(max(u, 0.0)), r=float(a), d=d,
+            input_len=float(len(text.split())), true_out_len=int(c)))
+    return out
+
+
+def run_sim(seed=SEED):
+    """Mixed-class chunked simulation with the full PR-8 surface on."""
+    persona = common.personas.get_persona(PERSONA)
+    _, test = common.corpus(VARIANCE, seed=seed)
+    test = test[:N_SIM]
+    profile = common.profile(VARIANCE, PERSONA, seed=seed)
+    classes = workload.make_traffic_classes(CLASS_SPEC)
+    cls_assign = workload.assign_classes(len(test), classes, seed=seed)
+    caps = [max(1, min(int(t.out_lens[PERSONA]), SIM_MAX_OUT))
+            for t in test]
+    betas = common.persona_betas(PERSONA, VARIANCE)
+    arrivals = workload.poisson_trace(len(test), betas=betas,
+                                      seed=seed + 1)
+    obs = Observability(slo=workload.slo_targets(classes),
+                        calibration=True,
+                        snapshot_every_steps=SNAPSHOT_EVERY)
+    pcfg = profile.policy_config()
+    res = simulator.simulate_continuous(
+        _sim_tasks(test, caps, arrivals, cls_assign, profile, persona),
+        sched.POLICIES["fifo"](persona, pcfg),
+        obs=obs, num_slots=SIM_SLOTS, prompt_len=SIM_BUCKET,
+        decode_steps=4, prefill="chunked", chunk_size=SIM_BUCKET // 2,
+        token_budget=SIM_SLOTS + SIM_BUCKET,
+        kv_block_size=16, kv_num_blocks=SIM_SLOTS * 8)
+    assert res.slo_attainment and res.calibration["count"] == len(test)
+    assert res.health_trace, "no snapshots fired"
+    return {
+        "n_tasks": len(test),
+        "class_counts": {c.name: cls_assign.count(c.name)
+                         for c in classes},
+        "attainment": res.slo_attainment,
+        "windowed_attainment": obs.slo.windowed_attainment(),
+        "calibration": res.calibration,
+        "snapshots": len(res.health_trace),
+        "last_health": {k: v for k, v in res.health_trace[-1].items()
+                        if k != "attainment"},
+        "obs_overhead_s": obs.overhead_s,
+    }
+
+
+def run_parity(seed=SEED):
+    """Engine-vs-sim bit-parity of SLO/calibration/snapshot counters,
+    asserted here so the recorded JSON carries a checked claim."""
+    import jax
+
+    from repro import configs
+    from repro.core import datagen, personas
+    from repro.models import model as model_lib
+    from repro.serving.engine import ServingEngine
+
+    cfg = configs.get_smoke_config("starcoder2-3b")
+    params = model_lib.init_params(jax.random.PRNGKey(seed), cfg)
+    corpus = datagen.generate_corpus(
+        datagen.VARIANCE_MIXES["normal"], 64, seed=seed)
+    train, test = datagen.train_test_split(corpus, train_frac=0.5)
+    persona = dataclasses.replace(personas.get_persona(PERSONA),
+                                  batch_size=PAR_SLOTS)
+    profile = sched.offline_profile(train, persona, epochs=15, seed=seed)
+    texts = [test[i % 4].text for i in range(len(PAR_CAPS))]
+    cls_assign = ["interactive", "batch"] * (len(PAR_CAPS) // 2)
+    pcfg = dataclasses.replace(profile.policy_config(), tau=1e18)
+    # judgment-invariant targets: +inf always attains, -1.0 never does
+    # (latencies are >= 0), so ok/total cannot depend on clock skew
+    targets = {"interactive": SLOSpec(),
+               "batch": SLOSpec(ttft_s=-1.0, itl_s=-1.0, e2e_s=-1.0,
+                                queue_wait_s=-1.0)}
+
+    def make_obs():
+        return Observability(slo=dict(targets), calibration=True,
+                             snapshot_every_steps=2)
+
+    eobs, sobs = make_obs(), make_obs()
+    eng = ServingEngine(
+        params, cfg, sched.POLICIES["fifo"](persona, pcfg), profile,
+        input_bucket=PAR_BUCKET, max_new_tokens=PAR_MAX_NEW,
+        mode="continuous", eos_id=-1, kv="paged", kv_block_size=PAR_BS,
+        num_slots=PAR_SLOTS, prefill="chunked", chunk_size=3,
+        token_budget=8, decode_steps=4, obs=eobs)
+    res = eng.serve([Request(text=t, arrival=0.0, task_id=i,
+                             max_new_tokens=c, traffic_class=cls_assign[i])
+                     for i, (t, c) in enumerate(zip(texts, PAR_CAPS))])
+    sim = simulator.simulate_continuous(
+        _sim_tasks(texts, PAR_CAPS, [0.0] * len(PAR_CAPS), cls_assign,
+                   profile, persona),
+        sched.POLICIES["fifo"](persona, pcfg), obs=sobs,
+        num_slots=PAR_SLOTS, prompt_len=PAR_BUCKET, decode_steps=4,
+        prefill="chunked", chunk_size=3, token_budget=8,
+        kv_block_size=PAR_BS, kv_num_blocks=eng.kv_num_blocks)
+
+    assert res["completion_order"] == [t.task.task_id for t in sim.tasks]
+    assert eobs.trace.parity_events() == sobs.trace.parity_events()
+    assert eobs.slo.parity_counters() == sobs.slo.parity_counters()
+    assert eobs.calibration.parity() == sobs.calibration.parity()
+    assert len(eobs.health_trace) == len(sobs.health_trace) > 0
+    for a, b in zip(eobs.health_trace, sobs.health_trace):
+        for k in ("step", "queue_depth", "active", "kv_util", "drift",
+                  "calibration_count"):
+            assert a[k] == b[k], (k, a, b)
+    return {
+        "n_requests": len(PAR_CAPS),
+        "events": len(eobs.trace.parity_events()),
+        "snapshots": len(eobs.health_trace),
+        "slo_counters": eobs.slo.parity_counters(),
+        "calibration_counters": eobs.calibration.parity(),
+        "counters_match": True,
+    }
+
+
+def main(seed=SEED):
+    t0 = time.time()
+    sim = run_sim(seed=seed)
+    parity = run_parity(seed=seed)
+    payload = {
+        "seed": seed,
+        "classes": CLASS_SPEC,
+        "snapshot_every_steps": SNAPSHOT_EVERY,
+        "sim": sim,
+        "parity": parity,
+    }
+    common.save("slo_calibration", payload)
+    att = sim["attainment"]
+    cal = sim["calibration"]
+    common.emit(
+        "slo_calibration", time.time() - t0,
+        f"interactive_e2e={att['interactive']['e2e']['frac']:.3f},"
+        f"batch_e2e={att['batch']['e2e']['frac']:.3f},"
+        f"mae={cal['mae']:.2f},bias={cal['bias']:+.2f},"
+        f"drift={cal['drift']:.3f},"
+        f"snapshots={sim['snapshots']},"
+        f"parity_counters_match={parity['counters_match']}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=SEED)
+    main(seed=ap.parse_args().seed)

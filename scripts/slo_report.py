@@ -1,0 +1,205 @@
+#!/usr/bin/env python
+"""Render SLO attainment + calibration from a repro.obs JSONL trace.
+
+    PYTHONPATH=src python scripts/slo_report.py trace.jsonl
+    PYTHONPATH=src python scripts/slo_report.py trace.jsonl --json
+
+Reads the JSONL sink written by ``Observability`` /
+``TraceRecorder.to_jsonl`` (engine or simulator — same schema) and
+prints the PR-8 observability views:
+
+  * a PER-CLASS ATTAINMENT TABLE — TTFT / inter-token latency / queue
+    wait / end-to-end latency per traffic class, each judged against
+    the per-class targets carried in the trace's ``meta`` line (written
+    when the run declared SLO classes), with ok/total attainment
+    fractions and p50/p90/p99;
+  * a RELIABILITY DIAGRAM — predicted uncertainty u vs realized output
+    length by power-of-two u bucket (``repro.obs.u_bucket``), an ASCII
+    rendering of the calibration ledger's reliability rows;
+  * a HEALTH TABLE — the periodic ``snapshot`` events (step, queue
+    depth, active slots, KV utilization, calibration drift).
+
+Latencies are reconstructed from the event stream via
+``repro.obs.timelines`` — the same reconstruction the acceptance tests
+check against the engine's result dict — so the report works on any
+conforming trace, whichever side emitted it.
+
+Exits non-zero on schema violations (unknown event kind — the typed
+vocabulary is ``repro.obs.EVENT_KINDS``) or an empty trace, so CI can
+smoke-check any committed trace.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs import (EVENT_KINDS, SLO_METRICS, CalibrationLedger,
+                       SLOMonitor, SLOSpec, TraceRecorder, timelines)
+
+SNAPSHOT_COLS = ("step", "queue_depth", "active", "kv_util", "drift",
+                 "calibration_count")
+
+
+def validate(rec: TraceRecorder) -> list:
+    """Schema check: every event kind must be in the typed vocabulary."""
+    return sorted({e.kind for e in rec.events} - EVENT_KINDS)
+
+
+def monitor_from_trace(rec: TraceRecorder) -> SLOMonitor:
+    """Replay the trace's per-request latencies through a fresh
+    ``SLOMonitor`` built from the targets in the ``meta`` line (classes
+    default to no targets when the trace carries none)."""
+    targets = {name: SLOSpec.from_json(obj)
+               for name, obj in (rec.meta.get("slo") or {}).items()}
+    mon = SLOMonitor(targets or None)
+    tls = timelines(rec)
+    for tid in sorted(tls):
+        t = tls[tid]
+        if t.queue_wait is not None:
+            mon.observe("queue_wait", t.cls, t.admit_ts, t.queue_wait)
+        if t.ttft is not None:
+            mon.observe("ttft", t.cls, t.first_token_ts, t.ttft)
+        for itl in t.itls:
+            mon.observe("itl", t.cls, t.complete_ts, itl)
+        if t.complete_ts >= 0:
+            mon.complete(t.cls)
+            if t.e2e is not None:
+                mon.observe("e2e", t.cls, t.complete_ts, t.e2e)
+    return mon
+
+
+def ledger_from_trace(rec: TraceRecorder) -> CalibrationLedger:
+    """Replay completed requests carrying (u, out_len) into a fresh
+    calibration ledger."""
+    led = CalibrationLedger()
+    tls = timelines(rec)
+    for tid in sorted(tls):
+        t = tls[tid]
+        if t.u >= 0.0 and t.out_len >= 0:
+            led.record(t.u, t.out_len, t.e2e)
+    return led
+
+
+def attainment_table(mon: SLOMonitor) -> str:
+    rows = mon.attainment()
+    if not rows:
+        return "(no completed requests)"
+    head = (f"{'class':<14} {'metric':<12} {'target_s':>10} {'ok':>6} "
+            f"{'total':>6} {'frac':>7} {'p50':>10} {'p90':>10} "
+            f"{'p99':>10}")
+    lines = [head, "-" * len(head)]
+    for cls in sorted(rows):
+        row = rows[cls]
+        for metric in SLO_METRICS:
+            m = row[metric]
+            tgt = m["target_s"]
+            tgt_s = (f"{tgt:>10.4f}" if abs(tgt) != float("inf")
+                     else f"{'-':>10}")
+            snap = m.get("lifetime") or {}
+            ps = "".join(f" {snap.get(p, 0.0):>10.4f}"
+                         for p in ("p50", "p90", "p99"))
+            lines.append(
+                f"{cls:<14} {metric:<12} {tgt_s} {m['ok']:>6} "
+                f"{m['total']:>6} {m['frac']:>7.3f}{ps}")
+        lines.append(f"{cls:<14} {'completions':<12} {'':>10} "
+                     f"{row['completions']:>6}")
+    return "\n".join(lines)
+
+
+def reliability_diagram(led: CalibrationLedger, width: int = 40) -> str:
+    rows = led.reliability()
+    if not rows:
+        return "(no calibration samples — trace lacks u/out_len fields)"
+    top = max(max(r["u_mean"], r["real_mean"]) for r in rows)
+    top = max(top, 1e-9)
+
+    def bar(v: float, ch: str) -> str:
+        return ch * max(1, int(round(v / top * width)))
+
+    lines = [f"reliability  (u bucket -> predicted 'u' vs realized '#', "
+             f"full bar = {top:.2f})",
+             f"{'u range':<16} {'n':>5} {'u_mean':>8} {'real':>8}  bars"]
+    for r in rows:
+        rng = f"[{r['u_lo']:g}, {r['u_hi']:g})"
+        lines.append(f"{rng:<16} {r['n']:>5} {r['u_mean']:>8.2f} "
+                     f"{r['real_mean']:>8.2f}  u|{bar(r['u_mean'], 'u')}")
+        lines.append(f"{'':<16} {'':>5} {'':>8} {'':>8}  "
+                     f"#|{bar(r['real_mean'], '#')}")
+    lines.append(f"mae={led.mae:.3f}  bias={led.bias:+.3f}  "
+                 f"drift={led.drift():.3f}  n={led.count}")
+    return "\n".join(lines)
+
+
+def health_table(rec: TraceRecorder) -> str:
+    snaps = [e for e in rec.events if e.kind == "snapshot"]
+    if not snaps:
+        return "(no snapshot events — run with snapshot_every_steps>0)"
+    head = "  ".join(f"{c:>12}" for c in SNAPSHOT_COLS)
+    lines = [head, "-" * len(head)]
+    for e in snaps:
+        cells = []
+        for c in SNAPSHOT_COLS:
+            v = e.step if c == "step" else e.fields.get(c)
+            if v is None:
+                cells.append(f"{'-':>12}")
+            elif isinstance(v, float):
+                cells.append(f"{v:>12.4f}")
+            else:
+                cells.append(f"{v:>12}")
+        lines.append("  ".join(cells))
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="JSONL trace (TraceRecorder.to_jsonl)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit attainment + calibration as JSON instead "
+                         "of text (machine-readable smoke checks)")
+    args = ap.parse_args(argv)
+
+    rec = TraceRecorder.load_jsonl(args.trace)
+    unknown = validate(rec)
+    if unknown:
+        print(f"schema violation: unknown event kinds {unknown} "
+              f"(expected subset of {sorted(EVENT_KINDS)})",
+              file=sys.stderr)
+        return 1
+    if not rec.events:
+        print("empty trace", file=sys.stderr)
+        return 1
+
+    mon = monitor_from_trace(rec)
+    led = ledger_from_trace(rec)
+    snaps = sum(1 for e in rec.events if e.kind == "snapshot")
+
+    if args.json:
+        print(json.dumps({
+            "events": len(rec.events),
+            "requests": len(timelines(rec)),
+            "snapshots": snaps,
+            "classes": {cls: {"completions": row["completions"],
+                              "frac": {m: row[m]["frac"]
+                                       for m in SLO_METRICS}}
+                        for cls, row in mon.attainment().items()},
+            "calibration": {"count": led.count, "mae": led.mae,
+                            "bias": led.bias, "drift": led.drift()},
+        }))
+        return 0
+
+    print(f"{args.trace}: {len(rec.events)} events, "
+          f"{len(timelines(rec))} requests, {snaps} snapshots, "
+          f"slo meta: {json.dumps(rec.meta.get('slo') or {})}")
+    print()
+    print(attainment_table(mon))
+    print()
+    print(reliability_diagram(led))
+    print()
+    print(health_table(rec))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

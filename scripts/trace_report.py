@@ -155,6 +155,8 @@ def main(argv=None) -> int:
         print(json.dumps({
             "events": len(rec.events), "spans": len(rec.spans),
             "requests": len(tls),
+            "snapshots": sum(1 for e in rec.events
+                             if e.kind == "snapshot"),
             "ttft_p50": ttft.quantile(0.50),
             "ttft_p99": ttft.quantile(0.99)}))
     else:

@@ -68,6 +68,12 @@ def _tid(t: SimTask):
     return getattr(getattr(t, "task", None), "task_id", None)
 
 
+def _cls(t: SimTask) -> str:
+    """Traffic class of the wrapped request ("" when unclassed) — the
+    same attribute the engine reads (Request.traffic_class)."""
+    return getattr(getattr(t, "task", None), "traffic_class", "") or ""
+
+
 @dataclasses.dataclass
 class SimResult:
     tasks: List[SimTask]
@@ -133,6 +139,14 @@ class SimResult:
     decode_dispatches: int = 0
     decode_steps_executed: int = 0
     decode_dispatch_trace: List = dataclasses.field(default_factory=list)
+    # SLO monitoring / predictor calibration / health snapshots (PR 8,
+    # engine mirrors in ServingEngine._result): {} / [] with the
+    # features off; the deterministic members (per-class counts,
+    # calibration counters, non-wall snapshot fields) parity-match the
+    # engine bit for bit under deterministic SLO judgements
+    slo_attainment: Dict = dataclasses.field(default_factory=dict)
+    calibration: Dict = dataclasses.field(default_factory=dict)
+    health_trace: List = dataclasses.field(default_factory=list)
 
     # ---- paper metrics ------------------------------------------------
     @property
@@ -211,15 +225,43 @@ class Lane:
             if qwaits is not None:
                 qwaits.record(start - t.r)
             if obs is not None:
+                obs.slo_observe("queue_wait", _cls(t), start,
+                                start - t.r)
                 if t.true_out_len >= 1:
                     obs.event("first_token", start + dur / horizon,
                               _tid(t), lane=lane_name)
+                    obs.slo_observe("ttft", _cls(t),
+                                    start + dur / horizon,
+                                    start + dur / horizon - t.r)
+                    if t.true_out_len > 1:
+                        obs.slo_observe("itl", _cls(t), finish,
+                                        dur / horizon,
+                                        n=t.true_out_len - 1)
                 obs.event("complete", finish, _tid(t), lane=lane_name,
                           out_len=t.true_out_len)
                 obs.inc("sched.completions")
+                obs.complete_request(_cls(t), finish, u=t.u,
+                                     out_len=t.true_out_len,
+                                     latency_s=finish - t.r)
         self.free_at = finish
         self.busy_time += dur
         return finish
+
+
+def _obs_result_fields(obs) -> Dict:
+    """The SLO/calibration/health members of ``SimResult`` pulled off
+    an ``Observability`` bundle ({} / [] with the features off) — the
+    exact mirror of the corresponding ``ServingEngine._result`` keys."""
+    return {
+        "slo_attainment": (obs.slo.attainment()
+                           if obs is not None and obs.slo is not None
+                           else {}),
+        "calibration": (obs.calibration.summary()
+                        if obs is not None
+                        and obs.calibration is not None else {}),
+        "health_trace": (list(obs.health_trace)
+                         if obs is not None else []),
+    }
 
 
 def simulate(tasks: Sequence[SimTask], policy: sched_lib.Policy, *,
@@ -266,7 +308,9 @@ def simulate(tasks: Sequence[SimTask], policy: sched_lib.Policy, *,
         # admit arrivals up to `now`
         while i < n_total and pending[i].r <= now + 1e-12:
             if obs is not None:
-                obs.event("enqueue", pending[i].r, _tid(pending[i]))
+                cls = _cls(pending[i])
+                obs.event("enqueue", pending[i].r, _tid(pending[i]),
+                          **({"cls": cls} if cls else {}))
             queue.append(pending[i])
             i += 1
 
@@ -320,7 +364,8 @@ def simulate(tasks: Sequence[SimTask], policy: sched_lib.Policy, *,
                      queue_wait_p90=qw_h.quantile(0.90),
                      queue_wait_p99=qw_h.quantile(0.99),
                      prefill_dispatches=dispatches,
-                     prefill_dispatch_trace=dispatch_trace)
+                     prefill_dispatch_trace=dispatch_trace,
+                     **_obs_result_fields(obs))
 
 
 @dataclasses.dataclass
@@ -549,8 +594,9 @@ def simulate_continuous(tasks: Sequence[SimTask],
     while len(done) < n_total:
         while i < n_total and pending[i].r <= now + 1e-12:
             if obs is not None:
+                cls = _cls(pending[i])
                 obs.event("enqueue", pending[i].r, _tid(pending[i]),
-                          step)
+                          step, **({"cls": cls} if cls else {}))
             queue.append(pending[i])
             i += 1
 
@@ -579,6 +625,8 @@ def simulate_continuous(tasks: Sequence[SimTask],
                               u=task.u, kv_blocks=need)
                     obs.inc("sched.admissions")
                     obs.observe("queue_wait_s", now - task.r)
+                    obs.slo_observe("queue_wait", _cls(task), now,
+                                    now - task.r)
                 total = prompt_len
                 if pc is not None:
                     # matched prefix blocks shared at admission (same
@@ -646,6 +694,8 @@ def simulate_continuous(tasks: Sequence[SimTask],
                     if obs is not None:
                         obs.event("first_token", now, _tid(task), step,
                                   slot=s)
+                        obs.slo_observe("ttft", _cls(task), now,
+                                        now - task.r)
                     if task.true_out_len <= 1:  # first token already EOS
                         task.finish = now
                         done.append(task)
@@ -658,6 +708,9 @@ def simulate_continuous(tasks: Sequence[SimTask],
                             obs.event("evict", now, _tid(task), step,
                                       slot=s)
                             obs.inc("sched.completions")
+                            obs.complete_request(_cls(task), now,
+                                                 u=task.u, out_len=1,
+                                                 latency_s=now - task.r)
                     else:
                         slots[s] = task         # joins THIS step's decode
                         produced[s] = 1         # prefill emits token 1
@@ -698,6 +751,8 @@ def simulate_continuous(tasks: Sequence[SimTask],
                               u=task.u, kv_blocks=need)
                     obs.inc("sched.admissions")
                     obs.observe("queue_wait_s", now - task.r)
+                    obs.slo_observe("queue_wait", _cls(task), now,
+                                    now - task.r)
                 pf_t0 = now
                 pf_start, pf_key, pf_hit = 0, "admit", False
                 if pc is not None:
@@ -746,6 +801,8 @@ def simulate_continuous(tasks: Sequence[SimTask],
                               length=prompt_len - pf_start,
                               finishes=True, shape_key=pf_key)
                     obs.event("first_token", now, tid, step, slot=s)
+                    obs.slo_observe("ttft", _cls(task), now,
+                                    now - task.r)
                 if task.true_out_len <= 1:     # first token already EOS
                     task.finish = now
                     done.append(task)
@@ -756,6 +813,9 @@ def simulate_continuous(tasks: Sequence[SimTask],
                                   lane="gpu", out_len=1)
                         obs.event("evict", now, tid, step, slot=s)
                         obs.inc("sched.completions")
+                        obs.complete_request(_cls(task), now,
+                                             u=task.u, out_len=1,
+                                             latency_s=now - task.r)
                 else:
                     slots[s] = task
                     produced[s] = 1            # prefill emits token 1
@@ -837,11 +897,14 @@ def simulate_continuous(tasks: Sequence[SimTask],
                     if s in finished:
                         continue
                     produced[s] += 1
-                    itl_h.record(now - last_tok[s])
+                    gap = now - last_tok[s]
+                    itl_h.record(gap)
                     last_tok[s] = now
                     if obs is not None:
                         obs.event("token", now, _tid(slots[s]), step,
                                   slot=s, idx=produced[s])
+                        obs.slo_observe("itl", _cls(slots[s]), now,
+                                        gap)
                     if produced[s] >= slots[s].true_out_len:
                         slots[s].finish = now
                         done.append(slots[s])
@@ -851,6 +914,10 @@ def simulate_continuous(tasks: Sequence[SimTask],
                                       step, lane="gpu",
                                       out_len=produced[s])
                             obs.inc("sched.completions")
+                            obs.complete_request(
+                                _cls(slots[s]), now, u=slots[s].u,
+                                out_len=produced[s],
+                                latency_s=now - slots[s].r)
                             # eviction lag: window steps this slot's
                             # blocks stay held past its logical end
                             obs.observe("decode.eviction_lag_steps",
@@ -867,6 +934,14 @@ def simulate_continuous(tasks: Sequence[SimTask],
                     alloc.free_sequence(id(slots[s]))
                 slots[s] = None
                 reserved[s] = 0
+            if obs is not None:
+                # same post-window snapshot point as the engine's serve
+                # loops: after window bookkeeping and eviction, keyed
+                # off the shared ``step`` coordinate
+                obs.maybe_snapshot(
+                    now, step, queue_depth=len(queue),
+                    active=sum(t is not None for t in slots),
+                    kv_util=kv_util[-1])
             progressed = True
 
         if cpu.free_at <= now + 1e-12 and cpu_queue:
@@ -920,7 +995,8 @@ def simulate_continuous(tasks: Sequence[SimTask],
                      cached_tokens_reused=pstats.get(
                          "cached_tokens_reused", 0),
                      cow_copies=pstats.get("cow_copies", 0),
-                     prefix_evictions=pstats.get("prefix_evictions", 0))
+                     prefix_evictions=pstats.get("prefix_evictions", 0),
+                     **_obs_result_fields(obs))
 
 
 # ---------------------------------------------------------------------------

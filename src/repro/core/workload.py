@@ -5,13 +5,22 @@ rate evolves minute-by-minute through beta = 10..150 queries/min (the
 paper iterates integer beta values, one minute each, light load to
 high-traffic peak).  A wait-time interval xi (=2 s) groups arrivals for
 batch processing — the simulator implements xi as its dispatch window.
+
+Traffic classes (PR 8): a workload spec may declare named classes with
+per-class SLO targets (``slo={"ttft_s": ..., "itl_s": ...}``) that the
+windowed SLO monitor (``repro.obs.slo``) judges attainment against.
+``SLOSpec`` lives in ``repro.obs.slo`` (obs must stay importable
+without ``repro.core``; this import direction is the safe one).
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
+
+from repro.obs.slo import SLOSpec
 
 
 def poisson_trace(n_tasks: int, *, beta_min: int = 10, beta_max: int = 150,
@@ -41,3 +50,72 @@ def constant_rate_trace(n_tasks: int, beta: float, seed: int = 0
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(60.0 / beta, size=n_tasks)
     return list(np.cumsum(gaps))
+
+
+# ---------------------------------------------------------------------------
+# traffic classes with per-class SLO targets
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficClass:
+    """One named slice of the workload with its latency SLO.
+
+    ``weight`` is the relative arrival share used by
+    ``assign_classes``; ``max_new_tokens`` optionally caps generation
+    for the class (interactive traffic tends to be short).
+    """
+
+    name: str
+    slo: SLOSpec = SLOSpec()
+    weight: float = 1.0
+    max_new_tokens: Optional[int] = None
+
+
+def make_traffic_classes(spec: Mapping[str, Mapping]
+                         ) -> List[TrafficClass]:
+    """Build classes from the declaration form the ISSUE/workload spec
+    uses::
+
+        make_traffic_classes({
+            "interactive": {"slo": {"ttft_s": 0.5, "itl_s": 0.1},
+                            "weight": 3.0},
+            "batch": {"slo": {"e2e_s": 60.0}},
+        })
+
+    A bare mapping of target names is also accepted as the ``slo``
+    shorthand (``{"interactive": {"ttft_s": 0.5}}``).
+    """
+    classes: List[TrafficClass] = []
+    for name, cfg in spec.items():
+        cfg = dict(cfg)
+        slo = cfg.pop("slo", None)
+        if slo is None:
+            # shorthand: the cfg itself is the target mapping
+            slo = {k: cfg.pop(k) for k in list(cfg)
+                   if k.endswith("_s")}
+        if not isinstance(slo, SLOSpec):
+            slo = SLOSpec.from_json(dict(slo))
+        classes.append(TrafficClass(name=name, slo=slo, **cfg))
+    return classes
+
+
+def assign_classes(n_tasks: int, classes: Sequence[TrafficClass],
+                   seed: int = 0) -> List[str]:
+    """Deterministic weighted class assignment for ``n_tasks``."""
+    if not classes:
+        return [""] * n_tasks
+    rng = np.random.default_rng(seed)
+    weights = np.asarray([max(c.weight, 0.0) for c in classes],
+                         dtype=np.float64)
+    if weights.sum() <= 0.0:
+        weights = np.ones(len(classes))
+    probs = weights / weights.sum()
+    names = [c.name for c in classes]
+    idx = rng.choice(len(names), size=n_tasks, p=probs)
+    return [names[i] for i in idx]
+
+
+def slo_targets(classes: Sequence[TrafficClass]) -> Dict[str, SLOSpec]:
+    """The ``{name: SLOSpec}`` mapping ``SLOMonitor`` consumes."""
+    return {c.name: c.slo for c in classes}

@@ -39,17 +39,21 @@ from __future__ import annotations
 import time
 from typing import Optional
 
+from .calibration import CalibrationLedger, u_bucket
 from .log import FALLBACKS, RateLimitedLogger, fallback_count, warn_once
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       percentiles)
+from .slo import (SLO_METRICS, SLOMonitor, SLOSpec, WindowedHistogram)
 from .trace import (EVENT_KINDS, WALL_FIELDS, Event, RequestTimeline,
                     Span, TraceRecorder, timelines)
 
 __all__ = [
-    "Counter", "Event", "EVENT_KINDS", "FALLBACKS", "Gauge",
-    "Histogram", "MetricsRegistry", "Observability", "RateLimitedLogger",
-    "RequestTimeline", "Span", "TraceRecorder", "WALL_FIELDS",
-    "fallback_count", "percentiles", "timelines", "warn_once",
+    "CalibrationLedger", "Counter", "Event", "EVENT_KINDS", "FALLBACKS",
+    "Gauge", "Histogram", "MetricsRegistry", "Observability",
+    "RateLimitedLogger", "RequestTimeline", "SLO_METRICS", "SLOMonitor",
+    "SLOSpec", "Span", "TraceRecorder", "WALL_FIELDS",
+    "WindowedHistogram", "fallback_count", "percentiles", "timelines",
+    "u_bucket", "warn_once",
 ]
 
 
@@ -69,12 +73,33 @@ class Observability:
     """
 
     def __init__(self, *, trace: bool = True, metrics: bool = True,
-                 max_events: int = 1_000_000):
+                 max_events: int = 1_000_000,
+                 slo=None, calibration=None,
+                 snapshot_every_steps: int = 0):
         self.trace: Optional[TraceRecorder] = \
             TraceRecorder(max_events) if trace else None
         self.metrics: Optional[MetricsRegistry] = \
             MetricsRegistry() if metrics else None
         self.overhead_s = 0.0
+        # --- PR 8: SLO monitor / calibration ledger / health snapshots
+        # (all three default OFF so pre-PR construction is unchanged)
+        if slo is True:
+            slo = SLOMonitor()
+        elif isinstance(slo, dict):
+            slo = SLOMonitor(slo)
+        self.slo: Optional[SLOMonitor] = slo
+        if calibration is True:
+            calibration = CalibrationLedger()
+        self.calibration: Optional[CalibrationLedger] = calibration
+        #: snapshot cadence in DECODE STEPS (the shared engine/sim
+        #: iteration coordinate, so both sides snapshot at the same
+        #: points); 0 disables snapshots
+        self.snapshot_every_steps = int(snapshot_every_steps)
+        self._snap_bucket = 0
+        self.health_trace: list = []
+        if self.trace is not None and self.slo is not None \
+                and self.slo.classes:
+            self.trace.meta["slo"] = self.slo.targets_json()
 
     # ------------------------------------------------------------------
     # no-op-safe emitters — each self-times into ``overhead_s``
@@ -116,6 +141,78 @@ class Observability:
             t0 = time.perf_counter()
             self.metrics.histogram(name).record(value, n)
             self.overhead_s += time.perf_counter() - t0
+
+    # ------------------------------------------------------------------
+    # SLO / calibration / snapshot emitters (PR 8) — same no-op-safe,
+    # self-timed discipline as the trace/metrics emitters above
+    # ------------------------------------------------------------------
+    def slo_observe(self, metric: str, cls: str, ts: float,
+                    value: float, n: int = 1) -> None:
+        """Record a latency observation for (traffic class, metric)."""
+        if self.slo is not None:
+            t0 = time.perf_counter()
+            self.slo.observe(metric, cls, ts, value, n)
+            self.overhead_s += time.perf_counter() - t0
+
+    def complete_request(self, cls: str, ts: float, *, u: float,
+                         out_len: int,
+                         latency_s: Optional[float] = None) -> None:
+        """One request finished: count the completion for its class,
+        judge its end-to-end latency, and ledger u vs realization."""
+        if self.slo is None and self.calibration is None:
+            return
+        t0 = time.perf_counter()
+        if self.slo is not None:
+            resolved = self.slo.complete(cls)
+            if latency_s is not None:
+                self.slo.observe("e2e", cls, ts, latency_s)
+            if self.metrics is not None:
+                self.metrics.counter(
+                    "slo.completions." + resolved).inc()
+        if self.calibration is not None:
+            self.calibration.record(u, out_len, latency_s)
+        self.overhead_s += time.perf_counter() - t0
+
+    def maybe_snapshot(self, ts: float, step: int, *, queue_depth: int,
+                       active: int, kv_util: float,
+                       wall: Optional[dict] = None) -> None:
+        """Emit a periodic health ``snapshot`` event (and append it to
+        ``health_trace``) every ``snapshot_every_steps`` decode steps.
+
+        Cadence keys off ``step`` — not the clock — so the engine and
+        the simulator snapshot at identical iterations; ``attainment``
+        (wall latencies) and ``wall`` (engine-only extras) are in
+        ``WALL_FIELDS`` and drop out of the parity view, leaving the
+        deterministic observation vector (queue depth, active, KV
+        utilization, drift, calibration count) to compare bit-for-bit.
+        """
+        if self.snapshot_every_steps <= 0:
+            return
+        bucket = step // self.snapshot_every_steps
+        if bucket <= self._snap_bucket:
+            return
+        t0 = time.perf_counter()
+        self._snap_bucket = bucket
+        fields: dict = {"queue_depth": int(queue_depth),
+                        "active": int(active),
+                        "kv_util": float(kv_util)}
+        if self.calibration is not None:
+            fields["drift"] = self.calibration.drift()
+            fields["calibration_count"] = self.calibration.count
+        if self.slo is not None:
+            fields["attainment"] = self.slo.windowed_attainment()
+        if wall:
+            fields["wall"] = dict(wall)
+        self.health_trace.append({"ts": float(ts), "step": int(step),
+                                  **fields})
+        if self.trace is not None:
+            self.trace.event("snapshot", ts, None, step, **fields)
+        self.overhead_s += time.perf_counter() - t0
+
+    def health(self) -> dict:
+        """Latest health snapshot ({} before the first one) — the
+        observation vector a future auto-tuner/router polls."""
+        return self.health_trace[-1] if self.health_trace else {}
 
     # ------------------------------------------------------------------
     def measure(self):

@@ -150,11 +150,17 @@ class Histogram:
         — the upper neighbour of numpy's linear-interpolation pair, so
         the estimate brackets ``np.quantile`` from above within one
         bucket's width.
+
+        Edge cases are pinned by tests/test_slo.py: an out-of-range
+        ``q`` raises even on an empty histogram, an empty histogram
+        returns exactly 0.0 (never NaN — idle SLO windows rotate
+        through here), and a single-observation histogram returns that
+        observation exactly (the ``[min, max]`` clamp collapses).
         """
-        if self.count == 0:
-            return 0.0
         if not 0.0 <= q <= 1.0:
             raise ValueError(f"q must be in [0, 1], got {q}")
+        if self.count == 0:
+            return 0.0
         rank = math.ceil(q * (self.count - 1))
         if rank < self.zero_count:
             return max(0.0, self.min)

@@ -39,13 +39,15 @@ import json
 from typing import Dict, List, Optional, Tuple
 
 #: wall-clock field names excluded from the engine-vs-sim parity view
-WALL_FIELDS = frozenset({"ts", "dur", "times"})
+#: (``attainment`` aggregates wall latencies; ``wall`` is the
+#: engine-only extras dict on ``snapshot`` events)
+WALL_FIELDS = frozenset({"ts", "dur", "times", "attainment", "wall"})
 
 #: the typed event vocabulary (trace_report validates against it)
 EVENT_KINDS = frozenset({
     "enqueue", "admit", "reject", "offload", "prefix_hit", "exec_cache",
     "prefill_chunk", "first_token", "decode_window", "token", "evict",
-    "complete", "bulk_batch",
+    "complete", "bulk_batch", "snapshot",
 })
 
 
@@ -114,6 +116,9 @@ class TraceRecorder:
         self.spans: List[Span] = []
         self.counters: List[Tuple[str, float, float]] = []  # name, ts, v
         self.dropped = 0
+        #: run-level metadata (e.g. declared SLO targets) — written as
+        #: a leading ``{"type": "meta", ...}`` JSONL line when nonempty
+        self.meta: Dict = {}
 
     # ------------------------------------------------------------------
     def _budget(self) -> bool:
@@ -159,6 +164,8 @@ class TraceRecorder:
     # ------------------------------------------------------------------
     def to_jsonl(self, path: str) -> str:
         with open(path, "w") as f:
+            if self.meta:
+                f.write(json.dumps({"type": "meta", **self.meta}) + "\n")
             for e in self.events:
                 f.write(json.dumps(e.to_json()) + "\n")
             for s in self.spans:
@@ -178,7 +185,9 @@ class TraceRecorder:
                     continue
                 obj = json.loads(line)
                 typ = obj.pop("type", "event")
-                if typ == "span":
+                if typ == "meta":
+                    rec.meta.update(obj)
+                elif typ == "span":
                     rec.span(obj.pop("name"), obj.pop("ts"),
                              obj.pop("dur"), obj.pop("track", "engine"),
                              **obj)
@@ -284,12 +293,21 @@ class RequestTimeline:
     token_times: List[float] = dataclasses.field(default_factory=list)
     chunks: int = 0
     rejected: int = 0
+    cls: str = ""                   # traffic class (enqueue ``cls``)
+    u: float = -1.0                 # predicted length (admit ``u``)
+    out_len: int = -1               # realized length (complete)
 
     @property
     def ttft(self) -> Optional[float]:
         if self.first_token_ts < 0 or self.arrival < 0:
             return None
         return self.first_token_ts - self.arrival
+
+    @property
+    def e2e(self) -> Optional[float]:
+        if self.complete_ts < 0 or self.arrival < 0:
+            return None
+        return self.complete_ts - self.arrival
 
     @property
     def queue_wait(self) -> Optional[float]:
@@ -324,14 +342,17 @@ def timelines(rec: TraceRecorder) -> Dict[int, RequestTimeline]:
         t = tl(tid)
         if e.kind == "enqueue":
             t.arrival = e.ts
+            t.cls = e.fields.get("cls", t.cls)
         elif e.kind == "admit" and t.admit_ts < 0:
             t.admit_ts = e.ts
+            t.u = float(e.fields.get("u", t.u))
         elif e.kind == "first_token":
             t.first_token_ts = e.ts
         elif e.kind == "token":
             t.token_times.append(e.ts)
         elif e.kind == "complete":
             t.complete_ts = e.ts
+            t.out_len = int(e.fields.get("out_len", t.out_len))
         elif e.kind == "prefill_chunk":
             t.chunks += 1
         elif e.kind == "reject":

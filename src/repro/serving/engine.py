@@ -138,6 +138,11 @@ class Request:
     # EOS disabled this IS the output length — how the benchmarks build
     # deterministic heterogeneous-output-length workloads.
     max_new_tokens: Optional[int] = None
+    # traffic class (repro.core.workload.TrafficClass name) the SLO
+    # monitor attributes this request to; "" = unclassed (resolves to
+    # the monitor's default class, and the enqueue event stays
+    # bit-identical to pre-class traces)
+    traffic_class: str = ""
     # filled at completion:
     start: float = -1.0
     finish: float = -1.0
@@ -442,12 +447,26 @@ class ServingEngine:
                     size=len(batch))
             for t in batch:
                 tid = t.task.task_id
+                cls = t.task.traffic_class
+                ob.slo_observe("queue_wait", cls, now,
+                               t.task.queue_wait_s)
                 if t.task.token_times:
                     ob.event("first_token", t.task.token_times[0], tid,
                              lane=lane)
+                    ob.slo_observe("ttft", cls, t.task.token_times[0],
+                                   t.task.token_times[0] - t.r)
+                    if t.task.out_len > 1:
+                        # run-to-completion streaming model: uniform
+                        # ITL across the batch's decode horizon
+                        ob.slo_observe("itl", cls, finish,
+                                       dur / horizon,
+                                       n=t.task.out_len - 1)
                 ob.event("complete", finish, tid, lane=lane,
                          out_len=t.task.out_len)
                 ob.inc("sched.completions")
+                ob.complete_request(cls, finish, u=t.u,
+                                    out_len=t.task.out_len,
+                                    latency_s=finish - t.r)
         return finish
 
     # ------------------------------------------------------------------
@@ -602,7 +621,26 @@ class ServingEngine:
                          "aot_warmup": self.aot_warmup,
                          "persist_prefix_cache":
                              self.persist_prefix_cache},
+            # SLO monitoring / predictor calibration / health snapshots
+            # (PR 8): {} / [] with the features off, so the obs=None
+            # result stays field-identical to pre-PR serves.
+            # SimResult carries the same three fields.
+            "slo_attainment": (self.obs.slo.attainment()
+                               if self.obs is not None
+                               and self.obs.slo is not None else {}),
+            "calibration": (self.obs.calibration.summary()
+                            if self.obs is not None
+                            and self.obs.calibration is not None
+                            else {}),
+            "health_trace": (list(self.obs.health_trace)
+                             if self.obs is not None else []),
         }
+
+    def health(self) -> Dict:
+        """Latest health snapshot of the current/last serve — the
+        observation vector a future auto-tuner/router polls ({} with
+        obs off or before the first snapshot fires)."""
+        return self.obs.health() if self.obs is not None else {}
 
     def _serve_batch(self, requests: Sequence[Request]) -> Dict:
         pending = sorted(requests, key=lambda r: r.arrival)
@@ -617,8 +655,10 @@ class ServingEngine:
         while len(done) < n:
             while i < n and sim_tasks[i].r <= now + 1e-9:
                 if self.obs is not None:
+                    cls = sim_tasks[i].task.traffic_class
                     self.obs.event("enqueue", sim_tasks[i].r,
-                                   sim_tasks[i].task.task_id)
+                                   sim_tasks[i].task.task_id,
+                                   **({"cls": cls} if cls else {}))
                 queue.append(sim_tasks[i])
                 i += 1
             if queue and (len(queue) >= C
@@ -705,11 +745,14 @@ class ServingEngine:
                 tok = int(window_host[s, j])
                 slot_gen[s] += 1
                 task = slot_task[s]
+                prev_t = task.task.token_times[-1]
                 task.task.out_tokens.append(tok)
                 task.task.token_times.append(t_j)
                 if ob is not None:
                     ob.event("token", t_j, task.task.task_id, step,
                              slot=s, idx=slot_gen[s])
+                    ob.slo_observe("itl", task.task.traffic_class,
+                                   t_j, t_j - prev_t)
                 if tok == self.eos_id or slot_gen[s] >= slot_cap[s]:
                     task.finish = t_j
                     task.task.finish = t_j
@@ -720,6 +763,10 @@ class ServingEngine:
                         ob.event("complete", t_j, task.task.task_id,
                                  step, lane="gpu", out_len=slot_gen[s])
                         ob.inc("sched.completions")
+                        ob.complete_request(task.task.traffic_class,
+                                            t_j, u=task.u,
+                                            out_len=slot_gen[s],
+                                            latency_s=t_j - task.r)
                         # eviction lag: window steps this slot's blocks
                         # stay held past its logical end (in arrears)
                         ob.observe("decode.eviction_lag_steps",
@@ -879,8 +926,10 @@ class ServingEngine:
         while len(done) < n:
             while i < n and sim_tasks[i].r <= now + 1e-9:
                 if ob is not None:
+                    cls = sim_tasks[i].task.traffic_class
                     ob.event("enqueue", sim_tasks[i].r,
-                             sim_tasks[i].task.task_id, step)
+                             sim_tasks[i].task.task_id, step,
+                             **({"cls": cls} if cls else {}))
                 queue.append(sim_tasks[i])
                 i += 1
             iter_stall = 0.0
@@ -929,6 +978,9 @@ class ServingEngine:
                              u=task.u, kv_blocks=need)
                     ob.inc("sched.admissions")
                     ob.observe("queue_wait_s", task.task.queue_wait_s)
+                    ob.slo_observe("queue_wait",
+                                   task.task.traffic_class, now,
+                                   task.task.queue_wait_s)
                 stalled = any(t is not None for t in slot_task)
                 toks = self._tokenize_padded(task.task.text)
                 batch = {"tokens": jnp.asarray(toks[None, :])}
@@ -1019,6 +1071,8 @@ class ServingEngine:
                              start=pf_start, length=S - pf_start,
                              finishes=True, shape_key=pf_key)
                     ob.event("first_token", now, tid, step, slot=slot)
+                    ob.slo_observe("ttft", task.task.traffic_class,
+                                   now, now - task.r)
                 task.start, task.lane = now, "gpu"
                 task.task.start, task.task.lane = now, "gpu"
                 task.task.slot = slot
@@ -1036,6 +1090,9 @@ class ServingEngine:
                                  out_len=1)
                         ob.event("evict", now, tid, step, slot=slot)
                         ob.inc("sched.completions")
+                        ob.complete_request(task.task.traffic_class,
+                                            now, u=task.u, out_len=1,
+                                            latency_s=now - task.r)
                     if paged:
                         alloc.free_sequence(task.task.task_id)
                         kvc.clear_table(slot)
@@ -1099,6 +1156,16 @@ class ServingEngine:
                     alloc=alloc if paged else None,
                     kvc=kvc if paged else None,
                     reserved=reserved if paged else None, step=step)
+                if ob is not None:
+                    # snapshot cadence keys off ``step`` (the shared
+                    # iteration coordinate), AFTER window bookkeeping —
+                    # the simulator snapshots at the identical point
+                    ob.maybe_snapshot(
+                        now, step, queue_depth=len(queue),
+                        active=sum(t is not None for t in slot_task),
+                        kv_util=self.kv_util_samples[-1],
+                        wall={"collect_wait":
+                              self._worker.wait_snapshot()})
                 continue
 
             if bulk and not queue:
@@ -1176,8 +1243,10 @@ class ServingEngine:
         while len(done) < n:
             while i < n and sim_tasks[i].r <= now + 1e-9:
                 if ob is not None:
+                    cls = sim_tasks[i].task.traffic_class
                     ob.event("enqueue", sim_tasks[i].r,
-                             sim_tasks[i].task.task_id, step)
+                             sim_tasks[i].task.task_id, step,
+                             **({"cls": cls} if cls else {}))
                 queue.append(sim_tasks[i])
                 i += 1
 
@@ -1222,6 +1291,9 @@ class ServingEngine:
                              slot=slot, u=task.u, kv_blocks=need)
                     ob.inc("sched.admissions")
                     ob.observe("queue_wait_s", task.task.queue_wait_s)
+                    ob.slo_observe("queue_wait",
+                                   task.task.traffic_class, now,
+                                   task.task.queue_wait_s)
                 # all of the prompt's blocks up front: every chunk
                 # position is backed, but kvc's DECODE table row stays
                 # on the trash page until prefill completes (the decode
@@ -1342,6 +1414,8 @@ class ServingEngine:
                     if ob is not None:
                         ob.event("first_token", now, task.task.task_id,
                                  step, slot=s)
+                        ob.slo_observe("ttft", task.task.traffic_class,
+                                       now, now - task.r)
                     if first == self.eos_id or cap <= 1:
                         task.finish = now
                         task.task.finish, task.task.out_len = now, 1
@@ -1352,6 +1426,10 @@ class ServingEngine:
                             ob.event("evict", now, task.task.task_id,
                                      step, slot=s)
                             ob.inc("sched.completions")
+                            ob.complete_request(
+                                task.task.traffic_class, now,
+                                u=task.u, out_len=1,
+                                latency_s=now - task.r)
                         alloc.free_sequence(task.task.task_id)
                         reserved[s] = 0
                     else:
@@ -1407,6 +1485,14 @@ class ServingEngine:
                     active, window_host, now, dt, slot_task, slot_gen,
                     slot_cap, tokens, done, alloc=alloc, kvc=kvc,
                     reserved=reserved, step=step)
+                if ob is not None:
+                    # same post-window snapshot point as the stall loop
+                    ob.maybe_snapshot(
+                        now, step, queue_depth=len(queue),
+                        active=sum(t is not None for t in slot_task),
+                        kv_util=self.kv_util_samples[-1],
+                        wall={"collect_wait":
+                              self._worker.wait_snapshot()})
                 continue
             if plans:
                 continue

@@ -97,6 +97,14 @@ class CompletionWorker:
             raise exc
         return host, dt
 
+    def wait_snapshot(self) -> dict:
+        """Snapshot of the collect-wait histogram so far ({} when no
+        registry was supplied) — the pipeline's contribution to the
+        engine's health ``snapshot`` events (a ``wall`` field: purely
+        wall-clock, excluded from the engine-vs-sim parity view)."""
+        return (self._wait_hist.snapshot()
+                if self._wait_hist is not None else {})
+
     def close(self, timeout: Optional[float] = 5.0) -> None:
         self._in.put(None)
         self._thread.join(timeout=timeout)

@@ -1,0 +1,538 @@
+"""Windowed SLO monitor + uncertainty calibration ledger (ISSUE 8).
+
+Acceptance properties:
+
+  * metrics edge pins — ``Histogram.quantile`` on empty and
+    single-observation histograms, out-of-range ``q`` validation even
+    when empty, ``Gauge.mean`` before any ``set`` (the satellite
+    hardening of ``obs.metrics``);
+  * window rotation — ``WindowedHistogram`` rotates deterministically
+    on the virtual clock, the merge of expired windows plus live
+    windows is bit-equal to one histogram fed every sample, and (a
+    deterministic stand-in for the hypothesis property — the container
+    ships no hypothesis) windowed quantiles always lie between the
+    live windows' min and max;
+  * SLO semantics — per-class attainment judged at record time,
+    unknown/empty classes resolve to the default class, idle windows
+    report attainment 1.0 (never NaN);
+  * calibration — streaming MAE/bias, power-of-two reliability
+    buckets, and a drift score that is 0.0 until the baseline freezes
+    and reaches 1.0 when the error distribution shifts entirely;
+  * engine-vs-sim parity — with judgment-invariant targets
+    (``inf`` always attains, ``-1.0`` never), per-class SLO counters,
+    calibration counters, and snapshot observation vectors are
+    bit-for-bit identical between a traced serve and a traced
+    simulation at ``decode_steps in {1, 4}`` for stall and chunked;
+  * off-by-default — SLO/calibration recording never alters
+    scheduling, and without it the new result keys are empty;
+  * slo_report — the CLI renders the checked-in mini trace
+    (attainment table + reliability diagram + health table) and
+    rejects schema violations.
+"""
+
+import dataclasses
+import json
+import math
+import os
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import configs
+from repro.core import datagen, personas, priority as prio
+from repro.core import scheduler as sched, simulator, workload
+from repro.obs import (CalibrationLedger, Observability, SLO_METRICS,
+                       SLOMonitor, SLOSpec, TraceRecorder,
+                       WindowedHistogram, timelines, u_bucket)
+from repro.obs.metrics import Gauge, Histogram
+from repro.serving.engine import Request, ServingEngine
+
+SCRIPTS = os.path.join(os.path.dirname(__file__), "..", "scripts")
+MINI_TRACE = os.path.join(os.path.dirname(__file__), "data",
+                          "mini_trace.jsonl")
+
+SLOTS = 3
+MAX_NEW = 6
+BUCKET = 8
+BS = 4
+CAPS = [2, 6, 1, 4, 6, 2, 3, 5, 1, 6, 2, 4]
+CLS = ["interactive", "batch"] * (len(CAPS) // 2)
+
+# judgment-invariant targets: +inf always attains; -1.0 never does
+# (latencies are >= 0 — and 0.0 itself is a reachable boundary on the
+# engine's clock, so 0.0 would NOT be parity-safe)
+TARGETS = {"interactive": SLOSpec(),
+           "batch": SLOSpec(ttft_s=-1.0, itl_s=-1.0, e2e_s=-1.0,
+                            queue_wait_s=-1.0)}
+
+
+# ---------------------------------------------------------------------------
+# metrics hardening pins (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_quantile_empty_pinned():
+    h = Histogram()
+    for q in (0.0, 0.5, 1.0):
+        assert h.quantile(q) == 0.0          # exactly 0.0, never NaN
+    # out-of-range q raises even on an EMPTY histogram (validation
+    # precedes the empty early-return)
+    with pytest.raises(ValueError):
+        h.quantile(-0.1)
+    with pytest.raises(ValueError):
+        h.quantile(1.1)
+
+
+def test_histogram_quantile_single_observation_pinned():
+    h = Histogram()
+    h.record(3.7)
+    for q in (0.0, 0.5, 1.0):
+        assert h.quantile(q) == 3.7          # [min, max] clamp collapses
+
+
+def test_gauge_mean_before_set_pinned():
+    g = Gauge()
+    assert g.mean == 0.0                     # not a ZeroDivisionError
+    assert g.snapshot() == {"last": 0.0, "max": 0.0, "mean": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# WindowedHistogram: rotation, lifetime equality, quantile bounds
+# ---------------------------------------------------------------------------
+
+
+def test_window_rotation_on_virtual_clock():
+    w = WindowedHistogram(window_s=1.0, num_windows=3)
+    for ts, v in ((0.5, 1.0), (1.5, 2.0), (2.5, 3.0)):
+        w.record(ts, v)
+    assert sorted(w.windows) == [0, 1, 2] and w.expired.count == 0
+    w.record(3.5, 4.0)                       # epoch 3: epoch 0 expires
+    assert sorted(w.windows) == [1, 2, 3]
+    assert w.expired.count == 1 and w.count == 4
+    assert w.merged().count == 3 and w.lifetime().count == 4
+    w.advance(2.0)                           # clock is monotone: no-op
+    assert sorted(w.windows) == [1, 2, 3]
+    w.advance(10.0)                          # everything rotates out
+    assert not w.windows and w.expired.count == 4
+    assert w.quantile(0.5) == 0.0            # empty live view
+    with pytest.raises(ValueError):
+        WindowedHistogram(window_s=0.0)
+    with pytest.raises(ValueError):
+        WindowedHistogram(num_windows=0)
+
+
+def test_expired_merge_equals_all_samples():
+    """lifetime() == archive + live == one histogram fed every sample,
+    bit-equal in buckets/count/min/max (merge is associative)."""
+    rng = np.random.default_rng(3)
+    w = WindowedHistogram(window_s=2.0, num_windows=3)
+    ref = Histogram()
+    ts = 0.0
+    for _ in range(500):
+        ts += float(rng.exponential(0.5))
+        v = float(rng.lognormal(0.0, 1.5))
+        w.record(ts, v)
+        ref.record(v)
+    assert w.expired.count > 0               # rotation actually happened
+    lt = w.lifetime()
+    assert lt.buckets == ref.buckets
+    assert lt.count == ref.count == 500 == w.count
+    assert lt.min == ref.min and lt.max == ref.max
+    assert lt.total == pytest.approx(ref.total)
+    for q in (0.0, 0.5, 0.9, 0.99, 1.0):
+        assert lt.quantile(q) == ref.quantile(q)
+
+
+def test_windowed_quantiles_within_live_extremes():
+    """Deterministic stand-in for the hypothesis property (the
+    container ships no hypothesis): for any record schedule, every
+    windowed quantile lies within [min, max] of the live windows."""
+    rng = np.random.default_rng(1234)
+    checked = 0
+    for _ in range(25):
+        w = WindowedHistogram(window_s=float(rng.uniform(0.5, 3.0)),
+                              num_windows=int(rng.integers(1, 5)))
+        ts = 0.0
+        for _ in range(int(rng.integers(5, 60))):
+            ts += float(rng.exponential(1.0))
+            w.record(ts, float(rng.lognormal(0.0, 2.0)))
+        live = [h for h in w.windows.values() if h.count]
+        if not live:
+            continue
+        lo = min(h.min for h in live)
+        hi = max(h.max for h in live)
+        for q in (0.0, 0.25, 0.5, 0.9, 1.0):
+            assert lo <= w.quantile(q) <= hi
+        checked += 1
+    assert checked > 0
+
+
+# ---------------------------------------------------------------------------
+# SLOSpec + SLOMonitor semantics
+# ---------------------------------------------------------------------------
+
+
+def test_slospec_targets_and_json_roundtrip():
+    s = SLOSpec(ttft_s=0.5, itl_s=0.1)
+    assert s.target("ttft") == 0.5 and math.isinf(s.target("e2e"))
+    with pytest.raises(KeyError):
+        s.target("nope")
+    assert s.to_json() == {"ttft_s": 0.5, "itl_s": 0.1}  # inf omitted
+    assert SLOSpec.from_json(s.to_json()) == s
+
+
+def test_monitor_resolves_unknown_class_to_default():
+    mon = SLOMonitor()
+    mon.observe("ttft", "", 0.0, 0.5)
+    mon.observe("ttft", "never-declared", 0.0, 0.5)
+    assert mon.resolve("") == "default"
+    pc = mon.parity_counters()
+    assert pc["slo.default.ttft.total"] == 2
+    assert pc["slo.default.ttft.ok"] == 2    # default spec: all inf
+    with pytest.raises(KeyError):
+        mon.observe("nope", "", 0.0, 0.5)
+
+
+def test_windowed_attainment_idle_and_rotation():
+    mon = SLOMonitor({"a": SLOSpec(ttft_s=1.0)}, window_s=1.0,
+                     num_windows=2)
+    assert mon.windowed_attainment()["a"]["ttft"] == 1.0  # idle, not NaN
+    mon.observe("ttft", "a", 0.5, 2.0)       # miss (epoch 0)
+    assert mon.windowed_attainment()["a"]["ttft"] == 0.0
+    mon.observe("ttft", "a", 1.5, 0.5)       # hit  (epoch 1)
+    assert mon.windowed_attainment()["a"]["ttft"] == 0.5
+    mon.observe("ttft", "a", 2.5, 0.5)       # epoch 2: epoch 0 rotates
+    assert mon.windowed_attainment()["a"]["ttft"] == 1.0
+    # the cumulative view never forgets
+    att = mon.attainment()["a"]["ttft"]
+    assert (att["ok"], att["total"]) == (2, 3)
+    assert att["frac"] == pytest.approx(2 / 3)
+    assert att["lifetime"]["count"] == 3
+    assert mon.attainment()["a"]["completions"] == 0
+    assert mon.complete("a") == "a"
+    assert mon.attainment()["a"]["completions"] == 1
+
+
+# ---------------------------------------------------------------------------
+# CalibrationLedger
+# ---------------------------------------------------------------------------
+
+
+def test_calibration_mae_bias_and_reliability_buckets():
+    assert u_bucket(0.5) == -1 and u_bucket(1.0) == 0
+    assert u_bucket(2.0) == 1 and u_bucket(7.9) == 2
+    led = CalibrationLedger()
+    led.record(4.0, 2)                       # bucket 2, err +2
+    led.record(8.0, 10, latency_s=1.0)       # bucket 3, err -2
+    led.record(0.5, 1)                       # bucket -1, err -0.5
+    assert led.count == 3
+    assert led.mae == pytest.approx(4.5 / 3)
+    assert led.bias == pytest.approx(-0.5 / 3)
+    rel = led.reliability()
+    assert [r["u_lo"] for r in rel] == [0.0, 4.0, 8.0]
+    assert [r["n"] for r in rel] == [1, 1, 1]
+    assert rel[1]["u_mean"] == 4.0 and rel[1]["real_mean"] == 2.0
+    assert led.latency.count == 1            # only the one with latency
+    s = led.summary()
+    assert s["count"] == 3 and len(s["reliability"]) == 3
+    p = led.parity()
+    assert p["bucket_counts"] == {-1: 1, 2: 1, 3: 1}
+    assert "latency" not in p                # wall stays out of parity
+
+
+def test_calibration_drift_freezes_then_detects_shift():
+    led = CalibrationLedger(drift_window=4, drift_windows=1,
+                            baseline_n=4)
+    for _ in range(3):
+        led.record(10.0, 10)                 # |err| = 0
+        assert not led.baseline_frozen and led.drift() == 0.0
+    led.record(10.0, 10)
+    assert led.baseline_frozen
+    assert led.drift() == 0.0                # recent == baseline
+    for _ in range(4):
+        led.record(100.0, 10)                # |err| = 90, new epoch
+    # recent window is now entirely shifted mass: total variation 1.0
+    assert led.drift() == 1.0
+    with pytest.raises(ValueError):
+        CalibrationLedger(drift_window=0)
+    with pytest.raises(ValueError):
+        CalibrationLedger(drift_windows=0)
+
+
+# ---------------------------------------------------------------------------
+# workload traffic classes
+# ---------------------------------------------------------------------------
+
+
+def test_traffic_class_declarations_and_assignment():
+    classes = workload.make_traffic_classes({
+        "interactive": {"slo": {"ttft_s": 0.5, "itl_s": 0.1},
+                        "weight": 3.0},
+        "batch": {"e2e_s": 60.0},            # bare-shorthand form
+    })
+    by = {c.name: c for c in classes}
+    assert by["interactive"].slo.ttft_s == 0.5
+    assert by["interactive"].weight == 3.0
+    assert by["batch"].slo.e2e_s == 60.0
+    assert math.isinf(by["batch"].slo.ttft_s)
+    assert workload.slo_targets(classes) == {"interactive":
+                                             by["interactive"].slo,
+                                             "batch": by["batch"].slo}
+    a1 = workload.assign_classes(80, classes, seed=5)
+    assert a1 == workload.assign_classes(80, classes, seed=5)
+    assert set(a1) == {"interactive", "batch"}
+    assert a1.count("interactive") > a1.count("batch")   # 3:1 weights
+    assert workload.assign_classes(3, []) == ["", "", ""]
+
+
+# ---------------------------------------------------------------------------
+# trace plumbing: meta line, timeline class/calibration fields
+# ---------------------------------------------------------------------------
+
+
+def test_trace_meta_line_roundtrip(tmp_path):
+    obs = Observability(slo={"a": SLOSpec(ttft_s=0.5)})
+    assert obs.trace.meta == {"slo": {"a": {"ttft_s": 0.5}}}
+    obs.event("enqueue", 0.0, 0, cls="a")
+    path = obs.trace.to_jsonl(str(tmp_path / "t.jsonl"))
+    with open(path) as f:
+        first = json.loads(f.readline())
+    assert first == {"type": "meta", "slo": {"a": {"ttft_s": 0.5}}}
+    back = TraceRecorder.load_jsonl(path)
+    assert back.meta == {"slo": {"a": {"ttft_s": 0.5}}}
+
+
+def test_timelines_carry_class_and_calibration_fields():
+    rec = TraceRecorder()
+    rec.event("enqueue", 0.0, 7, cls="interactive")
+    rec.event("admit", 0.5, 7, 0, slot=1, u=2.25, kv_blocks=3)
+    rec.event("first_token", 0.6, 7, 0, slot=1)
+    rec.event("complete", 0.7, 7, 1, lane="gpu", out_len=2)
+    rec.event("snapshot", 0.8, None, 2, queue_depth=0, active=1,
+              kv_util=0.5)                   # no task_id: not a timeline
+    tls = timelines(rec)
+    assert set(tls) == {7}
+    t = tls[7]
+    assert t.cls == "interactive"
+    assert t.u == 2.25 and t.out_len == 2
+    assert t.e2e == pytest.approx(0.7)
+
+
+# ---------------------------------------------------------------------------
+# engine-vs-sim parity (mirrors tests/test_obs.py fixtures)
+# ---------------------------------------------------------------------------
+
+
+def _make_obs():
+    return Observability(slo=dict(TARGETS), calibration=True,
+                         snapshot_every_steps=2)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get_smoke_config("starcoder2-3b")
+    from repro.models import model as model_lib
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    corpus = datagen.generate_corpus(
+        datagen.VARIANCE_MIXES["normal"], 64, seed=0)
+    train, test = datagen.train_test_split(corpus, train_frac=0.5)
+    persona = dataclasses.replace(personas.get_persona("bart"),
+                                  batch_size=SLOTS)
+    profile = sched.offline_profile(train, persona, epochs=15)
+    texts = [test[i % 4].text for i in range(len(CAPS))]
+    return cfg, params, persona, profile, texts
+
+
+def _requests(texts, caps):
+    return [Request(text=t, arrival=0.0, task_id=i, max_new_tokens=c,
+                    traffic_class=CLS[i])
+            for i, (t, c) in enumerate(zip(texts, caps))]
+
+
+def _sim_tasks(texts, caps, profile, persona, xi=2.0):
+    out = []
+    for i, (t, c) in enumerate(zip(texts, caps)):
+        u = profile.predictor.score(t)
+        d = prio.priority_point(0.0, len(t.split()), persona.phi,
+                                None, xi=xi)
+        out.append(prio.SimTask(
+            task=Request(text=t, arrival=0.0, task_id=i,
+                         traffic_class=CLS[i]),
+            u=float(max(u, 0.0)), r=0.0, d=d,
+            input_len=float(len(t.split())), true_out_len=int(c)))
+    return out
+
+
+def _sim_kwargs(prefill, n, kv_num_blocks):
+    kw = dict(kv_block_size=BS, kv_num_blocks=kv_num_blocks,
+              prompt_len=BUCKET, decode_steps=n)
+    if prefill == "chunked":
+        kw.update(num_slots=SLOTS, prefill="chunked", chunk_size=3,
+                  token_budget=8)
+    else:
+        kw.update(num_slots=4)
+    return kw
+
+
+@pytest.fixture(scope="module")
+def run(setup):
+    """Memoized classed serve with the full PR-8 obs surface on."""
+    cfg, params, persona, profile, texts = setup
+    pcfg = dataclasses.replace(profile.policy_config(), tau=1e18)
+    cache = {}
+
+    def _run(prefill="stall", n=1, traced=True):
+        key = (prefill, n, traced)
+        if key not in cache:
+            obs = _make_obs() if traced else None
+            kw = dict(decode_steps=n, obs=obs)
+            if prefill == "chunked":
+                kw.update(num_slots=SLOTS, prefill="chunked",
+                          chunk_size=3, token_budget=8)
+            else:
+                kw.update(num_slots=4, kv_num_blocks=7)
+            eng = ServingEngine(
+                params, cfg, sched.POLICIES["fifo"](persona, pcfg),
+                profile, input_bucket=BUCKET, max_new_tokens=MAX_NEW,
+                mode="continuous", eos_id=-1, kv="paged",
+                kv_block_size=BS, **kw)
+            cache[key] = (eng, eng.serve(_requests(texts, CAPS)), obs)
+        return cache[key]
+
+    return _run
+
+
+@pytest.mark.parametrize("prefill,n", [("stall", 1), ("stall", 4),
+                                       ("chunked", 1), ("chunked", 4)])
+def test_engine_vs_sim_slo_parity(setup, run, prefill, n):
+    """The tentpole acceptance: per-class SLO counters, calibration
+    counters, and snapshot observation vectors are bit-for-bit
+    identical between engine and simulator."""
+    cfg, params, persona, profile, texts = setup
+    pcfg = dataclasses.replace(profile.policy_config(), tau=1e18)
+    eng, res, eobs = run(prefill, n)
+    sobs = _make_obs()
+    sim = simulator.simulate_continuous(
+        _sim_tasks(texts, CAPS, profile, persona),
+        sched.POLICIES["fifo"](persona, pcfg), obs=sobs,
+        **_sim_kwargs(prefill, n, eng.kv_num_blocks))
+    assert res["completion_order"] == [t.task.task_id for t in sim.tasks]
+    # event-stream parity INCLUDING the new snapshot events (their
+    # wall-dependent attainment/wall fields drop out of the view)
+    assert eobs.trace.parity_events() == sobs.trace.parity_events()
+    assert any(e.kind == "snapshot" for e in eobs.trace.events)
+    assert eobs.metrics.counters() == sobs.metrics.counters()
+    # per-class SLO attainment counters: bit-for-bit, and extreme
+    # targets make the judgments themselves checkable
+    pc = eobs.slo.parity_counters()
+    assert pc == sobs.slo.parity_counters()
+    for m in SLO_METRICS:
+        assert pc[f"slo.interactive.{m}.ok"] \
+            == pc[f"slo.interactive.{m}.total"] > 0
+        assert pc[f"slo.batch.{m}.ok"] == 0 < pc[f"slo.batch.{m}.total"]
+    assert pc["slo.interactive.completions"] == len(CAPS) // 2
+    assert pc["slo.batch.completions"] == len(CAPS) // 2
+    assert eobs.metrics.counters()["slo.completions.interactive"] \
+        == len(CAPS) // 2
+    # calibration: eos is disabled, so realized out_len == CAPS and the
+    # ledger is exactly reproducible from the predictor's u scores
+    cal = eobs.calibration.parity()
+    assert cal == sobs.calibration.parity()
+    assert cal["count"] == len(CAPS)
+    exp_err = sum(t.u - c for t, c in
+                  zip(_sim_tasks(texts, CAPS, profile, persona), CAPS))
+    assert cal["err_sum"] == pytest.approx(exp_err)
+    # health snapshots: same cadence (shared step coordinate), same
+    # observation vector; wall extras only on the engine side
+    eh, sh = eobs.health_trace, sobs.health_trace
+    assert len(eh) == len(sh) > 0
+    for a, b in zip(eh, sh):
+        for k in ("step", "queue_depth", "active", "kv_util", "drift",
+                  "calibration_count"):
+            assert a[k] == b[k], k
+    assert "wall" in eh[0] and "wall" not in sh[0]
+    # result surfacing on both sides + the live-health accessor
+    assert res["slo_attainment"] == eobs.slo.attainment()
+    assert res["calibration"]["count"] == len(CAPS)
+    assert res["health_trace"] == eh
+    assert eng.health() == eh[-1]
+    assert sim.slo_attainment == sobs.slo.attainment()
+    assert sim.calibration["count"] == len(CAPS)
+    assert sim.health_trace == sh
+
+
+def test_slo_recording_changes_nothing(setup, run):
+    """SLO/calibration/snapshot recording never alters scheduling, and
+    without obs the new result keys are empty."""
+    _, plain, none_obs = run("stall", 1, traced=False)
+    _, traced, obs = run("stall", 1, traced=True)
+    assert none_obs is None
+    for key in ("completion_order", "prefill_dispatches",
+                "decode_dispatches", "decode_steps_executed",
+                "rejected_for_memory", "exec_cache_hits",
+                "fallback_events"):
+        assert plain[key] == traced[key], key
+    assert plain["slo_attainment"] == {}
+    assert plain["calibration"] == {}
+    assert plain["health_trace"] == []
+    assert plain["obs_overhead_s"] == 0.0
+
+
+def test_sim_slo_recording_changes_nothing(setup):
+    """Simulator twin of the off-by-default guard."""
+    cfg, params, persona, profile, texts = setup
+    pcfg = dataclasses.replace(profile.policy_config(), tau=1e18)
+    runs = []
+    for obs in (None, _make_obs()):
+        runs.append(simulator.simulate_continuous(
+            _sim_tasks(texts, CAPS, profile, persona),
+            sched.POLICIES["fifo"](persona, pcfg),
+            obs=obs, **_sim_kwargs("chunked", 2, 24)))
+    plain, traced = runs
+    assert [t.task.task_id for t in plain.tasks] \
+        == [t.task.task_id for t in traced.tasks]
+    assert plain.summary() == traced.summary()
+    assert plain.slo_attainment == {} and plain.calibration == {}
+    assert plain.health_trace == []
+    assert traced.slo_attainment and traced.health_trace
+
+
+# ---------------------------------------------------------------------------
+# slo_report CLI on the checked-in mini trace
+# ---------------------------------------------------------------------------
+
+
+def _slo_report():
+    sys.path.insert(0, SCRIPTS)
+    try:
+        import slo_report
+    finally:
+        sys.path.pop(0)
+    return slo_report
+
+
+def test_mini_trace_slo_report(capsys):
+    sr = _slo_report()
+    assert sr.main([MINI_TRACE]) == 0
+    text = capsys.readouterr().out
+    assert "class" in text and "reliability" in text
+    assert "queue_depth" in text             # health table rendered
+    assert sr.main([MINI_TRACE, "--json"]) == 0
+    stats = json.loads(capsys.readouterr().out)
+    assert stats["requests"] > 0 and stats["snapshots"] > 0
+    assert "interactive" in stats["classes"]
+    assert stats["calibration"]["count"] > 0
+
+
+def test_slo_report_rejects_bad_traces(tmp_path):
+    sr = _slo_report()
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text(json.dumps({"type": "event", "kind": "teleport",
+                               "ts": 0.0, "task_id": 0}) + "\n")
+    assert sr.main([str(bad)]) == 1
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    assert sr.main([str(empty)]) == 1
