@@ -1,0 +1,206 @@
+"""Multi-replica router policy sweep (PR 9 tentpole benchmark).
+
+A 10k-request flash-crowd trace (``workload.flash_crowd_trace``: a
+baseline Poisson stream whose middle quarter arrives at ~2.2x the pool
+knee) is placed over R=4 simulated replicas by each router policy —
+``rtlm`` vs ``least_queue`` vs ``round_robin`` — and judged on the
+interactive-class tail: p99 TTFT (``SLOMonitor.lifetime_quantile``)
+and windowed-SLO attainment fractions.
+
+The regime is chosen where placement actually matters: few decode
+slots per replica (2) and heavy-tailed output lengths (exp(24) capped
+at 128 tokens), so one long request ties up half a replica — the
+classic join-shortest-queue setting where a load-oblivious router
+keeps hashing the burst uniformly while queue/uncertainty-aware
+placement drains it around the backlog.  The uncertainty predictions
+fed to ``rtlm`` carry realistic noise (sigma=2 tokens).
+
+The headline claim is asserted IN-benchmark at the pinned default
+seed: rtlm must beat round_robin on BOTH interactive p99 TTFT and
+TTFT SLO attainment at R=4.  A secondary ``bulk_isolation`` record
+demonstrates the bulk replica slice on a mixed interactive+batch
+trace: batch-class requests confined to the designated replica,
+interactive traffic never placed there.
+
+    PYTHONPATH=src python -m benchmarks.router_policies [--seed N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import types
+
+import numpy as np
+
+from repro.core import (personas, priority as prio, scheduler as sched,
+                        simulator, workload)
+from repro.obs import Observability
+from repro.serving.router import Router
+
+from . import common
+
+SEED = 0
+N_TASKS = 10_000
+R = 4
+SLOTS = 2                      # per replica: the JSQ-sensitive regime
+KV_BS = 16
+KV_BLOCKS = 32                 # per replica
+PROMPT = 16
+XI = 0.1
+OUT_MEAN = 24.0                # heavy-tailed output lengths, exp(mean)
+OUT_CAP = 128
+U_NOISE = 2.0                  # predictor noise (tokens, sigma)
+BASE_BETA = 150.0              # queries/min; pool knee is ~330/min
+PEAK_BETA = 330.0
+PERSONA = "bart"
+
+CLASS_SPEC = {
+    "interactive": {"slo": {"ttft_s": 2.0, "e2e_s": 10.0}},
+}
+MIXED_SPEC = {
+    "interactive": {"slo": {"ttft_s": 2.0, "e2e_s": 10.0},
+                    "weight": 3.0},
+    "batch": {"slo": {"e2e_s": 60.0}, "bulk": True},
+}
+
+POLICIES = ("round_robin", "least_queue", "rtlm")
+
+
+def _mk_tasks(n, arrivals, classes, seed):
+    """Heavy-tailed synthetic workload: true output lengths exp(24)
+    capped at 128, predictions = truth + N(0, 2) noise (the router
+    never sees the ground truth)."""
+    rng = np.random.default_rng(seed)
+    tasks = []
+    for i in range(n):
+        true = min(OUT_CAP, 1 + int(rng.exponential(OUT_MEAN)))
+        u = max(0.5, true + float(rng.normal(0.0, U_NOISE)))
+        tasks.append(prio.SimTask(
+            task=types.SimpleNamespace(task_id=i,
+                                       traffic_class=classes[i]),
+            u=u, r=float(arrivals[i]), d=float(arrivals[i]) + 4.0,
+            input_len=float(PROMPT), true_out_len=true))
+    return tasks
+
+
+def _run_arm(router, arrivals, classes, targets, seed):
+    persona = personas.get_persona(PERSONA)
+    pcfg = sched.PolicyConfig(u_scale=30.0, tau=35.0)
+    obs = Observability(trace=False, metrics=False, slo=dict(targets))
+    t0 = time.time()
+    res = simulator.simulate_replicated(
+        _mk_tasks(len(arrivals), arrivals, classes, seed + 1),
+        sched.POLICIES["rt-lm"](persona, pcfg), R=R, router=router,
+        obs=obs, num_slots=SLOTS, kv_block_size=KV_BS,
+        kv_num_blocks=KV_BLOCKS, prompt_len=PROMPT, xi=XI)
+    att = obs.slo.attainment()
+    return {
+        "policy": router.policy,
+        "bulk_replicas": list(router.bulk_replicas),
+        "placement_counts": res.placement_counts(),
+        "makespan_s": res.makespan,
+        "kv_rejected": sum(r.kv_rejected for r in res.replicas),
+        "interactive_ttft_p50": obs.slo.lifetime_quantile(
+            "interactive", "ttft", 0.50),
+        "interactive_ttft_p99": obs.slo.lifetime_quantile(
+            "interactive", "ttft", 0.99),
+        "attainment": att,
+        "pool_ttft_p99": res.ttft_p99,
+        "pool_queue_wait_p99": res.queue_wait_p99,
+        "wall_s": time.time() - t0,
+    }, res
+
+
+def run_sweep(seed=SEED):
+    classes_decl = workload.make_traffic_classes(CLASS_SPEC)
+    targets = workload.slo_targets(classes_decl)
+    arrivals = workload.flash_crowd_trace(
+        N_TASKS, base_beta=BASE_BETA, peak_beta=PEAK_BETA, seed=seed)
+    cls = ["interactive"] * N_TASKS
+    arms = {}
+    for rp in POLICIES:
+        arms[rp], _ = _run_arm(Router(R, rp), arrivals, cls, targets,
+                               seed)
+    return arms
+
+
+def run_bulk_isolation(seed=SEED):
+    """The bulk replica slice on a mixed trace: batch confined to
+    replica R-1, interactive never placed there."""
+    classes_decl = workload.make_traffic_classes(MIXED_SPEC)
+    targets = workload.slo_targets(classes_decl)
+    n = N_TASKS // 4
+    cls = workload.assign_classes(n, classes_decl, seed=seed)
+    arrivals = workload.flash_crowd_trace(
+        n, base_beta=BASE_BETA, peak_beta=PEAK_BETA, seed=seed + 2)
+    router = Router(R, "rtlm", bulk_replicas=(R - 1,),
+                    bulk_classes=tuple(
+                        workload.bulk_class_names(classes_decl)))
+    arm, res = _run_arm(router, arrivals, cls, targets, seed)
+    bulk_ok = all((res.placements[i] == R - 1) == (cls[i] == "batch")
+                  for i in range(n))
+    assert bulk_ok, "bulk-slice isolation violated"
+    return {
+        "n_tasks": n,
+        "class_counts": {c: cls.count(c) for c in ("interactive",
+                                                   "batch")},
+        "isolation_holds": bulk_ok,
+        **arm,
+    }
+
+
+def main(seed=SEED):
+    t0 = time.time()
+    arms = run_sweep(seed=seed)
+    bulk = run_bulk_isolation(seed=seed)
+
+    rtlm, rr = arms["rtlm"], arms["round_robin"]
+    claim = {
+        "rtlm_ttft_p99": rtlm["interactive_ttft_p99"],
+        "round_robin_ttft_p99": rr["interactive_ttft_p99"],
+        "rtlm_att_ttft": rtlm["attainment"]["interactive"]["ttft"][
+            "frac"],
+        "round_robin_att_ttft": rr["attainment"]["interactive"]["ttft"][
+            "frac"],
+        "asserted": seed == SEED,
+    }
+    if seed == SEED:
+        # the acceptance claim, seed-pinned: uncertainty-aware routing
+        # beats load-oblivious round-robin on the interactive tail
+        assert claim["rtlm_ttft_p99"] < claim["round_robin_ttft_p99"], \
+            claim
+        assert claim["rtlm_att_ttft"] > claim["round_robin_att_ttft"], \
+            claim
+
+    payload = {
+        "seed": seed,
+        "n_tasks": N_TASKS,
+        "replicas": R,
+        "num_slots": SLOTS,
+        "kv": {"block_size": KV_BS, "num_blocks": KV_BLOCKS,
+               "prompt_len": PROMPT},
+        "trace": {"kind": "flash_crowd", "base_beta": BASE_BETA,
+                  "peak_beta": PEAK_BETA},
+        "workload": {"out_mean": OUT_MEAN, "out_cap": OUT_CAP,
+                     "u_noise": U_NOISE},
+        "classes": CLASS_SPEC,
+        "arms": arms,
+        "bulk_isolation": bulk,
+        "claim": claim,
+    }
+    common.save("router_policies", payload)
+    common.emit(
+        "router_policies", time.time() - t0,
+        f"rtlm_p99={claim['rtlm_ttft_p99']:.3f}s,"
+        f"rr_p99={claim['round_robin_ttft_p99']:.3f}s,"
+        f"rtlm_att={claim['rtlm_att_ttft']:.4f},"
+        f"rr_att={claim['round_robin_att_ttft']:.4f},"
+        f"bulk_isolation={bulk['isolation_holds']}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=SEED)
+    main(seed=ap.parse_args().seed)

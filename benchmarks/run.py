@@ -19,7 +19,7 @@ import traceback
 
 from . import (common, continuous_vs_batch, kernel_bench, paper_tables,
                prefill_interference, prefix_cache, roofline_report,
-               slo_calibration)
+               router_policies, slo_calibration)
 
 
 def run_paper_tables(only=None):
@@ -116,6 +116,8 @@ def run_continuous(only=None, seed=0):
         prefix_cache.main(seed=seed)
     if only is None or only == "slo_calibration":
         slo_calibration.main(seed=seed)
+    if only is None or only == "router_policies":
+        router_policies.main(seed=seed)
 
 
 def main(argv=None):

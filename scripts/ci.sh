@@ -15,7 +15,8 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py
 echo "== serving subsystems (quick signal) =="
 scripts/run_tier1.sh -m "not slow" tests/test_chunked_prefill.py \
   tests/test_prefix_cache.py tests/test_async_pipeline.py \
-  tests/test_kernels.py tests/test_obs.py tests/test_slo.py
+  tests/test_kernels.py tests/test_obs.py tests/test_slo.py \
+  tests/test_router.py
 
 echo "== trace/SLO report smoke (checked-in mini trace) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/trace_report.py \
@@ -27,7 +28,8 @@ echo "== fast lane (-m 'not slow') =="
 scripts/run_tier1.sh -m "not slow" --ignore=tests/test_chunked_prefill.py \
   --ignore=tests/test_prefix_cache.py \
   --ignore=tests/test_async_pipeline.py --ignore=tests/test_kernels.py \
-  --ignore=tests/test_obs.py --ignore=tests/test_slo.py
+  --ignore=tests/test_obs.py --ignore=tests/test_slo.py \
+  --ignore=tests/test_router.py
 
 if [[ "${CI_FAST_ONLY:-0}" != "1" ]]; then
   echo "== full tier-1 =="

@@ -157,6 +157,11 @@ def main(argv=None) -> int:
             "requests": len(tls),
             "snapshots": sum(1 for e in rec.events
                              if e.kind == "snapshot"),
+            "routes": sum(1 for e in rec.events
+                          if e.kind == "route"),
+            "replicas": sorted({e.fields["replica"]
+                                for e in rec.events
+                                if "replica" in e.fields}),
             "ttft_p50": ttft.quantile(0.50),
             "ttft_p99": ttft.quantile(0.99)}))
     else:

@@ -37,6 +37,14 @@ Two execution models, cross-checkable against the real engine
     beyond that one amortized step per wave, continuous batching's
     advantage comes from eliminating head-of-line blocking and the xi
     dispatch wait.
+
+The continuous state machine lives in ``_ReplicaSim`` — one replica's
+slots, queues, KV reservations and clock behind ``deliver`` / ``iterate``
+/ ``advance_idle``.  ``simulate_continuous`` drives exactly one instance
+(the single-node model, bit-identical to the pre-factoring loop);
+``simulate_replicated`` drives R instances behind a front-end
+``repro.serving.router.Router`` on a shared virtual clock — the
+simulator twin of ``repro.serving.replica.ReplicatedEngine``.
 """
 
 from __future__ import annotations
@@ -388,6 +396,651 @@ def make_prefix_state(kv_num_blocks: int,
     return PrefixState(alloc=alloc, pc=PrefixCache(alloc, kv_block_size))
 
 
+class _ReplicaSim:
+    """One continuous-batching replica: the engine step loop's state
+    machine (slots, queues, KV reservations, chunk scheduler, clock)
+    factored out of ``simulate_continuous`` so ``simulate_replicated``
+    can advance R independent instances on a shared virtual clock.
+
+    The three verbs mirror the driver loop's phases:
+
+      * ``deliver(task)``      — an arrival reaches this replica's queue
+        (the enqueue event fires here, stamped at the arrival time);
+      * ``iterate()``          — one engine iteration: admissions (stall
+        or chunked), a decode window, the CPU lane; returns whether any
+        progress was made;
+      * ``advance_idle(cands)``— nothing progressed: jump the clock to
+        the next future candidate (caller adds the next arrival), else
+        burn one xi batching window.
+
+    ``simulate_continuous`` drives exactly one instance — bit-identical
+    to the pre-factoring single loop; the replicated driver additionally
+    reads ``load()`` (the router's view) and ``has_work()``.
+    """
+
+    def __init__(self, policy: sched_lib.Policy, *,
+                 xi: float = 2.0,
+                 per_task_overhead_s: float = 0.0,
+                 num_slots: Optional[int] = None,
+                 kv_block_size: Optional[int] = None,
+                 kv_num_blocks: Optional[int] = None,
+                 prompt_len: int = 0,
+                 prefill: str = "stall",
+                 chunk_size: Optional[int] = None,
+                 token_budget: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 prompt_tokens=None,
+                 decode_steps: int = 1,
+                 prefix_state: Optional[PrefixState] = None,
+                 obs=None) -> None:
+        self.policy = policy
+        self.persona = policy.persona
+        self.xi = xi
+        self.per_task_overhead_s = per_task_overhead_s
+        self.obs = obs
+        self.C = num_slots if num_slots is not None \
+            else self.persona.batch_size
+        self.kv_block_size = kv_block_size
+        self.kv_num_blocks = kv_num_blocks
+        self.kv_model = kv_block_size is not None \
+            and kv_num_blocks is not None
+        self.prompt_len = prompt_len
+        self.prompt_tokens = prompt_tokens
+        if prefill not in ("stall", "chunked"):
+            raise ValueError(f"unknown prefill mode {prefill!r}")
+        self.chunked = prefill == "chunked"
+        self.sched: Optional[ChunkScheduler] = None
+        if self.chunked:
+            if prompt_len <= 0:
+                raise ValueError('prefill="chunked" needs prompt_len > 0')
+            if chunk_size is None or token_budget is None:
+                raise ValueError('prefill="chunked" needs chunk_size and '
+                                 'token_budget')
+            self.sched = ChunkScheduler(
+                chunk_size, token_budget,
+                metrics=obs.metrics if obs is not None else None)
+        if decode_steps < 1:
+            raise ValueError(
+                f"decode_steps must be >= 1, got {decode_steps}")
+        self.decode_steps = decode_steps
+        self.pc: Optional[PrefixCache] = None
+        self.alloc: Optional[BlockAllocator] = None
+        if prefix_state is not None and not prefix_cache:
+            raise ValueError("prefix_state requires prefix_cache=True")
+        if prefix_cache:
+            if not self.kv_model:
+                raise ValueError('prefix_cache=True needs kv_block_size '
+                                 'and kv_num_blocks (the block-budget '
+                                 'model)')
+            if prompt_len <= 0:
+                raise ValueError('prefix_cache=True needs prompt_len > 0')
+            if prompt_tokens is None:
+                raise ValueError('prefix_cache=True needs a '
+                                 'prompt_tokens callable (task -> '
+                                 'padded token bucket)')
+            if prefix_state is not None:
+                self.alloc, self.pc = prefix_state.alloc, prefix_state.pc
+                self.pc.reset_stats()
+            else:
+                self.alloc = BlockAllocator(kv_num_blocks, kv_block_size)
+                self.pc = PrefixCache(self.alloc, kv_block_size)
+            # same registry hookup the engine's _paged_setup makes, so
+            # the "prefix.*" counters stream into the shared parity view
+            self.pc.metrics = obs.metrics if obs is not None else None
+        C = self.C
+        self.slots: List[Optional[SimTask]] = [None] * C
+        self.produced = [0] * C
+        self.reserved = [0] * C
+        self.slot_toks: Dict[int, tuple] = {}  # chunked+prefix: bucket
+        self.queue: List[SimTask] = []
+        self.cpu_queue: List[SimTask] = []
+        self.done: List[SimTask] = []
+        self.cpu = Lane(self.persona.cpu_slowdown)
+        self.now = 0.0
+        self.overhead_total = 0.0
+        self.rejected_ids: set = set()  # distinct tasks deferred for mem
+        self.kv_util: List[float] = []
+        self.budget_trace: List = []
+        self.dispatches = 0             # prefill launches (engine mirror)
+        self.dispatch_trace: List[int] = []
+        self.exec_keys: set = set()     # fused-executable key novelty
+        self.exec_hits = 0
+        self.exec_misses = 0
+        self.dispatches_dec = 0         # decode windows (engine mirror)
+        self.steps_dec = 0              # decode steps across all windows
+        self.dec_trace: List[int] = []  # steps per window
+        self.ttft_h = Histogram()
+        self.itl_h = Histogram()
+        self.qw_h = Histogram()
+        self.last_tok = [0.0] * C       # last token emission per slot
+        self.peak_conc = 0
+        self.delivered = 0
+        self.step = 0                   # decode steps executed so far —
+        # the engine's iteration coordinate; stamped on every event so
+        # engine and sim streams line up position for position
+
+    # ------------------------------------------------------------------
+    def check_fits(self, tasks: Sequence[SimTask]) -> None:
+        """The upfront deadlock guard: the largest task's worst-case
+        reservation must fit an EMPTY pool or admission can never
+        succeed (same check for every replica — pools are equal)."""
+        if not self.kv_model:
+            return
+        worst = max((blocks_for_tokens(
+            self.prompt_len + max(1, t.true_out_len) - 1,
+            self.kv_block_size) for t in tasks), default=0)
+        if worst > self.kv_num_blocks:
+            raise ValueError(
+                f"kv_num_blocks={self.kv_num_blocks} cannot hold the "
+                f"largest task ({worst} blocks) — admission would "
+                f"deadlock")
+
+    def has_work(self) -> bool:
+        """Delivered-but-unfinished work exists on this replica."""
+        return self.delivered > len(self.done)
+
+    def load(self) -> Dict:
+        """The router's live view of this replica: placed-but-unfinished
+        work (queue + CPU lane + chunked prefill jobs + active slots),
+        occupied decode slots, and KV-pool headroom.  Keys match the
+        ``repro.serving.router.ReplicaView`` fields; the engine
+        front-end builds the same view from its placement bookkeeping,
+        so routing decisions parity-match bit for bit on all-at-t0
+        traces (where every placement precedes any engine work)."""
+        active = [t for t in self.slots if t is not None]
+        inflight = list(active)
+        if self.chunked:
+            inflight += [j.task for j in self.sched.jobs]
+        tasks = list(self.queue) + list(self.cpu_queue) + inflight
+        return {
+            "queued": len(tasks),
+            "active": len(active),
+            "free_blocks": (self.kv_num_blocks - sum(self.reserved)
+                            if self.kv_model else 0),
+            "num_blocks": self.kv_num_blocks if self.kv_model else 0,
+            "u_load": float(sum(t.u for t in tasks)),
+        }
+
+    def deliver(self, task: SimTask) -> None:
+        """An arrival reaches this replica's queue (enqueue event at the
+        arrival timestamp, as the engine's serve prologue stamps it)."""
+        if self.obs is not None:
+            cls = _cls(task)
+            self.obs.event("enqueue", task.r, _tid(task), self.step,
+                           **({"cls": cls} if cls else {}))
+        self.queue.append(task)
+        self.delivered += 1
+
+    def advance_idle(self, candidates: Sequence[float] = ()) -> None:
+        """Nothing progressed: jump to the next future event (callers
+        append the next arrival time), else burn one xi window."""
+        cands = list(candidates)
+        if self.cpu_queue:
+            cands.append(self.cpu.free_at)
+        future = [c for c in cands if c > self.now + 1e-12]
+        self.now = min(future) if future else self.now + self.xi
+
+    # ------------------------------------------------------------------
+    def _admit_one(self, running):
+        """Shared admission prologue: one ``policy.admit`` consultation
+        plus the block-reservation gate, overhead / setup charges and
+        the CPU-lane fork — identical for the stall and chunked
+        branches (the engine mirrors it bit for bit).  Returns
+        ("stop", None, 0) to end the admission loop, ("cpu", None, 0)
+        when the task was offloaded, or ("gpu", task, need)."""
+        obs = self.obs
+        prev_queue = list(self.queue)
+        task, lane, rest = self.policy.admit(list(self.queue), self.now,
+                                             running)
+        if task is None:
+            return "stop", None, 0
+        self.queue = list(rest)
+        need = 0
+        if self.kv_model and lane != "cpu":
+            need = blocks_for_tokens(
+                self.prompt_len + max(1, task.true_out_len) - 1,
+                self.kv_block_size)
+            if need > self.kv_num_blocks - sum(self.reserved):
+                self.queue = prev_queue        # leave it queued
+                self.rejected_ids.add(id(task))
+                if obs is not None:
+                    obs.event("reject", self.now, _tid(task), self.step,
+                              kv_blocks=need)
+                    obs.inc("sched.rejections")
+                return "stop", None, 0
+        self.overhead_total += self.per_task_overhead_s
+        self.now += self.per_task_overhead_s
+        if lane == "cpu":
+            if obs is not None:
+                obs.event("offload", self.now, _tid(task), self.step)
+                obs.inc("sched.offloads")
+            self.cpu_queue.append(task)
+            return "cpu", None, 0
+        if not running:
+            self.now += self.persona.setup_time  # restart from idle
+        return "gpu", task, need
+
+    # ------------------------------------------------------------------
+    def iterate(self) -> bool:
+        """One engine iteration (admissions, decode window, CPU lane);
+        returns whether any progress was made."""
+        obs, persona, C = self.obs, self.persona, self.C
+        pc, alloc = self.pc, self.alloc
+        slots, produced = self.slots, self.produced
+        reserved, slot_toks = self.reserved, self.slot_toks
+        last_tok, done = self.last_tok, self.done
+        kv_util = self.kv_util
+        ttft_h, itl_h, qw_h = self.ttft_h, self.itl_h, self.qw_h
+        prompt_len, decode_steps = self.prompt_len, self.decode_steps
+        kv_model, chunked = self.kv_model, self.chunked
+
+        progressed = False
+        if chunked:
+            sched = self.sched
+            # admissions enqueue a chunk job; the slot is held by the
+            # job (not decoding yet) until its last chunk completes
+            in_prefill = set(sched.slots_in_prefill())
+            free = [s for s in range(C)
+                    if slots[s] is None and s not in in_prefill]
+            while self.queue and free:
+                running = ([t for t in slots if t is not None]
+                           + [j.task for j in sorted(sched.jobs,
+                                                     key=lambda j: j.seq)])
+                status, task, need = self._admit_one(running)
+                if status == "stop":
+                    break
+                if status == "cpu":
+                    continue
+                s = free.pop(0)
+                if kv_model:
+                    reserved[s] = need
+                qw_h.record(self.now - task.r)
+                if obs is not None:
+                    obs.event("admit", self.now, _tid(task), self.step,
+                              slot=s, u=task.u, kv_blocks=need)
+                    obs.inc("sched.admissions")
+                    obs.observe("queue_wait_s", self.now - task.r)
+                    obs.slo_observe("queue_wait", _cls(task), self.now,
+                                    self.now - task.r)
+                total = prompt_len
+                if pc is not None:
+                    # matched prefix blocks shared at admission (same
+                    # call the engine makes); the chunk job covers only
+                    # the uncached suffix
+                    toks = tuple(self.prompt_tokens(task))
+                    adm = pc.admit(id(task), toks)
+                    if obs is not None and adm.matched_blocks:
+                        obs.event("prefix_hit", self.now, _tid(task),
+                                  self.step, cached_tokens=adm.start,
+                                  matched_blocks=adm.matched_blocks,
+                                  cow=len(adm.cow))
+                    slot_toks[s] = toks
+                    total = prompt_len - adm.start
+                sched.add(task, s, total,
+                          self.policy.assign_priority(task))
+                progressed = True
+
+            # chunk phase: pack the budget, decode tokens first.  The
+            # engine executes the whole plan as ONE fused ragged launch
+            # (pack_plans -> ChunkBatch); mirror its dispatch count and
+            # executable-cache shape-key novelty from the same call —
+            # the latency model still charges per-chunk token cost.
+            active0 = [s for s in range(C) if slots[s] is not None]
+            plans = sched.schedule(len(active0)) if sched.has_jobs else []
+            chunk_batch = pack_plans(plans)
+            if chunk_batch is not None:
+                self.dispatches += 1
+                hit = chunk_batch.shape_key in self.exec_keys
+                if hit:
+                    self.exec_hits += 1
+                else:
+                    self.exec_keys.add(chunk_batch.shape_key)
+                    self.exec_misses += 1
+                if obs is not None:
+                    # mirror of the engine's fused-launch emission: one
+                    # exec_cache probe then one prefill_chunk per MERGED
+                    # chunk (the ragged batch the engine launches), all
+                    # before any finishing first_token — identical
+                    # stream order, from the same pack_plans result
+                    obs.event("exec_cache", self.now, None, self.step,
+                              hit=hit,
+                              shape_key=str(chunk_batch.shape_key))
+                    obs.inc("exec_cache.hits" if hit
+                            else "exec_cache.misses")
+                    obs.inc("prefill.dispatches")
+                    pf_cost = (persona.item_time
+                               * chunk_batch.total_tokens / prompt_len)
+                    obs.span("prefill.ragged", self.now, pf_cost,
+                             chunks=len(chunk_batch.chunks),
+                             tokens=chunk_batch.total_tokens)
+                    for ch in chunk_batch.chunks:
+                        obs.event("prefill_chunk", self.now,
+                                  _tid(ch.job.task), self.step,
+                                  slot=ch.slot, start=ch.start,
+                                  length=ch.length, finishes=ch.finishes,
+                                  shape_key=str(chunk_batch.shape_key))
+            for plan in plans:
+                self.now += persona.item_time * plan.length / prompt_len
+                if plan.finishes:
+                    task, s = plan.job.task, plan.job.slot
+                    if pc is not None:
+                        pc.commit(id(task), slot_toks.pop(s))
+                    task.start, task.lane = self.now, "gpu"
+                    ttft_h.record(self.now - task.r)
+                    if obs is not None:
+                        obs.event("first_token", self.now, _tid(task),
+                                  self.step, slot=s)
+                        obs.slo_observe("ttft", _cls(task), self.now,
+                                        self.now - task.r)
+                    if task.true_out_len <= 1:  # first token already EOS
+                        task.finish = self.now
+                        done.append(task)
+                        reserved[s] = 0
+                        if pc is not None:
+                            alloc.free_sequence(id(task))
+                        if obs is not None:
+                            obs.event("complete", self.now, _tid(task),
+                                      self.step, lane="gpu", out_len=1)
+                            obs.event("evict", self.now, _tid(task),
+                                      self.step, slot=s)
+                            obs.inc("sched.completions")
+                            obs.complete_request(
+                                _cls(task), self.now, u=task.u,
+                                out_len=1,
+                                latency_s=self.now - task.r)
+                    else:
+                        slots[s] = task         # joins THIS step's decode
+                        produced[s] = 1         # prefill emits token 1
+                        last_tok[s] = self.now
+            if plans:
+                progressed = True
+            if plans or any(t is not None for t in slots):
+                self.budget_trace.append(
+                    (len(active0), sum(p.length for p in plans)))
+                self.dispatch_trace.append(1 if plans else 0)
+                # aligned with budget_trace, as in the engine: steps
+                # launched this iteration (0 = prefill-only iteration)
+                self.dec_trace.append(decode_steps
+                                      if any(t is not None
+                                             for t in slots)
+                                      else 0)
+        else:
+            # admissions into freed slots (uncertainty-aware, stalling
+            # the loop for one amortized prefill per admission — and
+            # one prefill LAUNCH per admission, the burst the fused
+            # chunked path collapses to one per iteration)
+            iter_launches = 0
+            while self.queue and None in slots:
+                running = [t for t in slots if t is not None]
+                status, task, need = self._admit_one(running)
+                if status == "stop":
+                    break
+                if status == "cpu":
+                    continue
+                self.dispatches += 1
+                iter_launches += 1
+                # slot chosen BEFORE prefill (as the engine does): the
+                # admit event carries it even for an immediate finish
+                s = slots.index(None)
+                tid = _tid(task)
+                qw_h.record(self.now - task.r)
+                if obs is not None:
+                    obs.event("admit", self.now, tid, self.step, slot=s,
+                              u=task.u, kv_blocks=need)
+                    obs.inc("sched.admissions")
+                    obs.observe("queue_wait_s", self.now - task.r)
+                    obs.slo_observe("queue_wait", _cls(task), self.now,
+                                    self.now - task.r)
+                pf_t0 = self.now
+                pf_start, pf_key, pf_hit = 0, "admit", False
+                if pc is not None:
+                    # prefill cost scales with the uncached suffix —
+                    # the same admit/commit calls the engine's stall
+                    # path makes, so counters match bit for bit
+                    toks = tuple(self.prompt_tokens(task))
+                    adm = pc.admit(id(task), toks)
+                    if obs is not None and adm.matched_blocks:
+                        obs.event("prefix_hit", self.now, tid, self.step,
+                                  cached_tokens=adm.start,
+                                  matched_blocks=adm.matched_blocks,
+                                  cow=len(adm.cow))
+                    if adm.start > 0:
+                        # the engine routes the uncached suffix through
+                        # the fused ragged executable as a single-chunk
+                        # launch; mirror its shape-key novelty
+                        key = suffix_shape_key(prompt_len - adm.start)
+                        pf_hit = key in self.exec_keys
+                        if pf_hit:
+                            self.exec_hits += 1
+                        else:
+                            self.exec_keys.add(key)
+                            self.exec_misses += 1
+                        pf_start, pf_key = adm.start, str(key)
+                    self.now += (persona.item_time
+                                 * (prompt_len - adm.start) / prompt_len)
+                    pc.commit(id(task), toks)
+                else:
+                    self.now += persona.item_time  # per-member bandwidth
+                task.start, task.lane = self.now, "gpu"
+                ttft_h.record(self.now - task.r)
+                if obs is not None:
+                    # same post-launch emission the engine's stall path
+                    # makes (exec_cache only on the prefix-suffix path)
+                    if pf_key != "admit":
+                        obs.event("exec_cache", self.now, tid, self.step,
+                                  hit=pf_hit, shape_key=pf_key)
+                        obs.inc("exec_cache.hits" if pf_hit
+                                else "exec_cache.misses")
+                    obs.inc("prefill.dispatches")
+                    obs.span("prefill.admit", pf_t0, self.now - pf_t0,
+                             task=tid, slot=s)
+                    obs.event("prefill_chunk", self.now, tid, self.step,
+                              slot=s, start=pf_start,
+                              length=prompt_len - pf_start,
+                              finishes=True, shape_key=pf_key)
+                    obs.event("first_token", self.now, tid, self.step,
+                              slot=s)
+                    obs.slo_observe("ttft", _cls(task), self.now,
+                                    self.now - task.r)
+                if task.true_out_len <= 1:     # first token already EOS
+                    task.finish = self.now
+                    done.append(task)
+                    if pc is not None:
+                        alloc.free_sequence(id(task))
+                    if obs is not None:
+                        obs.event("complete", self.now, tid, self.step,
+                                  lane="gpu", out_len=1)
+                        obs.event("evict", self.now, tid, self.step,
+                                  slot=s)
+                        obs.inc("sched.completions")
+                        obs.complete_request(
+                            _cls(task), self.now, u=task.u, out_len=1,
+                            latency_s=self.now - task.r)
+                else:
+                    slots[s] = task
+                    produced[s] = 1            # prefill emits token 1
+                    last_tok[s] = self.now
+                    if kv_model:
+                        reserved[s] = need
+                progressed = True
+            if iter_launches:
+                self.dispatch_trace.append(iter_launches)
+
+        if any(t is not None for t in slots):
+            active = [s for s in range(C) if slots[s] is not None]
+            self.peak_conc = max(self.peak_conc, len(active))
+            nsteps = decode_steps
+            if kv_model and pc is not None:
+                # real-allocator model (prefix mode): mirror the
+                # engine's pre-window extension host-side (every useful
+                # write of the next nsteps launches, clamped at the
+                # reservation — kvcache.window_target_tokens), then
+                # sample the allocator directly — shared prefix blocks
+                # and cached-but-unreferenced blocks count once,
+                # exactly as in the engine's utilization samples
+                for s in active:
+                    key = id(slots[s])
+                    target = blocks_for_tokens(window_target_tokens(
+                        prompt_len, produced[s],
+                        max(1, slots[s].true_out_len), nsteps),
+                        self.kv_block_size)
+                    while target > len(alloc.table(key)):
+                        alloc.allocate(key)
+                kv_util.append(alloc.utilization())
+            elif kv_model:
+                # lazy-allocation model: the window writes logical
+                # positions up to the window target (clamped at the
+                # sequence's reservation), so each slot holds
+                # blocks_for(window_target) physical blocks; slots
+                # mid-chunked-prefill hold their whole prompt's blocks
+                # (allocated at admission, as in the engine)
+                held = sum(blocks_for_tokens(window_target_tokens(
+                    prompt_len, produced[s],
+                    max(1, slots[s].true_out_len), nsteps),
+                    self.kv_block_size)
+                    for s in active)
+                if chunked:
+                    held += (len(self.sched.slots_in_prefill())
+                             * blocks_for_tokens(prompt_len,
+                                                 self.kv_block_size))
+                kv_util.append(held / self.kv_num_blocks)
+            else:
+                kv_util.append(len(active) / C)
+            self.dispatches_dec += 1
+            self.steps_dec += nsteps
+            self.step += nsteps
+            if not chunked:
+                # stall mode: one trace entry per executed window (the
+                # chunked entry was appended with budget_trace above)
+                self.dec_trace.append(nsteps)
+            if obs is not None:
+                # mirror of the engine's per-window emission (the
+                # engine stamps the step coordinate AFTER advancing it,
+                # as here; event timestamps are model time)
+                obs.inc("decode.dispatches")
+                obs.inc("decode.steps", nsteps)
+                obs.gauge("kv.util", kv_util[-1])
+                obs.counter_sample("kv.util", self.now, kv_util[-1])
+                obs.span("decode.window", self.now,
+                         nsteps * persona.eta,
+                         steps=nsteps, active=len(active))
+                obs.event("decode_window", self.now, None, self.step,
+                          steps=nsteps, active=len(active),
+                          dur=nsteps * persona.eta)
+            # N-step window, consumed step-major; a sequence finishing
+            # at window step j stops producing but keeps its slot and
+            # blocks until window end (eviction in arrears — the
+            # engine's eviction-lag invariant)
+            finished: List[int] = []
+            for j in range(nsteps):
+                self.now += persona.eta    # one decode step, all slots
+                for s in active:
+                    if s in finished:
+                        continue
+                    produced[s] += 1
+                    gap = self.now - last_tok[s]
+                    itl_h.record(gap)
+                    last_tok[s] = self.now
+                    if obs is not None:
+                        obs.event("token", self.now, _tid(slots[s]),
+                                  self.step, slot=s, idx=produced[s])
+                        obs.slo_observe("itl", _cls(slots[s]), self.now,
+                                        gap)
+                    if produced[s] >= slots[s].true_out_len:
+                        slots[s].finish = self.now
+                        done.append(slots[s])
+                        finished.append(s)
+                        if obs is not None:
+                            obs.event("complete", self.now,
+                                      _tid(slots[s]), self.step,
+                                      lane="gpu", out_len=produced[s])
+                            obs.inc("sched.completions")
+                            obs.complete_request(
+                                _cls(slots[s]), self.now, u=slots[s].u,
+                                out_len=produced[s],
+                                latency_s=self.now - slots[s].r)
+                            # eviction lag: window steps this slot's
+                            # blocks stay held past its logical end
+                            obs.observe("decode.eviction_lag_steps",
+                                        nsteps - 1 - j)
+            # window-end frees in slot order (matches the engine, so
+            # allocator free-list state stays bit-identical)
+            for s in active:
+                if s not in finished:
+                    continue
+                if obs is not None:
+                    obs.event("evict", self.now, _tid(slots[s]),
+                              self.step, slot=s)
+                if pc is not None:
+                    alloc.free_sequence(id(slots[s]))
+                slots[s] = None
+                reserved[s] = 0
+            if obs is not None:
+                # same post-window snapshot point as the engine's serve
+                # loops: after window bookkeeping and eviction, keyed
+                # off the shared ``step`` coordinate
+                obs.maybe_snapshot(
+                    self.now, self.step, queue_depth=len(self.queue),
+                    active=sum(t is not None for t in slots),
+                    kv_util=kv_util[-1])
+            progressed = True
+
+        if self.cpu.free_at <= self.now + 1e-12 and self.cpu_queue:
+            batch = self.cpu_queue[:C]
+            self.cpu_queue = self.cpu_queue[C:]
+            self.cpu.run_batch(batch, self.now, persona, "cpu", ttft_h,
+                               itl_h, qw_h, obs)
+            done.extend(batch)
+            # bulk-lane launches count in the total only: the trace is
+            # the decode loop's per-iteration launch profile (engine
+            # mirror — _run_batch does the same in continuous modes)
+            self.dispatches += 1
+            progressed = True
+
+        return progressed
+
+    # ------------------------------------------------------------------
+    def result(self) -> SimResult:
+        """The completion-ordered ``SimResult`` epilogue (a replica that
+        received no work reports an empty, zeroed result)."""
+        done = self.done
+        makespan = (max(t.finish for t in done)
+                    - min(t.r for t in done)) if done else 0.0
+        util = np.array(self.kv_util) if self.kv_util else np.zeros(1)
+        pstats = self.pc.stats() if self.pc is not None else {}
+        return SimResult(tasks=done, makespan=makespan,
+                         overhead_s=self.overhead_total,
+                         kv_rejected=len(self.rejected_ids),
+                         kv_util_peak=float(util.max()),
+                         kv_util_mean=float(util.mean()),
+                         peak_concurrency=self.peak_conc,
+                         ttft_p50=self.ttft_h.quantile(0.50),
+                         ttft_p90=self.ttft_h.quantile(0.90),
+                         ttft_p99=self.ttft_h.quantile(0.99),
+                         itl_p50=self.itl_h.quantile(0.50),
+                         itl_p90=self.itl_h.quantile(0.90),
+                         itl_p99=self.itl_h.quantile(0.99),
+                         queue_wait_p50=self.qw_h.quantile(0.50),
+                         queue_wait_p90=self.qw_h.quantile(0.90),
+                         queue_wait_p99=self.qw_h.quantile(0.99),
+                         budget_trace=self.budget_trace,
+                         prefill_dispatches=self.dispatches,
+                         prefill_dispatch_trace=self.dispatch_trace,
+                         exec_cache_hits=self.exec_hits,
+                         exec_cache_misses=self.exec_misses,
+                         decode_dispatches=self.dispatches_dec,
+                         decode_steps_executed=self.steps_dec,
+                         decode_dispatch_trace=self.dec_trace,
+                         prefix_hit_rate=pstats.get(
+                             "prefix_hit_rate", 0.0),
+                         cached_tokens_reused=pstats.get(
+                             "cached_tokens_reused", 0),
+                         cow_copies=pstats.get("cow_copies", 0),
+                         prefix_evictions=pstats.get(
+                             "prefix_evictions", 0),
+                         **_obs_result_fields(self.obs))
+
+
 def simulate_continuous(tasks: Sequence[SimTask],
                         policy: sched_lib.Policy, *,
                         xi: float = 2.0,
@@ -476,527 +1129,222 @@ def simulate_continuous(tasks: Sequence[SimTask],
     Only wall-clock fields (event timestamps, span durations) differ:
     the sim stamps model time, the engine stamps its virtual clock.
     """
-    persona = policy.persona
     pending = sorted(tasks, key=lambda t: t.r)
     n_total = len(pending)
-    C = num_slots if num_slots is not None else persona.batch_size
-    kv_model = kv_block_size is not None and kv_num_blocks is not None
-    if prefill not in ("stall", "chunked"):
-        raise ValueError(f"unknown prefill mode {prefill!r}")
-    chunked = prefill == "chunked"
-    if chunked:
-        if prompt_len <= 0:
-            raise ValueError('prefill="chunked" needs prompt_len > 0')
-        if chunk_size is None or token_budget is None:
-            raise ValueError('prefill="chunked" needs chunk_size and '
-                             'token_budget')
-        sched = ChunkScheduler(
-            chunk_size, token_budget,
-            metrics=obs.metrics if obs is not None else None)
-    if decode_steps < 1:
-        raise ValueError(f"decode_steps must be >= 1, got {decode_steps}")
-    pc = None
-    if prefix_state is not None and not prefix_cache:
-        raise ValueError("prefix_state requires prefix_cache=True")
-    if prefix_cache:
-        if not kv_model:
-            raise ValueError('prefix_cache=True needs kv_block_size and '
-                             'kv_num_blocks (the block-budget model)')
-        if prompt_len <= 0:
-            raise ValueError('prefix_cache=True needs prompt_len > 0')
-        if prompt_tokens is None:
-            raise ValueError('prefix_cache=True needs a prompt_tokens '
-                             'callable (task -> padded token bucket)')
-        if prefix_state is not None:
-            alloc, pc = prefix_state.alloc, prefix_state.pc
-            pc.reset_stats()
-        else:
-            alloc = BlockAllocator(kv_num_blocks, kv_block_size)
-            pc = PrefixCache(alloc, kv_block_size)
-        # same registry hookup the engine's _paged_setup makes, so the
-        # "prefix.*" counters stream into the shared parity view
-        pc.metrics = obs.metrics if obs is not None else None
-    if kv_model:
-        worst = max((blocks_for_tokens(
-            prompt_len + max(1, t.true_out_len) - 1, kv_block_size)
-            for t in pending), default=0)
-        if worst > kv_num_blocks:
-            raise ValueError(
-                f"kv_num_blocks={kv_num_blocks} cannot hold the largest "
-                f"task ({worst} blocks) — admission would deadlock")
-    slots: List[Optional[SimTask]] = [None] * C
-    produced = [0] * C
-    reserved = [0] * C
-    slot_toks: Dict[int, tuple] = {}   # chunked+prefix: bucket per slot
-    queue: List[SimTask] = []
-    cpu_queue: List[SimTask] = []
-    done: List[SimTask] = []
-    cpu = Lane(persona.cpu_slowdown)
-    now = 0.0
-    overhead_total = 0.0
-    rejected_ids: set = set()       # distinct tasks deferred for memory
-    kv_util: List[float] = []
-    budget_trace: List = []
-    dispatches = 0                  # prefill launches (engine mirror)
-    dispatch_trace: List[int] = []
-    exec_keys: set = set()          # fused-executable shape-key novelty
-    exec_hits = 0
-    exec_misses = 0
-    dispatches_dec = 0              # decode windows (engine mirror)
-    steps_dec = 0                   # decode steps across all windows
-    dec_trace: List[int] = []       # steps per window
-    ttft_h, itl_h, qw_h = Histogram(), Histogram(), Histogram()
-    last_tok = [0.0] * C            # last token emission time per slot
-    peak_conc = 0
+    rep = _ReplicaSim(policy, xi=xi,
+                      per_task_overhead_s=per_task_overhead_s,
+                      num_slots=num_slots, kv_block_size=kv_block_size,
+                      kv_num_blocks=kv_num_blocks, prompt_len=prompt_len,
+                      prefill=prefill, chunk_size=chunk_size,
+                      token_budget=token_budget,
+                      prefix_cache=prefix_cache,
+                      prompt_tokens=prompt_tokens,
+                      decode_steps=decode_steps,
+                      prefix_state=prefix_state, obs=obs)
+    rep.check_fits(pending)
     i = 0
-    step = 0                        # decode steps executed so far — the
-    # engine's iteration coordinate; stamped on every event so engine
-    # and sim streams line up position for position
-
-    def _admit_one(running):
-        """Shared admission prologue: one ``policy.admit`` consultation
-        plus the block-reservation gate, overhead / setup charges and
-        the CPU-lane fork — identical for the stall and chunked
-        branches (the engine mirrors it bit for bit).  Returns
-        ("stop", None, 0) to end the admission loop, ("cpu", None, 0)
-        when the task was offloaded, or ("gpu", task, need)."""
-        nonlocal queue, now, overhead_total
-        prev_queue = list(queue)
-        task, lane, rest = policy.admit(list(queue), now, running)
-        if task is None:
-            return "stop", None, 0
-        queue = list(rest)
-        need = 0
-        if kv_model and lane != "cpu":
-            need = blocks_for_tokens(
-                prompt_len + max(1, task.true_out_len) - 1,
-                kv_block_size)
-            if need > kv_num_blocks - sum(reserved):
-                queue = prev_queue             # leave it queued
-                rejected_ids.add(id(task))
-                if obs is not None:
-                    obs.event("reject", now, _tid(task), step,
-                              kv_blocks=need)
-                    obs.inc("sched.rejections")
-                return "stop", None, 0
-        overhead_total += per_task_overhead_s
-        now += per_task_overhead_s
-        if lane == "cpu":
-            if obs is not None:
-                obs.event("offload", now, _tid(task), step)
-                obs.inc("sched.offloads")
-            cpu_queue.append(task)
-            return "cpu", None, 0
-        if not running:
-            now += persona.setup_time          # engine restart from idle
-        return "gpu", task, need
-
-    while len(done) < n_total:
-        while i < n_total and pending[i].r <= now + 1e-12:
-            if obs is not None:
-                cls = _cls(pending[i])
-                obs.event("enqueue", pending[i].r, _tid(pending[i]),
-                          step, **({"cls": cls} if cls else {}))
-            queue.append(pending[i])
+    while len(rep.done) < n_total:
+        while i < n_total and pending[i].r <= rep.now + 1e-12:
+            rep.deliver(pending[i])
             i += 1
-
-        progressed = False
-        if chunked:
-            # admissions enqueue a chunk job; the slot is held by the
-            # job (not decoding yet) until its last chunk completes
-            in_prefill = set(sched.slots_in_prefill())
-            free = [s for s in range(C)
-                    if slots[s] is None and s not in in_prefill]
-            while queue and free:
-                running = ([t for t in slots if t is not None]
-                           + [j.task for j in sorted(sched.jobs,
-                                                     key=lambda j: j.seq)])
-                status, task, need = _admit_one(running)
-                if status == "stop":
-                    break
-                if status == "cpu":
-                    continue
-                s = free.pop(0)
-                if kv_model:
-                    reserved[s] = need
-                qw_h.record(now - task.r)
-                if obs is not None:
-                    obs.event("admit", now, _tid(task), step, slot=s,
-                              u=task.u, kv_blocks=need)
-                    obs.inc("sched.admissions")
-                    obs.observe("queue_wait_s", now - task.r)
-                    obs.slo_observe("queue_wait", _cls(task), now,
-                                    now - task.r)
-                total = prompt_len
-                if pc is not None:
-                    # matched prefix blocks shared at admission (same
-                    # call the engine makes); the chunk job covers only
-                    # the uncached suffix
-                    toks = tuple(prompt_tokens(task))
-                    adm = pc.admit(id(task), toks)
-                    if obs is not None and adm.matched_blocks:
-                        obs.event("prefix_hit", now, _tid(task), step,
-                                  cached_tokens=adm.start,
-                                  matched_blocks=adm.matched_blocks,
-                                  cow=len(adm.cow))
-                    slot_toks[s] = toks
-                    total = prompt_len - adm.start
-                sched.add(task, s, total,
-                          policy.assign_priority(task))
-                progressed = True
-
-            # chunk phase: pack the budget, decode tokens first.  The
-            # engine executes the whole plan as ONE fused ragged launch
-            # (pack_plans -> ChunkBatch); mirror its dispatch count and
-            # executable-cache shape-key novelty from the same call —
-            # the latency model still charges per-chunk token cost.
-            active0 = [s for s in range(C) if slots[s] is not None]
-            plans = sched.schedule(len(active0)) if sched.has_jobs else []
-            chunk_batch = pack_plans(plans)
-            if chunk_batch is not None:
-                dispatches += 1
-                hit = chunk_batch.shape_key in exec_keys
-                if hit:
-                    exec_hits += 1
-                else:
-                    exec_keys.add(chunk_batch.shape_key)
-                    exec_misses += 1
-                if obs is not None:
-                    # mirror of the engine's fused-launch emission: one
-                    # exec_cache probe then one prefill_chunk per MERGED
-                    # chunk (the ragged batch the engine launches), all
-                    # before any finishing first_token — identical
-                    # stream order, from the same pack_plans result
-                    obs.event("exec_cache", now, None, step, hit=hit,
-                              shape_key=str(chunk_batch.shape_key))
-                    obs.inc("exec_cache.hits" if hit
-                            else "exec_cache.misses")
-                    obs.inc("prefill.dispatches")
-                    pf_cost = (persona.item_time
-                               * chunk_batch.total_tokens / prompt_len)
-                    obs.span("prefill.ragged", now, pf_cost,
-                             chunks=len(chunk_batch.chunks),
-                             tokens=chunk_batch.total_tokens)
-                    for ch in chunk_batch.chunks:
-                        obs.event("prefill_chunk", now,
-                                  _tid(ch.job.task), step, slot=ch.slot,
-                                  start=ch.start, length=ch.length,
-                                  finishes=ch.finishes,
-                                  shape_key=str(chunk_batch.shape_key))
-            for plan in plans:
-                now += persona.item_time * plan.length / prompt_len
-                if plan.finishes:
-                    task, s = plan.job.task, plan.job.slot
-                    if pc is not None:
-                        pc.commit(id(task), slot_toks.pop(s))
-                    task.start, task.lane = now, "gpu"
-                    ttft_h.record(now - task.r)
-                    if obs is not None:
-                        obs.event("first_token", now, _tid(task), step,
-                                  slot=s)
-                        obs.slo_observe("ttft", _cls(task), now,
-                                        now - task.r)
-                    if task.true_out_len <= 1:  # first token already EOS
-                        task.finish = now
-                        done.append(task)
-                        reserved[s] = 0
-                        if pc is not None:
-                            alloc.free_sequence(id(task))
-                        if obs is not None:
-                            obs.event("complete", now, _tid(task), step,
-                                      lane="gpu", out_len=1)
-                            obs.event("evict", now, _tid(task), step,
-                                      slot=s)
-                            obs.inc("sched.completions")
-                            obs.complete_request(_cls(task), now,
-                                                 u=task.u, out_len=1,
-                                                 latency_s=now - task.r)
-                    else:
-                        slots[s] = task         # joins THIS step's decode
-                        produced[s] = 1         # prefill emits token 1
-                        last_tok[s] = now
-            if plans:
-                progressed = True
-            if plans or any(t is not None for t in slots):
-                budget_trace.append(
-                    (len(active0), sum(p.length for p in plans)))
-                dispatch_trace.append(1 if plans else 0)
-                # aligned with budget_trace, as in the engine: steps
-                # launched this iteration (0 = prefill-only iteration)
-                dec_trace.append(decode_steps
-                                 if any(t is not None for t in slots)
-                                 else 0)
-        else:
-            # admissions into freed slots (uncertainty-aware, stalling
-            # the loop for one amortized prefill per admission — and
-            # one prefill LAUNCH per admission, the burst the fused
-            # chunked path collapses to one per iteration)
-            iter_launches = 0
-            while queue and None in slots:
-                running = [t for t in slots if t is not None]
-                status, task, need = _admit_one(running)
-                if status == "stop":
-                    break
-                if status == "cpu":
-                    continue
-                dispatches += 1
-                iter_launches += 1
-                # slot chosen BEFORE prefill (as the engine does): the
-                # admit event carries it even for an immediate finish
-                s = slots.index(None)
-                tid = _tid(task)
-                qw_h.record(now - task.r)
-                if obs is not None:
-                    obs.event("admit", now, tid, step, slot=s,
-                              u=task.u, kv_blocks=need)
-                    obs.inc("sched.admissions")
-                    obs.observe("queue_wait_s", now - task.r)
-                    obs.slo_observe("queue_wait", _cls(task), now,
-                                    now - task.r)
-                pf_t0 = now
-                pf_start, pf_key, pf_hit = 0, "admit", False
-                if pc is not None:
-                    # prefill cost scales with the uncached suffix —
-                    # the same admit/commit calls the engine's stall
-                    # path makes, so counters match bit for bit
-                    toks = tuple(prompt_tokens(task))
-                    adm = pc.admit(id(task), toks)
-                    if obs is not None and adm.matched_blocks:
-                        obs.event("prefix_hit", now, tid, step,
-                                  cached_tokens=adm.start,
-                                  matched_blocks=adm.matched_blocks,
-                                  cow=len(adm.cow))
-                    if adm.start > 0:
-                        # the engine routes the uncached suffix through
-                        # the fused ragged executable as a single-chunk
-                        # launch; mirror its shape-key novelty
-                        key = suffix_shape_key(prompt_len - adm.start)
-                        pf_hit = key in exec_keys
-                        if pf_hit:
-                            exec_hits += 1
-                        else:
-                            exec_keys.add(key)
-                            exec_misses += 1
-                        pf_start, pf_key = adm.start, str(key)
-                    now += (persona.item_time
-                            * (prompt_len - adm.start) / prompt_len)
-                    pc.commit(id(task), toks)
-                else:
-                    now += persona.item_time   # per-member bandwidth term
-                task.start, task.lane = now, "gpu"
-                ttft_h.record(now - task.r)
-                if obs is not None:
-                    # same post-launch emission the engine's stall path
-                    # makes (exec_cache only on the prefix-suffix path)
-                    if pf_key != "admit":
-                        obs.event("exec_cache", now, tid, step,
-                                  hit=pf_hit, shape_key=pf_key)
-                        obs.inc("exec_cache.hits" if pf_hit
-                                else "exec_cache.misses")
-                    obs.inc("prefill.dispatches")
-                    obs.span("prefill.admit", pf_t0, now - pf_t0,
-                             task=tid, slot=s)
-                    obs.event("prefill_chunk", now, tid, step, slot=s,
-                              start=pf_start,
-                              length=prompt_len - pf_start,
-                              finishes=True, shape_key=pf_key)
-                    obs.event("first_token", now, tid, step, slot=s)
-                    obs.slo_observe("ttft", _cls(task), now,
-                                    now - task.r)
-                if task.true_out_len <= 1:     # first token already EOS
-                    task.finish = now
-                    done.append(task)
-                    if pc is not None:
-                        alloc.free_sequence(id(task))
-                    if obs is not None:
-                        obs.event("complete", now, tid, step,
-                                  lane="gpu", out_len=1)
-                        obs.event("evict", now, tid, step, slot=s)
-                        obs.inc("sched.completions")
-                        obs.complete_request(_cls(task), now,
-                                             u=task.u, out_len=1,
-                                             latency_s=now - task.r)
-                else:
-                    slots[s] = task
-                    produced[s] = 1            # prefill emits token 1
-                    last_tok[s] = now
-                    if kv_model:
-                        reserved[s] = need
-                progressed = True
-            if iter_launches:
-                dispatch_trace.append(iter_launches)
-
-        if any(t is not None for t in slots):
-            active = [s for s in range(C) if slots[s] is not None]
-            peak_conc = max(peak_conc, len(active))
-            nsteps = decode_steps
-            if kv_model and pc is not None:
-                # real-allocator model (prefix mode): mirror the
-                # engine's pre-window extension host-side (every useful
-                # write of the next nsteps launches, clamped at the
-                # reservation — kvcache.window_target_tokens), then
-                # sample the allocator directly — shared prefix blocks
-                # and cached-but-unreferenced blocks count once,
-                # exactly as in the engine's utilization samples
-                for s in active:
-                    key = id(slots[s])
-                    target = blocks_for_tokens(window_target_tokens(
-                        prompt_len, produced[s],
-                        max(1, slots[s].true_out_len), nsteps),
-                        kv_block_size)
-                    while target > len(alloc.table(key)):
-                        alloc.allocate(key)
-                kv_util.append(alloc.utilization())
-            elif kv_model:
-                # lazy-allocation model: the window writes logical
-                # positions up to the window target (clamped at the
-                # sequence's reservation), so each slot holds
-                # blocks_for(window_target) physical blocks; slots
-                # mid-chunked-prefill hold their whole prompt's blocks
-                # (allocated at admission, as in the engine)
-                held = sum(blocks_for_tokens(window_target_tokens(
-                    prompt_len, produced[s],
-                    max(1, slots[s].true_out_len), nsteps),
-                    kv_block_size)
-                    for s in active)
-                if chunked:
-                    held += (len(sched.slots_in_prefill())
-                             * blocks_for_tokens(prompt_len,
-                                                 kv_block_size))
-                kv_util.append(held / kv_num_blocks)
-            else:
-                kv_util.append(len(active) / C)
-            dispatches_dec += 1
-            steps_dec += nsteps
-            step += nsteps
-            if not chunked:
-                # stall mode: one trace entry per executed window (the
-                # chunked entry was appended with budget_trace above)
-                dec_trace.append(nsteps)
-            if obs is not None:
-                # mirror of the engine's per-window emission (the
-                # engine stamps the step coordinate AFTER advancing it,
-                # as here; event timestamps are model time)
-                obs.inc("decode.dispatches")
-                obs.inc("decode.steps", nsteps)
-                obs.gauge("kv.util", kv_util[-1])
-                obs.counter_sample("kv.util", now, kv_util[-1])
-                obs.span("decode.window", now, nsteps * persona.eta,
-                         steps=nsteps, active=len(active))
-                obs.event("decode_window", now, None, step,
-                          steps=nsteps, active=len(active),
-                          dur=nsteps * persona.eta)
-            # N-step window, consumed step-major; a sequence finishing
-            # at window step j stops producing but keeps its slot and
-            # blocks until window end (eviction in arrears — the
-            # engine's eviction-lag invariant)
-            finished: List[int] = []
-            for j in range(nsteps):
-                now += persona.eta         # one decode step, all slots
-                for s in active:
-                    if s in finished:
-                        continue
-                    produced[s] += 1
-                    gap = now - last_tok[s]
-                    itl_h.record(gap)
-                    last_tok[s] = now
-                    if obs is not None:
-                        obs.event("token", now, _tid(slots[s]), step,
-                                  slot=s, idx=produced[s])
-                        obs.slo_observe("itl", _cls(slots[s]), now,
-                                        gap)
-                    if produced[s] >= slots[s].true_out_len:
-                        slots[s].finish = now
-                        done.append(slots[s])
-                        finished.append(s)
-                        if obs is not None:
-                            obs.event("complete", now, _tid(slots[s]),
-                                      step, lane="gpu",
-                                      out_len=produced[s])
-                            obs.inc("sched.completions")
-                            obs.complete_request(
-                                _cls(slots[s]), now, u=slots[s].u,
-                                out_len=produced[s],
-                                latency_s=now - slots[s].r)
-                            # eviction lag: window steps this slot's
-                            # blocks stay held past its logical end
-                            obs.observe("decode.eviction_lag_steps",
-                                        nsteps - 1 - j)
-            # window-end frees in slot order (matches the engine, so
-            # allocator free-list state stays bit-identical)
-            for s in active:
-                if s not in finished:
-                    continue
-                if obs is not None:
-                    obs.event("evict", now, _tid(slots[s]), step,
-                              slot=s)
-                if pc is not None:
-                    alloc.free_sequence(id(slots[s]))
-                slots[s] = None
-                reserved[s] = 0
-            if obs is not None:
-                # same post-window snapshot point as the engine's serve
-                # loops: after window bookkeeping and eviction, keyed
-                # off the shared ``step`` coordinate
-                obs.maybe_snapshot(
-                    now, step, queue_depth=len(queue),
-                    active=sum(t is not None for t in slots),
-                    kv_util=kv_util[-1])
-            progressed = True
-
-        if cpu.free_at <= now + 1e-12 and cpu_queue:
-            batch, cpu_queue = cpu_queue[:C], cpu_queue[C:]
-            cpu.run_batch(batch, now, persona, "cpu", ttft_h, itl_h,
-                          qw_h, obs)
-            done.extend(batch)
-            # bulk-lane launches count in the total only: the trace is
-            # the decode loop's per-iteration launch profile (engine
-            # mirror — _run_batch does the same in continuous modes)
-            dispatches += 1
-            progressed = True
-
-        if progressed:
+        if rep.iterate():
             continue
-        candidates = []
-        if i < n_total:
-            candidates.append(pending[i].r)
-        if cpu_queue:
-            candidates.append(cpu.free_at)
-        future = [c for c in candidates if c > now + 1e-12]
-        now = min(future) if future else now + xi
+        rep.advance_idle([pending[i].r] if i < n_total else [])
+    return rep.result()
 
-    makespan = max(t.finish for t in done) - min(t.r for t in done)
-    util = np.array(kv_util) if kv_util else np.zeros(1)
-    pstats = pc.stats() if pc is not None else {}
-    return SimResult(tasks=done, makespan=makespan,
-                     overhead_s=overhead_total,
-                     kv_rejected=len(rejected_ids),
-                     kv_util_peak=float(util.max()),
-                     kv_util_mean=float(util.mean()),
-                     peak_concurrency=peak_conc,
-                     ttft_p50=ttft_h.quantile(0.50),
-                     ttft_p90=ttft_h.quantile(0.90),
-                     ttft_p99=ttft_h.quantile(0.99),
-                     itl_p50=itl_h.quantile(0.50),
-                     itl_p90=itl_h.quantile(0.90),
-                     itl_p99=itl_h.quantile(0.99),
-                     queue_wait_p50=qw_h.quantile(0.50),
-                     queue_wait_p90=qw_h.quantile(0.90),
-                     queue_wait_p99=qw_h.quantile(0.99),
-                     budget_trace=budget_trace,
-                     prefill_dispatches=dispatches,
-                     prefill_dispatch_trace=dispatch_trace,
-                     exec_cache_hits=exec_hits,
-                     exec_cache_misses=exec_misses,
-                     decode_dispatches=dispatches_dec,
-                     decode_steps_executed=steps_dec,
-                     decode_dispatch_trace=dec_trace,
-                     prefix_hit_rate=pstats.get("prefix_hit_rate", 0.0),
-                     cached_tokens_reused=pstats.get(
-                         "cached_tokens_reused", 0),
-                     cow_copies=pstats.get("cow_copies", 0),
-                     prefix_evictions=pstats.get("prefix_evictions", 0),
-                     **_obs_result_fields(obs))
+
+@dataclasses.dataclass
+class ReplicatedSimResult:
+    """R per-replica ``SimResult``s plus the router's placement record
+    and pool-level latency percentiles (merged from every replica's
+    streaming histograms — the same substrate the per-replica
+    percentiles use, so pooled == merged, not averaged)."""
+
+    replicas: List[SimResult]
+    placements: List[int]            # arrival-order replica choice
+    router_policy: str
+    n_tasks: int
+    makespan: float
+    ttft_p50: float = 0.0
+    ttft_p90: float = 0.0
+    ttft_p99: float = 0.0
+    itl_p50: float = 0.0
+    itl_p90: float = 0.0
+    itl_p99: float = 0.0
+    queue_wait_p50: float = 0.0
+    queue_wait_p90: float = 0.0
+    queue_wait_p99: float = 0.0
+
+    @property
+    def tasks(self) -> List[SimTask]:
+        """All completed tasks, ordered by finish time (per-replica
+        completion order is in ``replicas[r].tasks``)."""
+        out = [t for r in self.replicas for t in r.tasks]
+        out.sort(key=lambda t: t.finish)
+        return out
+
+    def placement_counts(self) -> List[int]:
+        return [self.placements.count(r)
+                for r in range(len(self.replicas))]
+
+    def summary(self) -> Dict:
+        return {
+            "n_tasks": self.n_tasks,
+            "replicas": len(self.replicas),
+            "router_policy": self.router_policy,
+            "makespan_s": self.makespan,
+            "placement_counts": self.placement_counts(),
+            "kv_rejected": sum(r.kv_rejected for r in self.replicas),
+            "ttft_p50": self.ttft_p50,
+            "ttft_p90": self.ttft_p90,
+            "ttft_p99": self.ttft_p99,
+            "itl_p50": self.itl_p50,
+            "itl_p90": self.itl_p90,
+            "itl_p99": self.itl_p99,
+            "queue_wait_p50": self.queue_wait_p50,
+            "queue_wait_p90": self.queue_wait_p90,
+            "queue_wait_p99": self.queue_wait_p99,
+        }
+
+
+def simulate_replicated(tasks: Sequence[SimTask],
+                        policy: sched_lib.Policy, *,
+                        R: int = 1,
+                        router=None,
+                        xi: float = 2.0,
+                        per_task_overhead_s: float = 0.0,
+                        num_slots: Optional[int] = None,
+                        kv_block_size: Optional[int] = None,
+                        kv_num_blocks: Optional[int] = None,
+                        prompt_len: int = 0,
+                        prefill: str = "stall",
+                        chunk_size: Optional[int] = None,
+                        token_budget: Optional[int] = None,
+                        prefix_cache: bool = False,
+                        prompt_tokens=None,
+                        decode_steps: int = 1,
+                        obs=None) -> ReplicatedSimResult:
+    """R independent continuous-batching replicas behind a front-end
+    ``repro.serving.router.Router`` — the simulator twin of
+    ``repro.serving.replica.ReplicatedEngine``.
+
+    Every replica is a full ``_ReplicaSim`` with its OWN slot array, KV
+    block budget (``kv_num_blocks`` is per replica), chunk scheduler
+    and step clock; the driver advances them on a shared virtual clock:
+    each turn either PLACES the next arrival (once every working
+    replica's clock has reached the arrival time, so the router sees a
+    causally consistent view) or ITERATES the furthest-behind working
+    replica (ties broken by lowest replica id — the round-robin
+    discipline that keeps replica clocks within one iteration of each
+    other).  The SAME ``Router`` object the engine front-end drives
+    scores ``ReplicaView``s built from live replica state, so placement
+    decisions parity-match the engine bit for bit on all-at-t0 traces.
+
+    Observability: the shared ``obs`` bundle is labeled with the active
+    replica id around every delivery and iteration (R > 1 only — at
+    R=1 the stream stays byte-identical to ``simulate_continuous``);
+    a ``route`` event carrying ``{replica, score, policy}`` fires per
+    placement.  ``TraceRecorder.parity_events(replica=r)`` recovers one
+    replica's stream for per-replica parity assertions.
+
+    Returns a ``ReplicatedSimResult``: per-replica ``SimResult``s, the
+    arrival-ordered placement list, and pool-level latency percentiles
+    merged from the per-replica histograms.
+    """
+    from repro.serving.router import ReplicaView, Router
+
+    if R < 1:
+        raise ValueError(f"R must be >= 1, got {R}")
+    if router is None:
+        router = Router(R)
+    if router.R != R:
+        raise ValueError(f"router expects R={router.R}, got R={R}")
+    pending = sorted(tasks, key=lambda t: t.r)
+    n_total = len(pending)
+    kv_model = kv_block_size is not None and kv_num_blocks is not None
+    reps = [_ReplicaSim(policy, xi=xi,
+                        per_task_overhead_s=per_task_overhead_s,
+                        num_slots=num_slots,
+                        kv_block_size=kv_block_size,
+                        kv_num_blocks=kv_num_blocks,
+                        prompt_len=prompt_len, prefill=prefill,
+                        chunk_size=chunk_size, token_budget=token_budget,
+                        prefix_cache=prefix_cache,
+                        prompt_tokens=prompt_tokens,
+                        decode_steps=decode_steps, obs=obs)
+            for _ in range(R)]
+    reps[0].check_fits(pending)
+    placements: List[int] = []
+    label = obs is not None and R > 1
+    i = 0
+
+    while sum(len(rep.done) for rep in reps) < n_total:
+        workers = [r for r in range(R) if reps[r].has_work()]
+        if i < n_total and all(reps[r].now + 1e-12 >= pending[i].r
+                               for r in workers):
+            # place the next arrival: every working replica's clock has
+            # reached it, so the router's view is causally consistent
+            t = pending[i]
+            i += 1
+            need = blocks_for_tokens(
+                prompt_len + max(1, t.true_out_len) - 1,
+                kv_block_size) if kv_model else 0
+            views = [ReplicaView(replica=r,
+                                 is_bulk=router.is_bulk(r),
+                                 **reps[r].load())
+                     for r in range(R)]
+            d = router.place(views, u=t.u, cls=_cls(t), need=need)
+            placements.append(d.replica)
+            if label:
+                obs.event("route", t.r, _tid(t), None,
+                          replica=d.replica, score=d.score,
+                          policy=d.policy)
+            rep = reps[d.replica]
+            rep.now = max(rep.now, t.r)
+            if label:
+                obs.replica_label = d.replica
+            try:
+                rep.deliver(t)
+            finally:
+                if label:
+                    obs.replica_label = None
+            continue
+        # iterate the furthest-behind working replica (lowest id wins
+        # ties) — the shared-clock round-robin discipline
+        r = min(workers, key=lambda k: (reps[k].now, k))
+        rep = reps[r]
+        if label:
+            obs.replica_label = r
+        try:
+            if not rep.iterate():
+                rep.advance_idle([pending[i].r] if i < n_total else [])
+        finally:
+            if label:
+                obs.replica_label = None
+
+    ttft_h, itl_h, qw_h = Histogram(), Histogram(), Histogram()
+    for rep in reps:
+        ttft_h.merge(rep.ttft_h)
+        itl_h.merge(rep.itl_h)
+        qw_h.merge(rep.qw_h)
+    alldone = [t for rep in reps for t in rep.done]
+    makespan = (max(t.finish for t in alldone)
+                - min(t.r for t in alldone)) if alldone else 0.0
+    return ReplicatedSimResult(
+        replicas=[rep.result() for rep in reps],
+        placements=placements,
+        router_policy=router.policy,
+        n_tasks=n_total,
+        makespan=makespan,
+        ttft_p50=ttft_h.quantile(0.50),
+        ttft_p90=ttft_h.quantile(0.90),
+        ttft_p99=ttft_h.quantile(0.99),
+        itl_p50=itl_h.quantile(0.50),
+        itl_p90=itl_h.quantile(0.90),
+        itl_p99=itl_h.quantile(0.99),
+        queue_wait_p50=qw_h.quantile(0.50),
+        queue_wait_p90=qw_h.quantile(0.90),
+        queue_wait_p99=qw_h.quantile(0.99))
 
 
 # ---------------------------------------------------------------------------

@@ -52,6 +52,28 @@ def constant_rate_trace(n_tasks: int, beta: float, seed: int = 0
     return list(np.cumsum(gaps))
 
 
+def flash_crowd_trace(n_tasks: int, *, base_beta: float = 30.0,
+                      peak_beta: float = 300.0,
+                      peak_frac: float = 0.25,
+                      seed: int = 0) -> List[float]:
+    """Arrival times (s) with a flash crowd in the middle of the trace:
+    a baseline Poisson stream at ``base_beta`` queries/min whose middle
+    ``peak_frac`` of requests arrive at ``peak_beta`` instead — the
+    sudden burst that separates placement policies (a load-oblivious
+    router keeps hashing the burst uniformly; a load/uncertainty-aware
+    one drains it around the backlog).  Deterministic per seed."""
+    if not 0.0 <= peak_frac <= 1.0:
+        raise ValueError(f"peak_frac must be in [0, 1], got {peak_frac}")
+    rng = np.random.default_rng(seed)
+    n_peak = int(n_tasks * peak_frac)
+    n_base = n_tasks - n_peak
+    lead = n_base // 2
+    rates = ([base_beta] * lead + [peak_beta] * n_peak
+             + [base_beta] * (n_tasks - lead - n_peak))
+    gaps = [rng.exponential(60.0 / rates[i]) for i in range(n_tasks)]
+    return list(np.cumsum(gaps))
+
+
 # ---------------------------------------------------------------------------
 # traffic classes with per-class SLO targets
 # ---------------------------------------------------------------------------
@@ -63,13 +85,18 @@ class TrafficClass:
 
     ``weight`` is the relative arrival share used by
     ``assign_classes``; ``max_new_tokens`` optionally caps generation
-    for the class (interactive traffic tends to be short).
+    for the class (interactive traffic tends to be short); ``bulk``
+    marks the class as low-priority batch traffic that the
+    multi-replica router confines to its bulk replica slice
+    (``repro.serving.router.Router(bulk_classes=...)`` — see
+    ``bulk_class_names``).
     """
 
     name: str
     slo: SLOSpec = SLOSpec()
     weight: float = 1.0
     max_new_tokens: Optional[int] = None
+    bulk: bool = False
 
 
 def make_traffic_classes(spec: Mapping[str, Mapping]
@@ -119,3 +146,9 @@ def assign_classes(n_tasks: int, classes: Sequence[TrafficClass],
 def slo_targets(classes: Sequence[TrafficClass]) -> Dict[str, SLOSpec]:
     """The ``{name: SLOSpec}`` mapping ``SLOMonitor`` consumes."""
     return {c.name: c.slo for c in classes}
+
+
+def bulk_class_names(classes: Sequence[TrafficClass]) -> List[str]:
+    """Names of the ``bulk=True`` classes — the ``bulk_classes``
+    argument of ``repro.serving.router.Router``."""
+    return [c.name for c in classes if c.bulk]

@@ -46,3 +46,24 @@ def make_mesh(shape, axes):
     return jax.make_mesh(
         tuple(shape), tuple(axes), devices=jax.devices()[:ndev],
         **_axis_type_kwargs(len(axes)))
+
+
+def replica_groups(R: int, devices=None):
+    """Device groups for R serving replicas (PR 9 multi-replica pool).
+
+    With at least R devices the replicas get contiguous equal
+    data-parallel slices (leftover devices stay unused — equal pools
+    keep the replicas interchangeable for the router).  With fewer
+    devices than replicas the groups wrap round-robin onto single
+    devices: R engine instances time-sharing one host device, the CPU
+    test case ``serving.replica.ReplicatedEngine`` models.
+    """
+    if R < 1:
+        raise ValueError(f"R must be >= 1, got {R}")
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if not devs:
+        raise RuntimeError("no devices available for replica_groups")
+    if len(devs) >= R:
+        per = len(devs) // R
+        return [devs[r * per:(r + 1) * per] for r in range(R)]
+    return [[devs[r % len(devs)]] for r in range(R)]

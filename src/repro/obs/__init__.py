@@ -95,8 +95,17 @@ class Observability:
         #: iteration coordinate, so both sides snapshot at the same
         #: points); 0 disables snapshots
         self.snapshot_every_steps = int(snapshot_every_steps)
-        self._snap_bucket = 0
+        self._snap_bucket: dict = {}   # per replica label (None=global)
         self.health_trace: list = []
+        #: active replica id for multi-replica serving (PR 9): while
+        #: set (an int), every event/span gains a ``replica`` field,
+        #: counters additionally bump an ``r{label}.``-prefixed mirror,
+        #: and SLO observations are double-counted per replica — so one
+        #: shared bundle records R replicas with per-replica parity
+        #: views (``TraceRecorder.parity_events(replica=r)``).  ``None``
+        #: (the default, and the R=1 serving path) leaves every stream
+        #: byte-identical to single-replica recording.
+        self.replica_label: Optional[int] = None
         if self.trace is not None and self.slo is not None \
                 and self.slo.classes:
             self.trace.meta["slo"] = self.slo.targets_json()
@@ -108,6 +117,8 @@ class Observability:
               **fields) -> None:
         if self.trace is not None:
             t0 = time.perf_counter()
+            if self.replica_label is not None and "replica" not in fields:
+                fields["replica"] = self.replica_label
             self.trace.event(kind, ts, task_id, step, **fields)
             self.overhead_s += time.perf_counter() - t0
 
@@ -115,6 +126,8 @@ class Observability:
              track: str = "engine", **fields) -> None:
         if self.trace is not None:
             t0 = time.perf_counter()
+            if self.replica_label is not None and "replica" not in fields:
+                fields["replica"] = self.replica_label
             self.trace.span(name, ts, dur, track, **fields)
             self.overhead_s += time.perf_counter() - t0
 
@@ -128,6 +141,11 @@ class Observability:
         if self.metrics is not None:
             t0 = time.perf_counter()
             self.metrics.counter(name).inc(n)
+            if self.replica_label is not None:
+                # per-replica counter mirror: pool totals stay in the
+                # unprefixed counter, ``r{label}.*`` carries the split
+                self.metrics.counter(
+                    f"r{self.replica_label}.{name}").inc(n)
             self.overhead_s += time.perf_counter() - t0
 
     def gauge(self, name: str, value: float) -> None:
@@ -151,7 +169,8 @@ class Observability:
         """Record a latency observation for (traffic class, metric)."""
         if self.slo is not None:
             t0 = time.perf_counter()
-            self.slo.observe(metric, cls, ts, value, n)
+            self.slo.observe(metric, cls, ts, value, n,
+                             replica=self.replica_label)
             self.overhead_s += time.perf_counter() - t0
 
     def complete_request(self, cls: str, ts: float, *, u: float,
@@ -163,12 +182,18 @@ class Observability:
             return
         t0 = time.perf_counter()
         if self.slo is not None:
-            resolved = self.slo.complete(cls)
+            resolved = self.slo.complete(cls,
+                                         replica=self.replica_label)
             if latency_s is not None:
-                self.slo.observe("e2e", cls, ts, latency_s)
+                self.slo.observe("e2e", cls, ts, latency_s,
+                                 replica=self.replica_label)
             if self.metrics is not None:
                 self.metrics.counter(
                     "slo.completions." + resolved).inc()
+                if self.replica_label is not None:
+                    self.metrics.counter(
+                        f"r{self.replica_label}.slo.completions."
+                        + resolved).inc()
         if self.calibration is not None:
             self.calibration.record(u, out_len, latency_s)
         self.overhead_s += time.perf_counter() - t0
@@ -188,14 +213,19 @@ class Observability:
         """
         if self.snapshot_every_steps <= 0:
             return
+        # cadence state is per replica label (None = single-replica):
+        # replica 3 crossing a bucket boundary must not suppress
+        # replica 0's next snapshot when R replicas share the bundle
         bucket = step // self.snapshot_every_steps
-        if bucket <= self._snap_bucket:
+        if bucket <= self._snap_bucket.get(self.replica_label, 0):
             return
         t0 = time.perf_counter()
-        self._snap_bucket = bucket
+        self._snap_bucket[self.replica_label] = bucket
         fields: dict = {"queue_depth": int(queue_depth),
                         "active": int(active),
                         "kv_util": float(kv_util)}
+        if self.replica_label is not None:
+            fields["replica"] = self.replica_label
         if self.calibration is not None:
             fields["drift"] = self.calibration.drift()
             fields["calibration_count"] = self.calibration.count

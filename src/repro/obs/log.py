@@ -20,12 +20,26 @@ gone, and never countable.  This module centralizes the pattern:
 
 A module-level singleton (``FALLBACKS``) backs the serving stack; unit
 tests may construct private ``RateLimitedLogger`` instances.
+
+Multi-replica scoping (PR 9): with R engine replicas in one process,
+a purely process-global ledger makes per-replica accounting wrong in
+both directions — replica 3's first jnp-fallback is rate-SUPPRESSED
+because replica 0 logged the same key seconds earlier, and a
+process-global count delta attributes every replica's events to
+whichever engine computed the delta.  ``scope(ledger)`` pushes an
+engine-owned ledger for the duration of its build/serve work:
+``warn_once`` then counts the occurrence in BOTH the global ledger
+(process-wide observability is still wanted) and every active scope,
+while the emission decision comes from the innermost scope — so each
+replica's first fallback logs, and ``ServingEngine`` reports
+``fallback_events`` from its own ledger's counts.
 """
 
 from __future__ import annotations
 
+import contextlib
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 
 class RateLimitedLogger:
@@ -38,9 +52,11 @@ class RateLimitedLogger:
         self.suppressed: Dict[str, int] = {}
 
     # ------------------------------------------------------------------
-    def warn(self, logger, key: str, msg: str, *args) -> bool:
-        """Count the occurrence; emit at WARNING unless the key logged
-        within ``min_interval_s``.  Returns True when emitted."""
+    def note(self, key: str) -> bool:
+        """Count one occurrence and decide (without logging) whether
+        this ledger would emit it — the rate-limit bookkeeping half of
+        ``warn``, reusable when the emission decision belongs to a
+        different ledger (see ``warn_once``)."""
         self.counts[key] = self.counts.get(key, 0) + 1
         now = time.monotonic()
         last = self._last_emit.get(key)
@@ -48,6 +64,13 @@ class RateLimitedLogger:
             self.suppressed[key] = self.suppressed.get(key, 0) + 1
             return False
         self._last_emit[key] = now
+        return True
+
+    def warn(self, logger, key: str, msg: str, *args) -> bool:
+        """Count the occurrence; emit at WARNING unless the key logged
+        within ``min_interval_s``.  Returns True when emitted."""
+        if not self.note(key):
+            return False
         logger.warning(msg, *args)
         return True
 
@@ -71,13 +94,38 @@ class RateLimitedLogger:
 #:   "aot-warmup"    — AOT warmup failed; degraded to jit-on-first-call
 FALLBACKS = RateLimitedLogger()
 
+#: active scoped ledgers, innermost last (``scope``) — each engine
+#: replica pushes its own around factory build + serve
+_SCOPES: List[RateLimitedLogger] = []
+
+
+@contextlib.contextmanager
+def scope(ledger: RateLimitedLogger):
+    """Route ``warn_once`` bookkeeping into ``ledger`` for the block:
+    occurrences count in the global ledger AND every active scope, and
+    the innermost scope owns the rate-limit emission decision (so a
+    fresh replica's first fallback is not suppressed by an earlier
+    replica having logged the same key)."""
+    _SCOPES.append(ledger)
+    try:
+        yield ledger
+    finally:
+        _SCOPES.pop()
+
 
 def warn_once(logger, key: str, msg: str, *args) -> bool:
-    """Module-level convenience over the shared ``FALLBACKS`` ledger."""
-    return FALLBACKS.warn(logger, key, msg, *args)
+    """Module-level convenience over the shared ``FALLBACKS`` ledger
+    plus any active ``scope`` ledgers (innermost decides emission)."""
+    emit = FALLBACKS.note(key)
+    for ledger in _SCOPES:
+        emit = ledger.note(key)
+    if emit:
+        logger.warning(msg, *args)
+    return emit
 
 
 def fallback_count() -> int:
-    """Total degradation events so far (all keys) — serve results report
-    deltas of this."""
+    """Total degradation events so far (all keys) — process-wide; a
+    replica-accurate count comes from its engine's own scoped ledger
+    (``ServingEngine.fallback_ledger.count()``)."""
     return FALLBACKS.count()

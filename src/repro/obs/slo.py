@@ -219,6 +219,12 @@ class SLOMonitor:
         self._hists: Dict[Tuple[str, str], WindowedHistogram] = {}
         self._counts: Dict[Tuple[str, str], _WindowCounts] = {}
         self.completions: Dict[str, int] = {}
+        # per-replica split (PR 9, multi-replica serving): cumulative
+        # [ok, total] per (replica, class, metric) and completions per
+        # (replica, class) — populated only when observations carry a
+        # replica label, so single-replica runs are unchanged
+        self._r_counts: Dict[Tuple[int, str, str], List[int]] = {}
+        self.r_completions: Dict[Tuple[int, str], int] = {}
 
     # ------------------------------------------------------------------
     def resolve(self, cls: str) -> str:
@@ -247,9 +253,11 @@ class SLOMonitor:
 
     # ------------------------------------------------------------------
     def observe(self, metric: str, cls: str, ts: float, value: float,
-                n: int = 1) -> None:
+                n: int = 1, *, replica: Optional[int] = None) -> None:
         """Record ``n`` observations of ``value`` for (class, metric)
-        at clock time ``ts`` and judge them against the class target."""
+        at clock time ``ts`` and judge them against the class target.
+        ``replica`` additionally lands the judgement in the per-replica
+        cumulative split (multi-replica serving)."""
         if metric not in SLO_METRICS:
             raise KeyError(f"unknown SLO metric {metric!r}; "
                            f"expected one of {SLO_METRICS}")
@@ -257,11 +265,21 @@ class SLOMonitor:
         target = self.classes[cls].target(metric)
         self._hist(cls, metric).record(ts, value, n)
         self._count(cls, metric).record(ts, value <= target, n)
+        if replica is not None:
+            cell = self._r_counts.setdefault((replica, cls, metric),
+                                             [0, 0])
+            if value <= target:
+                cell[0] += n
+            cell[1] += n
 
-    def complete(self, cls: str) -> str:
+    def complete(self, cls: str, *,
+                 replica: Optional[int] = None) -> str:
         """Count a completion; returns the resolved class name."""
         cls = self.resolve(cls)
         self.completions[cls] = self.completions.get(cls, 0) + 1
+        if replica is not None:
+            key = (replica, cls)
+            self.r_completions[key] = self.r_completions.get(key, 0) + 1
         return cls
 
     # ------------------------------------------------------------------
@@ -296,7 +314,9 @@ class SLOMonitor:
         return out
 
     def parity_counters(self) -> Dict[str, int]:
-        """Flat deterministic integer counters (engine-vs-sim view)."""
+        """Flat deterministic integer counters (engine-vs-sim view);
+        per-replica splits appear as ``slo.r{N}.…`` keys when replica
+        labels were recorded."""
         out: Dict[str, int] = {}
         for (cls, m) in sorted(self._counts):
             c = self._counts[(cls, m)]
@@ -304,7 +324,37 @@ class SLOMonitor:
             out[f"slo.{cls}.{m}.total"] = c.total
         for cls in sorted(self.completions):
             out[f"slo.{cls}.completions"] = self.completions[cls]
+        for (r, cls, m) in sorted(self._r_counts):
+            ok, total = self._r_counts[(r, cls, m)]
+            out[f"slo.r{r}.{cls}.{m}.ok"] = ok
+            out[f"slo.r{r}.{cls}.{m}.total"] = total
+        for (r, cls) in sorted(self.r_completions):
+            out[f"slo.r{r}.{cls}.completions"] = \
+                self.r_completions[(r, cls)]
         return out
+
+    def replica_attainment(self) -> Dict[int, Dict[str, Dict]]:
+        """Cumulative attainment fractions split by replica label —
+        {} unless observations carried replica labels (R > 1 serving).
+        Kept separate from ``attainment()`` (whose keys are class
+        names) so existing consumers see no new keys."""
+        out: Dict[int, Dict[str, Dict]] = {}
+        for (r, cls, m) in sorted(self._r_counts):
+            ok, total = self._r_counts[(r, cls, m)]
+            row = out.setdefault(r, {}).setdefault(cls, {})
+            row[m] = {"ok": ok, "total": total,
+                      "frac": _frac(ok, total)}
+        for (r, cls) in sorted(self.r_completions):
+            out.setdefault(r, {}).setdefault(cls, {})["completions"] = \
+                self.r_completions[(r, cls)]
+        return out
+
+    def lifetime_quantile(self, cls: str, metric: str,
+                          q: float) -> float:
+        """Lifetime (archive + live) quantile for (class, metric) —
+        0.0 when nothing was observed."""
+        h = self._hists.get((self.resolve(cls), metric))
+        return h.lifetime().quantile(q) if h is not None else 0.0
 
     def targets_json(self) -> Dict[str, Dict[str, float]]:
         return {cls: spec.to_json()

@@ -47,7 +47,7 @@ WALL_FIELDS = frozenset({"ts", "dur", "times", "attainment", "wall"})
 EVENT_KINDS = frozenset({
     "enqueue", "admit", "reject", "offload", "prefix_hit", "exec_cache",
     "prefill_chunk", "first_token", "decode_window", "token", "evict",
-    "complete", "bulk_batch", "snapshot",
+    "complete", "bulk_batch", "snapshot", "route",
 })
 
 
@@ -147,10 +147,22 @@ class TraceRecorder:
             self.counters.append((name, float(ts), float(value)))
 
     # ------------------------------------------------------------------
-    def parity_events(self) -> List[Tuple]:
+    def parity_events(self, replica=None) -> List[Tuple]:
         """The event stream minus wall-clock fields — the engine-vs-sim
-        comparison view (spans/counters are wall-only and excluded)."""
-        return [e.parity_key() for e in self.events]
+        comparison view (spans/counters are wall-only and excluded).
+
+        ``replica`` — restrict to one replica's substream of a
+        multi-replica run (events whose ``replica`` field matches),
+        excluding front-end ``route`` events: the router emits those
+        before the replica does any work, so they belong to the pool
+        view (compare them as ``[e for e in parity_events() if
+        e[0] == "route"]``), not to any one replica's causal order.
+        """
+        if replica is None:
+            return [e.parity_key() for e in self.events]
+        return [e.parity_key() for e in self.events
+                if e.kind != "route"
+                and e.fields.get("replica") == replica]
 
     def task_ids(self) -> List[int]:
         seen: Dict[int, None] = {}

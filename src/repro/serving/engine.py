@@ -192,10 +192,14 @@ class ServingEngine:
                  aot_warmup: bool = True,
                  persist_prefix_cache: bool = False,
                  obs: Optional[Observability] = None):
-        # snapshot the process-wide fallback ledger FIRST: the kernel
-        # factories below may fire the jnp-fallback warning while they
-        # build, and _result reports the delta since this point
-        self._fallback_base = obslog.fallback_count()
+        # per-engine fallback ledger FIRST: the kernel factories below
+        # may fire the jnp-fallback warning while they build.  Scoping
+        # the ledger to this instance (obslog.scope around the factory
+        # build and serve()) keeps fallback_events replica-accurate
+        # when R engines share the process — a process-global delta
+        # would attribute every replica's events to one engine and
+        # rate-suppress later replicas' first warnings.
+        self.fallback_ledger = obslog.RateLimitedLogger()
         if mode not in ("batch", "continuous"):
             raise ValueError(f"unknown mode {mode!r}")
         if kv not in ("contiguous", "paged"):
@@ -287,28 +291,31 @@ class ServingEngine:
         # consolidated batch runs as ONE batch, matching the simulator;
         # padded rows are capped at a single token (see _run_batch).
         self.batch_capacity = policy.max_batch()
-        self._prefill = generate.make_prefill_fn(cfg, self.max_len)
-        self._decode = generate.make_decode_fn(cfg)
-        self._slot_prefill = generate.make_slot_prefill_fn(cfg, self.max_len)
-        self._decode_steps_fn = generate.make_decode_steps_fn(cfg)
         self.prefix_cache_enabled = prefix_cache
-        if kv == "paged":
-            self._paged_prefill = generate.make_paged_prefill_fn(
+        with obslog.scope(self.fallback_ledger):
+            self._prefill = generate.make_prefill_fn(cfg, self.max_len)
+            self._decode = generate.make_decode_fn(cfg)
+            self._slot_prefill = generate.make_slot_prefill_fn(
                 cfg, self.max_len)
-            self._paged_decode = generate.make_paged_decode_fn(
-                cfg, use_pallas)
-            self._paged_decode_steps = generate.make_paged_decode_steps_fn(
-                cfg, use_pallas)
-            if prefill == "chunked" or prefix_cache:
-                # the FUSED executable: every scheduled chunk of an
-                # iteration in one launch (padded-shape-keyed memo).
-                # Prefix-cached STALL admission routes its uncached
-                # suffix through the same executable as a single-chunk
-                # launch, so a prefix hit pays one fused dispatch.
-                self._ragged_prefill = generate.make_ragged_prefill_fn(
+            self._decode_steps_fn = generate.make_decode_steps_fn(cfg)
+            if kv == "paged":
+                self._paged_prefill = generate.make_paged_prefill_fn(
+                    cfg, self.max_len)
+                self._paged_decode = generate.make_paged_decode_fn(
                     cfg, use_pallas)
-            if prefix_cache:
-                self._copy_block = generate.make_copy_block_fn(cfg)
+                self._paged_decode_steps = \
+                    generate.make_paged_decode_steps_fn(cfg, use_pallas)
+                if prefill == "chunked" or prefix_cache:
+                    # the FUSED executable: every scheduled chunk of an
+                    # iteration in one launch (padded-shape-keyed memo).
+                    # Prefix-cached STALL admission routes its uncached
+                    # suffix through the same executable as a
+                    # single-chunk launch, so a prefix hit pays one
+                    # fused dispatch.
+                    self._ragged_prefill = \
+                        generate.make_ragged_prefill_fn(cfg, use_pallas)
+                if prefix_cache:
+                    self._copy_block = generate.make_copy_block_fn(cfg)
         # AOT warm keys: the factory memo shares JitExecutables across
         # same-cfg engines, so every key carries the dims that fix this
         # engine's array shapes — two engines with identical dims share
@@ -487,25 +494,31 @@ class ServingEngine:
         self.decode_steps_total = 0
         self.decode_dispatch_trace = []
         # the jnp-fallback warning is one-time PER SERVE (a process
-        # running many engines must not mask later serves' fallbacks)
+        # running many engines must not mask later serves' fallbacks);
+        # re-arm this engine's scoped ledger the same way
         generate.reset_fallback_warning()
+        self.fallback_ledger.reset(generate.FALLBACK_KEY)
         if not self.persist_prefix_cache:
             # default: the device page pool is rebuilt per serve, so
             # cached block ids must not outlive it.  With persistence
             # the pool, allocator and index survive (the continuous
             # setup reuses them and resets the per-serve counters).
             self.prefix_cache = None
-        try:
-            self._worker = CompletionWorker(
-                metrics=self.obs.metrics if self.obs is not None else None)
-            if self.mode == "continuous":
-                if self.prefill == "chunked":
-                    return self._serve_continuous_chunked(requests)
-                return self._serve_continuous(requests)
-            return self._serve_batch(requests)
-        finally:
-            self._worker.close()
-            self._worker = None
+        # serve-time fallbacks (AOT warmup failure, late kernel
+        # fallbacks) land in this engine's own ledger
+        with obslog.scope(self.fallback_ledger):
+            try:
+                self._worker = CompletionWorker(
+                    metrics=self.obs.metrics
+                    if self.obs is not None else None)
+                if self.mode == "continuous":
+                    if self.prefill == "chunked":
+                        return self._serve_continuous_chunked(requests)
+                    return self._serve_continuous(requests)
+                return self._serve_batch(requests)
+            finally:
+                self._worker.close()
+                self._worker = None
 
     def _result(self, done: List[prio.SimTask], n: int) -> Dict:
         ps = (self.prefix_cache.stats()
@@ -563,10 +576,10 @@ class ServingEngine:
             "queue_wait_p90": qw_h.quantile(0.90),
             "queue_wait_p99": qw_h.quantile(0.99),
             # countable silent degradations (repro.obs.log): jnp-kernel
-            # fallback at factory build, AOT warmup failure — the delta
-            # of the process-wide ledger since this engine's __init__
-            "fallback_events": obslog.fallback_count()
-                               - self._fallback_base,
+            # fallback at factory build, AOT warmup failure — counted
+            # by THIS engine's scoped ledger, so R replicas in one
+            # process each report only their own events
+            "fallback_events": self.fallback_ledger.count(),
             # wall-clock the obs emitters spent recording (0.0 with
             # obs=None) — the measured-overhead guard: recording happens
             # outside the timed device regions, so it never perturbs the

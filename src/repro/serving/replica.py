@@ -1,0 +1,160 @@
+"""Multi-replica serving: R independent engines behind the Router.
+
+``ReplicatedEngine`` owns R ``ServingEngine`` instances — each with
+its OWN KV pool, ``BlockAllocator``, ``PrefixCache`` and continuous
+decode loop (nothing is shared but the model parameters, the policy
+object and the observability bundle) — and a front-end
+``repro.serving.router.Router`` that places every arriving request on
+exactly one replica.
+
+Placement protocol (the engine half of the parity discipline with
+``repro.core.simulator.simulate_replicated``):
+
+  1. requests are sorted by arrival (stable, as every serve loop does);
+  2. for each request, the front-end computes the router inputs the
+     simulator computes for its twin task — ``u`` from the offline
+     profile's predictor (the engine's own ``_to_sim_task`` recipe) and
+     ``need`` from the paged admission gate's reservation formula
+     (``blocks_for_tokens(input_bucket + cap - 1, block_size)``);
+  3. ``Router.place`` scores per-replica ``ReplicaView``s built from
+     placement bookkeeping (placed counts, running ``u_load`` sums,
+     pool capacities).  On all-at-t0 traces every placement precedes
+     any engine work, so these views are bitwise identical to the
+     simulator's live views and the decisions parity-match;
+  4. a ``route`` event ``{replica, score, policy}`` fires per placement
+     (R > 1 only — R=1 traces stay byte-identical to single-engine);
+  5. each replica then serves its group with ``obs.replica_label`` set
+     (R > 1 only), so every event/counter/SLO observation lands in that
+     replica's parity substream
+     (``TraceRecorder.parity_events(replica=r)``).
+
+Device mapping is metadata, not magic: ``replica_devices()`` exposes
+``repro.launch.mesh.replica_groups`` — contiguous data-parallel device
+slices when the host has >= R devices, shared-device (thread-level)
+replicas otherwise (the CPU case: R engine instances time-share one
+host device, which is exactly what this in-process front-end models).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.kvcache import blocks_for_tokens
+from repro.obs import Observability
+
+from .engine import Request, ServingEngine
+from .router import ReplicaView, Router
+
+
+class ReplicatedEngine:
+    """R independent ``ServingEngine`` replicas behind one ``Router``.
+
+    ``engine_kwargs`` forward verbatim to every replica's
+    ``ServingEngine`` constructor (equal pools — ``kv_num_blocks`` is
+    PER replica, as in ``simulate_replicated``).
+    """
+
+    def __init__(self, params, cfg, policy, profile, *,
+                 replicas: int = 1,
+                 router: Optional[Router] = None,
+                 obs: Optional[Observability] = None,
+                 **engine_kwargs):
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        self.R = int(replicas)
+        self.router = router if router is not None else Router(self.R)
+        if self.router.R != self.R:
+            raise ValueError(f"router expects R={self.router.R}, got "
+                             f"replicas={self.R}")
+        self.obs = obs
+        self.profile = profile
+        self.engines = [ServingEngine(params, cfg, policy, profile,
+                                      obs=obs, **engine_kwargs)
+                        for _ in range(self.R)]
+        self.placements: List[int] = []
+
+    # ------------------------------------------------------------------
+    def replica_devices(self) -> List[list]:
+        """Device group per replica (``launch.mesh.replica_groups``)."""
+        from repro.launch.mesh import replica_groups
+        return replica_groups(self.R)
+
+    def _need(self, req: Request) -> int:
+        """The arrival's worst-case block reservation — the SAME
+        formula the paged admission gate applies (0 when unpaged)."""
+        eng = self.engines[0]
+        if eng.kv != "paged":
+            return 0
+        return blocks_for_tokens(eng.input_bucket + eng._cap(req) - 1,
+                                 eng.kv_block_size)
+
+    # ------------------------------------------------------------------
+    def serve(self, requests: Sequence[Request]) -> Dict:
+        """Place every request, then serve each replica's group.
+
+        Returns a pool-level result dict wrapping the per-replica
+        ``ServingEngine`` results (``None`` for a replica that received
+        no requests — an idle replica runs nothing).
+        """
+        reqs = sorted(requests, key=lambda q: q.arrival)
+        label = self.obs is not None and self.R > 1
+        placed: List[List[Request]] = [[] for _ in range(self.R)]
+        u_placed: List[List[float]] = [[] for _ in range(self.R)]
+        placements: List[int] = []
+        for req in reqs:
+            # router inputs, computed exactly as the simulator twin
+            # computes them for its SimTask
+            u = float(max(self.profile.predictor.score(req.text), 0.0))
+            need = self._need(req)
+            views = [ReplicaView(
+                replica=r,
+                queued=len(placed[r]),
+                active=0,
+                free_blocks=(self.engines[r].kv_num_blocks
+                             if self.engines[r].kv == "paged" else 0),
+                num_blocks=(self.engines[r].kv_num_blocks
+                            if self.engines[r].kv == "paged" else 0),
+                u_load=float(sum(u_placed[r])),
+                is_bulk=self.router.is_bulk(r))
+                for r in range(self.R)]
+            d = self.router.place(views, u=u, cls=req.traffic_class,
+                                  need=need)
+            placements.append(d.replica)
+            if label:
+                self.obs.event("route", req.arrival, req.task_id, None,
+                               replica=d.replica, score=d.score,
+                               policy=d.policy)
+            placed[d.replica].append(req)
+            u_placed[d.replica].append(u)
+        self.placements = placements
+
+        results: List[Optional[Dict]] = []
+        for r in range(self.R):
+            if not placed[r]:
+                results.append(None)
+                continue
+            if label:
+                self.obs.replica_label = r
+            try:
+                results.append(self.engines[r].serve(placed[r]))
+            finally:
+                if self.obs is not None:
+                    self.obs.replica_label = None
+        return {
+            "mode": "replicated",
+            "replicas": self.R,
+            "router_policy": self.router.policy,
+            "n_tasks": len(reqs),
+            "placements": placements,
+            "placement_counts": [len(g) for g in placed],
+            "per_replica": results,
+            "completion_orders": [
+                res["completion_order"] if res is not None else []
+                for res in results],
+            "rejected_for_memory": sum(
+                res["rejected_for_memory"] for res in results
+                if res is not None),
+            "fallback_events": sum(
+                res["fallback_events"] for res in results
+                if res is not None),
+        }

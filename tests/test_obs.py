@@ -288,6 +288,46 @@ def test_rate_limited_logger():
         assert rl.count("k") == 6               # ...without clearing counts
 
 
+def test_warn_once_scoped_ledgers_emit_per_scope():
+    """PR 9 regression: with R engines in one process, a fresh
+    replica's FIRST fallback must not be rate-suppressed just because
+    an earlier replica logged the same key — the innermost scoped
+    ledger owns the emission decision, while occurrences count in the
+    global ledger AND every active scope."""
+    from repro.obs import log as obslog
+
+    lg = logging.getLogger("test.obs.scoped")
+    key = "test-scoped-key"                     # unique: no bleed-over
+    base_global = obslog.FALLBACKS.count(key)
+    led_a, led_b = RateLimitedLogger(), RateLimitedLogger()
+    with _capture(lg) as records:
+        with obslog.scope(led_a):
+            assert obslog.warn_once(lg, key, "a first")
+            assert not obslog.warn_once(lg, key, "a repeat")
+        # a DIFFERENT ledger's first occurrence emits again, within the
+        # global ledger's rate-limit interval
+        with obslog.scope(led_b):
+            assert obslog.warn_once(lg, key, "b first")
+        assert len(records) == 2
+    assert led_a.count(key) == 2
+    assert led_b.count(key) == 1
+    assert obslog.FALLBACKS.count(key) - base_global == 3
+
+
+def test_warn_once_outside_scope_not_attributed_to_engine(run):
+    """Process-global fallback noise (another replica, an unscoped
+    caller) must not inflate an engine's own fallback accounting."""
+    from repro.obs import log as obslog
+
+    lg = logging.getLogger("test.obs.unscoped")
+    eng, res, _ = run()
+    before = eng.fallback_ledger.count()
+    with _capture(lg):
+        obslog.warn_once(lg, "jnp-fallback", "unscoped noise")
+    assert eng.fallback_ledger.count() == before
+    assert res["fallback_events"] == before
+
+
 class _capture:
     def __init__(self, logger):
         self.logger, self.records = logger, []

@@ -460,3 +460,88 @@ def test_ring_cache_decode_continuation(cap, seq, extra):
         sp = sp.at[pos % cap].set(pos)
     want = transformer.prefill_slot_pos(cap, seq + extra)
     np.testing.assert_array_equal(np.asarray(sp), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# multi-replica router invariants (PR 9) — deterministic mirrors live in
+# tests/test_router.py and always run
+# ---------------------------------------------------------------------------
+
+
+def _classed_sim_tasks(us, arrivals, classes):
+    import types
+    return [prio.SimTask(
+        task=types.SimpleNamespace(task_id=i, traffic_class=classes[i]),
+        u=float(u), r=float(r), d=float(r) + 4.0, input_len=5.0,
+        true_out_len=max(1, int(u)))
+        for i, (u, r) in enumerate(zip(us, arrivals))]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    us=st.lists(st.floats(0.5, 30.0), min_size=1, max_size=40),
+    seed=st.integers(0, 10),
+    R=st.integers(1, 5),
+    rpolicy=st.sampled_from(["round_robin", "least_queue", "rtlm"]),
+    bulk=st.booleans(),
+)
+def test_router_conservation(us, seed, R, rpolicy, bulk):
+    """simulate_replicated places every request on exactly one replica
+    inside its eligibility set, loses and duplicates nothing, and the
+    bulk slice never hosts interactive traffic."""
+    from repro.serving.router import Router
+
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(0.3, len(us)))
+    classes = ["batch" if rng.random() < 0.3 else "interactive"
+               for _ in us]
+    tasks = _classed_sim_tasks(us, arrivals, classes)
+    use_bulk = bulk and R > 1
+    router = Router(R, rpolicy,
+                    bulk_replicas=(R - 1,) if use_bulk else (),
+                    bulk_classes=("batch",) if use_bulk else ())
+    pcfg = sched.PolicyConfig(u_scale=30.0, tau=35.0)
+    pol = sched.POLICIES["rt-lm"](PERSONA, pcfg)
+    res = simulator.simulate_replicated(
+        tasks, pol, R=R, router=router, num_slots=4,
+        kv_block_size=4, kv_num_blocks=64, prompt_len=8)
+    assert len(res.placements) == len(us)
+    assert sum(res.placement_counts()) == len(us)
+    done_ids = sorted(t.task.task_id for rep in res.replicas
+                      for t in rep.tasks)
+    assert done_ids == list(range(len(us)))       # conservation
+    for i, r in enumerate(res.placements):
+        assert r in router.eligible(classes[i])
+        if use_bulk:
+            assert (r == R - 1) == (classes[i] == "batch")
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 48),
+    R=st.integers(1, 5),
+    seed=st.integers(0, 10),
+)
+def test_replicated_work_conservation_least_queue(n, R, seed):
+    """All-at-t0 arrivals under least_queue: placements balance to
+    within one request (round-robin by construction of the tie-break),
+    every task completes exactly once, and the pool-level percentiles
+    are ordered."""
+    from repro.serving.router import Router
+
+    rng = np.random.default_rng(seed)
+    us = rng.uniform(0.5, 20.0, size=n)
+    tasks = _classed_sim_tasks(us, [0.0] * n, [""] * n)
+    pcfg = sched.PolicyConfig(u_scale=30.0, tau=35.0)
+    pol = sched.POLICIES["fifo"](PERSONA, pcfg)
+    res = simulator.simulate_replicated(
+        tasks, pol, R=R, router=Router(R, "least_queue"),
+        num_slots=4, kv_block_size=4, kv_num_blocks=64, prompt_len=8)
+    counts = res.placement_counts()
+    assert sum(counts) == n
+    assert max(counts) - min(counts) <= 1         # work conservation
+    done_ids = sorted(t.task.task_id for rep in res.replicas
+                      for t in rep.tasks)
+    assert done_ids == list(range(n))
+    assert res.ttft_p50 <= res.ttft_p99 + 1e-9
+    assert res.queue_wait_p50 <= res.queue_wait_p99 + 1e-9

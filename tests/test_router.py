@@ -1,0 +1,467 @@
+"""Router-hardening battery (ISSUE 9).
+
+Acceptance properties:
+
+  * per-policy placement — ``round_robin`` cycles each eligibility
+    group independently, ``least_queue`` picks the shallowest queue
+    with ties to the lowest replica id, and the ``rtlm`` score is
+    monotone increasing in predicted uncertainty and decreasing in
+    KV-pool headroom;
+  * bulk-slice isolation — over a 500-request flash-crowd trace,
+    interactive requests NEVER land on a bulk replica and bulk-class
+    requests never leave the slice;
+  * engine-vs-sim parity — ``ReplicatedEngine`` and
+    ``simulate_replicated`` drive identically-configured ``Router``
+    instances over the same workload and produce bit-identical
+    placements, route-event streams, per-replica parity event streams,
+    metrics counters and SLO parity counters at R in {1, 2, 4} for
+    both the fifo and rt-lm scheduling policies;
+  * R=1 reduction — the replicated path at R=1 is byte-identical to
+    the single-engine / ``simulate_continuous`` stream (no ``route``
+    events, no ``replica`` fields, no ``rN.*`` counter mirrors);
+  * conservation — every request is placed on exactly one replica
+    within its eligibility set, and ``least_queue`` over an all-at-t0
+    trace balances placements to within one request (the deterministic
+    mirrors of the hypothesis properties in tests/test_properties.py).
+"""
+
+import dataclasses
+import types
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import configs
+from repro.core import datagen, personas, priority as prio
+from repro.core import scheduler as sched, simulator, workload
+from repro.launch.mesh import replica_groups
+from repro.obs import Observability
+from repro.obs.slo import SLOSpec
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.replica import ReplicatedEngine
+from repro.serving.router import (ROUTER_POLICIES, ReplicaView,
+                                  RouteDecision, Router)
+
+SLOTS = 3
+MAX_NEW = 6
+BUCKET = 8
+BS = 4
+BLOCKS = 64                       # per-replica pool (generous: no rejects)
+CAPS = [2, 6, 1, 4, 6, 2, 3, 5, 1, 6, 2, 4]
+CLS = ["interactive", "batch"] * (len(CAPS) // 2)
+# judgment-invariant targets: an empty spec always attains, -1.0 never —
+# so slo.* parity counters are deterministic regardless of wall clocks
+TARGETS = {"interactive": SLOSpec(),
+           "batch": SLOSpec(ttft_s=-1.0, itl_s=-1.0, e2e_s=-1.0,
+                            queue_wait_s=-1.0)}
+
+
+# ---------------------------------------------------------------------------
+# pure router unit tests (no jax, no model)
+# ---------------------------------------------------------------------------
+
+
+def _views(*queued, free=32, num=32, u_loads=None, bulk=()):
+    return [ReplicaView(replica=r, queued=q, free_blocks=free,
+                        num_blocks=num,
+                        u_load=(u_loads[r] if u_loads else 0.0),
+                        is_bulk=r in bulk)
+            for r, q in enumerate(queued)]
+
+
+def test_round_robin_cycles():
+    router = Router(3, "round_robin")
+    picks = [router.place(_views(0, 0, 0)).replica for _ in range(7)]
+    assert picks == [0, 1, 2, 0, 1, 2, 0]
+
+
+def test_round_robin_bulk_slice_has_independent_cursor():
+    router = Router(4, "round_robin", bulk_replicas=(2, 3),
+                    bulk_classes=("batch",))
+    v = _views(0, 0, 0, 0, bulk=(2, 3))
+    inter = [router.place(v, cls="interactive").replica for _ in range(4)]
+    bulk = [router.place(v, cls="batch").replica for _ in range(4)]
+    assert inter == [0, 1, 0, 1]
+    assert bulk == [2, 3, 2, 3]
+
+
+def test_least_queue_picks_min_ties_to_lowest_id():
+    router = Router(3, "least_queue")
+    assert router.place(_views(2, 1, 3)).replica == 1
+    d = router.place(_views(2, 1, 1))
+    assert d.replica == 1 and d.score == 1.0
+    assert router.place(_views(0, 0, 0)).replica == 0   # all-tie -> id 0
+
+
+def test_rtlm_score_monotone_in_u():
+    router = Router(2, "rtlm")
+    v = ReplicaView(replica=0, queued=2, free_blocks=8, num_blocks=32,
+                    u_load=4.0)
+    scores = [router.score(v, u=u, need=3) for u in (0.0, 1.0, 4.0, 16.0)]
+    assert scores == sorted(scores)
+    assert scores[0] < scores[-1]
+
+
+def test_rtlm_score_monotone_in_free_blocks():
+    router = Router(2, "rtlm")
+    scores = [router.score(
+        ReplicaView(replica=0, queued=2, free_blocks=f, num_blocks=32,
+                    u_load=4.0), u=2.0, need=6)
+        for f in (32, 8, 2, 1)]
+    assert scores == sorted(scores)           # less headroom, higher cost
+    assert scores[0] < scores[-1]
+
+
+def test_rtlm_steers_away_from_loaded_replica():
+    router = Router(2, "rtlm")
+    # equal queues, replica 0 carries far more predicted work
+    v = _views(2, 2, u_loads=[40.0, 2.0])
+    assert router.place(v, u=8.0, need=2).replica == 1
+    # equal u_load, replica 1 is memory-tight
+    v = [ReplicaView(replica=0, queued=2, free_blocks=30, num_blocks=32),
+         ReplicaView(replica=1, queued=2, free_blocks=1, num_blocks=32)]
+    assert router.place(v, u=8.0, need=8).replica == 0
+
+
+def test_rtlm_ties_to_lowest_id():
+    router = Router(3, "rtlm")
+    assert router.place(_views(1, 1, 1), u=2.0, need=2).replica == 0
+
+
+def test_admissibility_gate_excludes_undersized_pools():
+    router = Router(2, "least_queue")
+    v = [ReplicaView(replica=0, queued=0, free_blocks=4, num_blocks=4),
+         ReplicaView(replica=1, queued=5, free_blocks=64, num_blocks=64)]
+    # need=10 can never fit replica 0's pool -> 1 despite deeper queue
+    assert router.place(v, need=10).replica == 1
+    # num_blocks == 0 marks an unpaged replica: gate inapplicable
+    v[0] = ReplicaView(replica=0, queued=0, free_blocks=0, num_blocks=0)
+    assert router.place(v, need=10).replica == 0
+
+
+def test_place_raises_when_no_replica_is_eligible():
+    router = Router(2, "least_queue")
+    v = [ReplicaView(replica=0, queued=0, free_blocks=4, num_blocks=4),
+         ReplicaView(replica=1, queued=0, free_blocks=4, num_blocks=4)]
+    with pytest.raises(ValueError, match="no eligible replica"):
+        router.place(v, need=10)
+
+
+def test_eligibility_sets():
+    router = Router(4, "round_robin", bulk_replicas=(3,),
+                    bulk_classes=("batch",))
+    assert router.eligible("interactive") == [0, 1, 2]
+    assert router.eligible("") == [0, 1, 2]
+    assert router.eligible("batch") == [3]
+    assert Router(4, "round_robin").eligible("batch") == [0, 1, 2, 3]
+    assert router.is_bulk(3) and not router.is_bulk(0)
+
+
+def test_router_validation():
+    with pytest.raises(ValueError, match="R must be"):
+        Router(0)
+    with pytest.raises(ValueError, match="unknown router policy"):
+        Router(2, "nope")
+    with pytest.raises(ValueError, match="out of range"):
+        Router(2, bulk_replicas=(5,))
+    with pytest.raises(ValueError, match="covers every replica"):
+        Router(2, bulk_replicas=(0, 1))
+    with pytest.raises(ValueError, match="u_scale"):
+        Router(2, u_scale=0.0)
+    with pytest.raises(ValueError, match="expected 3 views"):
+        Router(3).place(_views(0, 0))
+    assert "rtlm" in ROUTER_POLICIES
+    d = RouteDecision(replica=0, score=1.0, policy="rtlm")
+    assert d.replica == 0
+
+
+# ---------------------------------------------------------------------------
+# simulator-level: bulk isolation, R=1 reduction, conservation mirrors
+# ---------------------------------------------------------------------------
+
+PERSONA = dataclasses.replace(personas.get_persona("bart"),
+                              batch_size=SLOTS)
+PCFG = sched.PolicyConfig(u_scale=30.0, tau=1e18)
+SIM_KW = dict(xi=0.5, per_task_overhead_s=0.01, num_slots=SLOTS,
+              kv_block_size=BS, kv_num_blocks=BLOCKS, prompt_len=BUCKET)
+
+
+def _mk_tasks(n, classes=None, arrivals=None, seed=0):
+    rng = np.random.default_rng(seed)
+    us = rng.uniform(0.5, 12.0, size=n)
+    if arrivals is None:
+        arrivals = [0.0] * n
+    out = []
+    for i in range(n):
+        cls = classes[i] if classes else ""
+        task = types.SimpleNamespace(task_id=i, traffic_class=cls)
+        out.append(prio.SimTask(task=task, u=float(us[i]),
+                                r=float(arrivals[i]), d=1e9,
+                                input_len=float(BUCKET),
+                                true_out_len=1 + int(us[i]) % MAX_NEW))
+    return out
+
+
+def test_bulk_isolation_over_flash_crowd_trace():
+    n = 500
+    classes_decl = workload.make_traffic_classes({
+        "interactive": {"weight": 3.0},
+        "batch": {"weight": 1.0, "bulk": True},
+    })
+    assert workload.bulk_class_names(classes_decl) == ["batch"]
+    cls = workload.assign_classes(n, classes_decl, seed=1)
+    arrivals = workload.flash_crowd_trace(n, seed=1)
+    tasks = _mk_tasks(n, classes=cls, arrivals=arrivals, seed=1)
+    router = Router(4, "rtlm", bulk_replicas=(3,),
+                    bulk_classes=tuple(workload.bulk_class_names(
+                        classes_decl)))
+    res = simulator.simulate_replicated(
+        tasks, sched.POLICIES["rt-lm"](PERSONA, PCFG), R=4,
+        router=router, **SIM_KW)
+    assert res.n_tasks == n
+    assert len(res.placements) == n
+    assert sum(res.placement_counts()) == n
+    assert sum(len(r.tasks) for r in res.replicas) == n   # conservation
+    for i in range(n):
+        if cls[i] == "batch":
+            assert res.placements[i] == 3
+        else:
+            assert res.placements[i] != 3
+    # the interactive slice actually spreads (no degenerate pile-up)
+    inter_counts = res.placement_counts()[:3]
+    assert all(c > 0 for c in inter_counts)
+
+
+def test_replicated_r1_reduces_to_simulate_continuous():
+    policy = sched.POLICIES["rt-lm"](PERSONA, PCFG)
+    arrivals = workload.constant_rate_trace(40, 120.0, seed=3)
+    single_obs, rep_obs = Observability(), Observability()
+    single = simulator.simulate_continuous(
+        _mk_tasks(40, arrivals=arrivals, seed=3), policy,
+        obs=single_obs, **SIM_KW)
+    rep = simulator.simulate_replicated(
+        _mk_tasks(40, arrivals=arrivals, seed=3), policy, R=1,
+        router=Router(1, "rtlm"), obs=rep_obs, **SIM_KW)
+    assert rep.placements == [0] * 40
+    assert single.summary() == rep.replicas[0].summary()
+    # byte-identical streams: no route events, no replica fields
+    se = single_obs.trace.parity_events()
+    re_ = rep_obs.trace.parity_events()
+    assert se == re_
+    assert not any(e[0] == "route" for e in re_)
+    assert not any("replica" in dict(e[3]) for e in re_)
+    assert single_obs.metrics.counters() == rep_obs.metrics.counters()
+    assert not any(k.startswith("r0.")
+                   for k in rep_obs.metrics.counters())
+
+
+def test_least_queue_work_conservation_deterministic():
+    """Deterministic mirror of the hypothesis property: all-at-t0
+    arrivals under least_queue balance placements to within one, place
+    each task exactly once, and every task completes."""
+    for n, R in ((17, 4), (24, 3), (5, 2)):
+        tasks = _mk_tasks(n, seed=n)
+        res = simulator.simulate_replicated(
+            tasks, sched.POLICIES["fifo"](PERSONA, PCFG), R=R,
+            router=Router(R, "least_queue"), **SIM_KW)
+        counts = res.placement_counts()
+        assert sum(counts) == n
+        assert max(counts) - min(counts) <= 1
+        done_ids = sorted(t.task.task_id for r in res.replicas
+                          for t in r.tasks)
+        assert done_ids == list(range(n))
+
+
+def test_replicated_rejects_bad_config():
+    tasks = _mk_tasks(4)
+    policy = sched.POLICIES["fifo"](PERSONA, PCFG)
+    with pytest.raises(ValueError, match="R must be"):
+        simulator.simulate_replicated(tasks, policy, R=0, **SIM_KW)
+    with pytest.raises(ValueError, match="router expects"):
+        simulator.simulate_replicated(tasks, policy, R=2,
+                                      router=Router(3), **SIM_KW)
+
+
+def test_replica_groups_cpu_and_sliced():
+    # this host: replicas wrap round-robin onto the available devices
+    groups = replica_groups(4)
+    assert len(groups) == 4
+    assert all(len(g) == 1 for g in groups) \
+        or all(len(g) >= 1 for g in groups)
+    # explicit device lists: contiguous equal slices, leftovers unused
+    devs = [f"d{i}" for i in range(8)]
+    assert replica_groups(2, devices=devs) == [devs[:4], devs[4:]]
+    assert replica_groups(3, devices=devs) == [["d0", "d1"],
+                                               ["d2", "d3"],
+                                               ["d4", "d5"]]
+    assert replica_groups(4, devices=["d0"]) == [["d0"]] * 4
+    with pytest.raises(ValueError, match="R must be"):
+        replica_groups(0)
+    with pytest.raises(RuntimeError, match="no devices"):
+        replica_groups(1, devices=[])
+
+
+# ---------------------------------------------------------------------------
+# engine-vs-sim parity at R in {1, 2, 4} x {fifo, rt-lm}
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get_smoke_config("starcoder2-3b")
+    from repro.models import model as model_lib
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    corpus = datagen.generate_corpus(
+        datagen.VARIANCE_MIXES["normal"], 64, seed=0)
+    train, test = datagen.train_test_split(corpus, train_frac=0.5)
+    persona = dataclasses.replace(personas.get_persona("bart"),
+                                  batch_size=SLOTS)
+    profile = sched.offline_profile(train, persona, epochs=15)
+    texts = [test[i % 4].text for i in range(len(CAPS))]
+    return cfg, params, persona, profile, texts
+
+
+def _requests(texts):
+    return [Request(text=t, arrival=0.0, task_id=i, max_new_tokens=c,
+                    traffic_class=CLS[i])
+            for i, (t, c) in enumerate(zip(texts, CAPS))]
+
+
+def _sim_tasks(texts, profile, persona, xi=2.0):
+    out = []
+    for i, (t, c) in enumerate(zip(texts, CAPS)):
+        u = profile.predictor.score(t)
+        d = prio.priority_point(0.0, len(t.split()), persona.phi,
+                                None, xi=xi)
+        out.append(prio.SimTask(
+            task=Request(text=t, arrival=0.0, task_id=i,
+                         traffic_class=CLS[i]),
+            u=float(max(u, 0.0)), r=0.0, d=d,
+            input_len=float(len(t.split())), true_out_len=int(c)))
+    return out
+
+
+def _make_obs():
+    return Observability(slo=dict(TARGETS))
+
+
+def _router(R):
+    """Identically-configured Router per side — rtlm placement so the
+    float scores in the route events are parity-compared too."""
+    kw = dict(bulk_replicas=(R - 1,), bulk_classes=("batch",)) \
+        if R > 1 else {}
+    return Router(R, "rtlm", **kw)
+
+
+@pytest.fixture(scope="module")
+def replicated_run(setup):
+    """Memoized replicated serve: (R, policy) -> (engine, result, obs),
+    keeping the module's device time bounded."""
+    cfg, params, persona, profile, texts = setup
+    pcfg = dataclasses.replace(profile.policy_config(), tau=1e18)
+    cache = {}
+
+    def _run(R, policy_name):
+        key = (R, policy_name)
+        if key not in cache:
+            obs = _make_obs()
+            eng = ReplicatedEngine(
+                params, cfg, sched.POLICIES[policy_name](persona, pcfg),
+                profile, replicas=R, router=_router(R), obs=obs,
+                input_bucket=BUCKET, max_new_tokens=MAX_NEW,
+                mode="continuous", eos_id=-1, kv="paged",
+                kv_block_size=BS, num_slots=SLOTS, kv_num_blocks=BLOCKS)
+            cache[key] = (eng, eng.serve(_requests(texts)), obs)
+        return cache[key]
+
+    return _run
+
+
+@pytest.mark.parametrize("R", [1, 2, 4])
+@pytest.mark.parametrize("policy_name", ["fifo", "rt-lm"])
+def test_engine_vs_sim_replicated_parity(setup, replicated_run, R,
+                                         policy_name):
+    """The tentpole acceptance: engine pool and simulator pool drive
+    identically-configured routers over the same workload and produce
+    bit-identical placements, route events, per-replica event streams
+    and counters."""
+    cfg, params, persona, profile, texts = setup
+    pcfg = dataclasses.replace(profile.policy_config(), tau=1e18)
+    eng, res, eobs = replicated_run(R, policy_name)
+    sobs = _make_obs()
+    sim = simulator.simulate_replicated(
+        _sim_tasks(texts, profile, persona),
+        sched.POLICIES[policy_name](persona, pcfg), R=R,
+        router=_router(R), obs=sobs,
+        num_slots=SLOTS, kv_block_size=BS, kv_num_blocks=BLOCKS,
+        prompt_len=BUCKET)
+
+    # placements and their counts
+    assert res["placements"] == sim.placements
+    assert res["placement_counts"] == sim.placement_counts()
+    # bulk isolation on the engine side too
+    if R > 1:
+        for i, cls in enumerate(CLS):
+            if cls == "batch":
+                assert res["placements"][i] == R - 1
+            else:
+                assert res["placements"][i] != R - 1
+
+    # route-event subsequences (global order = arrival order, both
+    # sides; scores are floats and must match bitwise)
+    eroutes = [e for e in eobs.trace.parity_events() if e[0] == "route"]
+    sroutes = [e for e in sobs.trace.parity_events() if e[0] == "route"]
+    assert eroutes == sroutes
+    assert len(eroutes) == (len(CAPS) if R > 1 else 0)
+
+    # per-replica lifecycle streams and completion orders
+    for r in range(R):
+        assert eobs.trace.parity_events(replica=r) \
+            == sobs.trace.parity_events(replica=r), f"replica {r}"
+        assert res["completion_orders"][r] \
+            == [t.task.task_id for t in sim.replicas[r].tasks]
+
+    # counters (includes the rN.* per-replica mirrors) and SLO splits
+    assert eobs.metrics.counters() == sobs.metrics.counters()
+    assert eobs.slo.parity_counters() == sobs.slo.parity_counters()
+    assert res["rejected_for_memory"] == sum(
+        r.kv_rejected for r in sim.replicas)
+
+
+def test_r1_replicated_byte_identical_to_single_engine(setup,
+                                                       replicated_run):
+    """R=1 is not 'almost' the single-engine stream — it IS the
+    single-engine stream: same events, same counters, no route events,
+    no replica fields, no rN.* mirrors."""
+    cfg, params, persona, profile, texts = setup
+    pcfg = dataclasses.replace(profile.policy_config(), tau=1e18)
+    _, rep_res, rep_obs = replicated_run(1, "rt-lm")
+    obs = _make_obs()
+    eng = ServingEngine(
+        params, cfg, sched.POLICIES["rt-lm"](persona, pcfg), profile,
+        input_bucket=BUCKET, max_new_tokens=MAX_NEW, mode="continuous",
+        eos_id=-1, kv="paged", kv_block_size=BS, num_slots=SLOTS,
+        kv_num_blocks=BLOCKS, obs=obs)
+    res = eng.serve(_requests(texts))
+    ee = obs.trace.parity_events()
+    re_ = rep_obs.trace.parity_events()
+    assert ee == re_
+    assert not any(e[0] == "route" for e in re_)
+    assert not any("replica" in dict(e[3]) for e in re_)
+    assert obs.metrics.counters() == rep_obs.metrics.counters()
+    assert not any(k.startswith("r0.")
+                   for k in rep_obs.metrics.counters())
+    assert res["completion_order"] == rep_res["completion_orders"][0]
+
+
+def test_replicated_engine_validation(setup):
+    cfg, params, persona, profile, texts = setup
+    pcfg = dataclasses.replace(profile.policy_config(), tau=1e18)
+    policy = sched.POLICIES["fifo"](persona, pcfg)
+    with pytest.raises(ValueError, match="replicas must be"):
+        ReplicatedEngine(params, cfg, policy, profile, replicas=0)
+    with pytest.raises(ValueError, match="router expects"):
+        ReplicatedEngine(params, cfg, policy, profile, replicas=2,
+                         router=Router(3))
