@@ -17,9 +17,9 @@ import argparse
 import time
 import traceback
 
-from . import (common, continuous_vs_batch, kernel_bench, paper_tables,
-               prefill_interference, prefix_cache, roofline_report,
-               router_policies, slo_calibration)
+from . import (chaos_failover, common, continuous_vs_batch, kernel_bench,
+               paper_tables, prefill_interference, prefix_cache,
+               roofline_report, router_policies, slo_calibration)
 
 
 def run_paper_tables(only=None):
@@ -118,6 +118,8 @@ def run_continuous(only=None, seed=0):
         slo_calibration.main(seed=seed)
     if only is None or only == "router_policies":
         router_policies.main(seed=seed)
+    if only is None or only == "chaos_failover":
+        chaos_failover.main(seed=seed)
 
 
 def main(argv=None):

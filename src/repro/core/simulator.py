@@ -155,6 +155,18 @@ class SimResult:
     slo_attainment: Dict = dataclasses.field(default_factory=dict)
     calibration: Dict = dataclasses.field(default_factory=dict)
     health_trace: List = dataclasses.field(default_factory=list)
+    # failure-aware serving (serving.faults; engine mirror in
+    # ServingEngine._result): requests dropped by the pre-admission
+    # deadline / pressure shed pass, and whether the replica crashed
+    # mid-serve.  Zero/False without a fault plan, so unfaulted results
+    # stay field-for-field identical to pre-fault runs.
+    timed_out: int = 0
+    shed: int = 0
+    crashed: bool = False
+    #: KV blocks still reserved when the run ended — 0 under every
+    #: fault schedule (crash eviction frees them), asserted by the
+    #: no-leak property test
+    kv_blocks_in_use: int = 0
 
     # ---- paper metrics ------------------------------------------------
     @property
@@ -432,6 +444,7 @@ class _ReplicaSim:
                  prompt_tokens=None,
                  decode_steps: int = 1,
                  prefix_state: Optional[PrefixState] = None,
+                 faults=None,
                  obs=None) -> None:
         self.policy = policy
         self.persona = policy.persona
@@ -463,6 +476,17 @@ class _ReplicaSim:
             raise ValueError(
                 f"decode_steps must be >= 1, got {decode_steps}")
         self.decode_steps = decode_steps
+        # failure-aware serving (serving.faults.ReplicaFaults): the
+        # pre-admission shed pass + straggler slowdowns run inside
+        # iterate(); crashes are driven from outside (the replicated
+        # driver / fault coordinator).  Restricted to the stall prefill
+        # path — the chunked packer has no engine-parity shed point.
+        self.faults = faults
+        if faults is not None and self.chunked:
+            raise ValueError('faults require prefill="stall"')
+        self.timed_out: List[SimTask] = []   # deadline-shed terminals
+        self.shed_tasks: List[SimTask] = []  # pressure-shed terminals
+        self.crashed = False
         self.pc: Optional[PrefixCache] = None
         self.alloc: Optional[BlockAllocator] = None
         if prefix_state is not None and not prefix_cache:
@@ -535,9 +559,16 @@ class _ReplicaSim:
                 f"largest task ({worst} blocks) — admission would "
                 f"deadlock")
 
+    def terminal_count(self) -> int:
+        """Requests that reached ANY terminal outcome here: completed,
+        deadline-timed-out or shed.  Crash survivors are subtracted
+        from ``delivered`` instead — they terminate elsewhere."""
+        return (len(self.done) + len(self.timed_out)
+                + len(self.shed_tasks))
+
     def has_work(self) -> bool:
         """Delivered-but-unfinished work exists on this replica."""
-        return self.delivered > len(self.done)
+        return self.delivered > self.terminal_count()
 
     def load(self) -> Dict:
         """The router's live view of this replica: placed-but-unfinished
@@ -579,6 +610,41 @@ class _ReplicaSim:
             cands.append(self.cpu.free_at)
         future = [c for c in cands if c > self.now + 1e-12]
         self.now = min(future) if future else self.now + self.xi
+
+    def crash(self) -> List[SimTask]:
+        """Replica death (serving.faults.CrashFault): every active slot
+        is evicted in slot order (its KV blocks freed — the engine does
+        the same, so allocator free-list state stays bit-identical),
+        and every unfinished request — active, queued, CPU-lane — is
+        returned as a survivor for the fault coordinator to
+        re-dispatch; ``delivered`` drops by the survivor count so the
+        replica reads as drained.  Progress (``produced`` tokens) is
+        lost: failover restarts a request from scratch on its target,
+        the standard no-KV-migration semantics."""
+        obs = self.obs
+        survivors: List[SimTask] = []
+        for s in range(self.C):
+            t = self.slots[s]
+            if t is None:
+                continue
+            if obs is not None:
+                obs.event("evict", self.now, _tid(t), self.step, slot=s)
+            if self.pc is not None:
+                self.alloc.free_sequence(id(t))
+            self.slots[s] = None
+            self.reserved[s] = 0
+            self.produced[s] = 0
+            survivors.append(t)
+        survivors += list(self.queue) + list(self.cpu_queue)
+        self.queue = []
+        self.cpu_queue = []
+        self.delivered -= len(survivors)
+        self.crashed = True
+        if obs is not None:
+            obs.event("replica_down", self.now, None, self.step,
+                      reason="crash", survivors=len(survivors))
+            obs.inc("faults.replica_down")
+        return survivors
 
     # ------------------------------------------------------------------
     def _admit_one(self, running):
@@ -765,6 +831,21 @@ class _ReplicaSim:
                                              for t in slots)
                                       else 0)
         else:
+            if self.faults is not None and self.queue:
+                # failure-aware pre-admission pass (serving.faults):
+                # doomed-request timeouts + pressure shedding — the
+                # same shed_pass call the engine's stall loop makes at
+                # the same point, so events/counters parity-match
+                from repro.serving.faults import shed_pass
+                kept, timed, dropped = shed_pass(
+                    self.queue, now=self.now, step=self.step,
+                    rf=self.faults,
+                    slo=obs.slo if obs is not None else None, obs=obs)
+                if timed or dropped:
+                    self.queue = kept
+                    self.timed_out += timed
+                    self.shed_tasks += dropped
+                    progressed = True
             # admissions into freed slots (uncertainty-aware, stalling
             # the loop for one amortized prefill per admission — and
             # one prefill LAUNCH per admission, the burst the fused
@@ -932,8 +1013,16 @@ class _ReplicaSim:
             # blocks until window end (eviction in arrears — the
             # engine's eviction-lag invariant)
             finished: List[int] = []
+            base_step = self.step - nsteps
             for j in range(nsteps):
-                self.now += persona.eta    # one decode step, all slots
+                # one decode step, all slots; a straggler fault
+                # (serving.faults.SlowFault) stretches the step's model
+                # time — wall fields are parity-stripped, so only the
+                # virtual clock bends
+                eta = persona.eta
+                if self.faults is not None:
+                    eta *= self.faults.slow_factor(base_step + j)
+                self.now += eta
                 for s in active:
                     if s in finished:
                         continue
@@ -1038,6 +1127,11 @@ class _ReplicaSim:
                          cow_copies=pstats.get("cow_copies", 0),
                          prefix_evictions=pstats.get(
                              "prefix_evictions", 0),
+                         timed_out=len(self.timed_out),
+                         shed=len(self.shed_tasks),
+                         crashed=self.crashed,
+                         kv_blocks_in_use=(sum(self.reserved)
+                                           if self.kv_model else 0),
                          **_obs_result_fields(self.obs))
 
 
@@ -1056,6 +1150,7 @@ def simulate_continuous(tasks: Sequence[SimTask],
                         prompt_tokens=None,
                         decode_steps: int = 1,
                         prefix_state: Optional[PrefixState] = None,
+                        faults=None,
                         obs=None) -> SimResult:
     """Iteration-level (continuous) batching over C decode slots.
 
@@ -1128,9 +1223,22 @@ def simulate_continuous(tasks: Sequence[SimTask],
     bit-for-bit (tests/test_obs.py::test_engine_vs_sim_event_parity).
     Only wall-clock fields (event timestamps, span durations) differ:
     the sim stamps model time, the engine stamps its virtual clock.
+
+    Failure-aware serving (``faults`` — a
+    ``repro.serving.faults.ReplicaFaults``): per-request deadlines and
+    uncertainty-aware load shedding run as a pre-admission pass, and
+    straggler slowdowns stretch decode-step model time — mirroring
+    ``ServingEngine(faults=...)`` call for call.  Crash faults need the
+    replicated driver (failover has nowhere to go at R=1) and raise
+    here.  Timed-out/shed requests are terminal: counted in
+    ``SimResult.timed_out``/``shed``, never in ``tasks``.
     """
     pending = sorted(tasks, key=lambda t: t.r)
     n_total = len(pending)
+    if faults is not None and faults.crash_at_step is not None:
+        raise ValueError("crash faults need the replicated driver "
+                         "(simulate_replicated / ReplicatedEngine) — "
+                         "failover has nowhere to go at R=1")
     rep = _ReplicaSim(policy, xi=xi,
                       per_task_overhead_s=per_task_overhead_s,
                       num_slots=num_slots, kv_block_size=kv_block_size,
@@ -1140,10 +1248,10 @@ def simulate_continuous(tasks: Sequence[SimTask],
                       prefix_cache=prefix_cache,
                       prompt_tokens=prompt_tokens,
                       decode_steps=decode_steps,
-                      prefix_state=prefix_state, obs=obs)
+                      prefix_state=prefix_state, faults=faults, obs=obs)
     rep.check_fits(pending)
     i = 0
-    while len(rep.done) < n_total:
+    while rep.terminal_count() < n_total:
         while i < n_total and pending[i].r <= rep.now + 1e-12:
             rep.deliver(pending[i])
             i += 1
@@ -1174,6 +1282,16 @@ class ReplicatedSimResult:
     queue_wait_p50: float = 0.0
     queue_wait_p90: float = 0.0
     queue_wait_p99: float = 0.0
+    # failure-aware serving (serving.faults; all zero/empty without a
+    # fault plan — unfaulted results stay field-for-field identical):
+    # pool-level terminal + recovery accounting.  A dead-lettered
+    # arrival records placement -1.
+    timed_out: int = 0
+    shed: int = 0
+    retries: int = 0
+    failovers: int = 0
+    dead_lettered: int = 0
+    failover_placements: List = dataclasses.field(default_factory=list)
 
     @property
     def tasks(self) -> List[SimTask]:
@@ -1223,6 +1341,7 @@ def simulate_replicated(tasks: Sequence[SimTask],
                         prefix_cache: bool = False,
                         prompt_tokens=None,
                         decode_steps: int = 1,
+                        faults=None,
                         obs=None) -> ReplicatedSimResult:
     """R independent continuous-batching replicas behind a front-end
     ``repro.serving.router.Router`` — the simulator twin of
@@ -1247,6 +1366,20 @@ def simulate_replicated(tasks: Sequence[SimTask],
     placement.  ``TraceRecorder.parity_events(replica=r)`` recovers one
     replica's stream for per-replica parity assertions.
 
+    Failure-aware serving (``faults`` — a
+    ``repro.serving.faults.FaultPlan``): a ``FaultCoordinator`` gates
+    every placement through the circuit breaker (with transient
+    dispatch faults and half-open probes), each replica runs its
+    ``ReplicaFaults`` slice (deadline timeouts, uncertainty-aware
+    shedding, straggler slowdowns), and when a replica's local step
+    counter reaches its crash point the driver evicts it, collects the
+    unfinished requests and re-dispatches them through the coordinator
+    (retry/backoff, failover or dead-letter).  ``ReplicatedEngine``
+    drives the IDENTICAL coordinator call sequence, so every fault
+    decision, counter and trace event parity-matches.  With
+    ``faults=None`` no coordinator exists and this function is
+    byte-identical to its pre-fault behavior.
+
     Returns a ``ReplicatedSimResult``: per-replica ``SimResult``s, the
     arrival-ordered placement list, and pool-level latency percentiles
     merged from the per-replica histograms.
@@ -1262,6 +1395,14 @@ def simulate_replicated(tasks: Sequence[SimTask],
     pending = sorted(tasks, key=lambda t: t.r)
     n_total = len(pending)
     kv_model = kv_block_size is not None and kv_num_blocks is not None
+    coord = None
+    if faults is not None:
+        from repro.serving.faults import FaultCoordinator
+        if prefill != "stall":
+            raise ValueError('faults require prefill="stall"')
+        coord = FaultCoordinator(
+            faults, R, router, obs,
+            kv_num_blocks=kv_num_blocks if kv_model else 0)
     reps = [_ReplicaSim(policy, xi=xi,
                         per_task_overhead_s=per_task_overhead_s,
                         num_slots=num_slots,
@@ -1271,14 +1412,55 @@ def simulate_replicated(tasks: Sequence[SimTask],
                         chunk_size=chunk_size, token_budget=token_budget,
                         prefix_cache=prefix_cache,
                         prompt_tokens=prompt_tokens,
-                        decode_steps=decode_steps, obs=obs)
-            for _ in range(R)]
+                        decode_steps=decode_steps,
+                        faults=(None if faults is None
+                                else faults.for_replica(r)), obs=obs)
+            for r in range(R)]
     reps[0].check_fits(pending)
     placements: List[int] = []
     label = obs is not None and R > 1
     i = 0
 
-    while sum(len(rep.done) for rep in reps) < n_total:
+    def _terminals() -> int:
+        return (sum(rep.terminal_count() for rep in reps)
+                + (coord.dead_lettered if coord is not None else 0))
+
+    while _terminals() < n_total:
+        if coord is not None:
+            for r in range(R):
+                if not coord.should_crash(r, reps[r].step):
+                    continue
+                # the crash point: evict + collect survivors on the
+                # dead replica, then re-dispatch them through the
+                # coordinator (retry/backoff + health-gated failover,
+                # dead-letter on budget exhaustion / no target)
+                if label:
+                    obs.replica_label = r
+                try:
+                    survivors = reps[r].crash()
+                finally:
+                    if label:
+                        obs.replica_label = None
+                coord.note_crash(r)
+                descs = [coord.survivor(
+                    task_id=_tid(t), u=t.u, cls=_cls(t), arrival=t.r,
+                    need=(blocks_for_tokens(
+                        prompt_len + max(1, t.true_out_len) - 1,
+                        kv_block_size) if kv_model else 0),
+                    payload=t) for t in survivors]
+                for payload, tgt in coord.redispatch(
+                        descs, from_replica=r):
+                    tgt_rep = reps[tgt]
+                    # causality: a failover delivery cannot precede
+                    # the crash it recovers from
+                    tgt_rep.now = max(tgt_rep.now, reps[r].now)
+                    if label:
+                        obs.replica_label = tgt
+                    try:
+                        tgt_rep.deliver(payload)
+                    finally:
+                        if label:
+                            obs.replica_label = None
         workers = [r for r in range(R) if reps[r].has_work()]
         if i < n_total and all(reps[r].now + 1e-12 >= pending[i].r
                                for r in workers):
@@ -1293,22 +1475,39 @@ def simulate_replicated(tasks: Sequence[SimTask],
                                  is_bulk=router.is_bulk(r),
                                  **reps[r].load())
                      for r in range(R)]
-            d = router.place(views, u=t.u, cls=_cls(t), need=need)
-            placements.append(d.replica)
-            if label:
-                obs.event("route", t.r, _tid(t), None,
-                          replica=d.replica, score=d.score,
-                          policy=d.policy)
-            rep = reps[d.replica]
+            if coord is not None:
+                # health-gated placement; the coordinator emits the
+                # route event itself and dead-letters (placement -1)
+                # when gating empties the eligible set
+                chosen = coord.place(views, task_id=_tid(t), u=t.u,
+                                     cls=_cls(t), arrival=t.r,
+                                     need=need)
+                placements.append(-1 if chosen is None else chosen)
+                if chosen is None:
+                    continue
+            else:
+                d = router.place(views, u=t.u, cls=_cls(t), need=need)
+                chosen = d.replica
+                placements.append(chosen)
+                if label:
+                    obs.event("route", t.r, _tid(t), None,
+                              replica=chosen, score=d.score,
+                              policy=d.policy)
+            rep = reps[chosen]
             rep.now = max(rep.now, t.r)
             if label:
-                obs.replica_label = d.replica
+                obs.replica_label = chosen
             try:
                 rep.deliver(t)
             finally:
                 if label:
                     obs.replica_label = None
             continue
+        if not workers:
+            # every replica is down and no arrival is placeable: the
+            # crash block above dead-lettered the remaining work, so
+            # the terminal count has already reached n_total
+            break
         # iterate the furthest-behind working replica (lowest id wins
         # ties) — the shared-clock round-robin discipline
         r = min(workers, key=lambda k: (reps[k].now, k))
@@ -1344,7 +1543,14 @@ def simulate_replicated(tasks: Sequence[SimTask],
         itl_p99=itl_h.quantile(0.99),
         queue_wait_p50=qw_h.quantile(0.50),
         queue_wait_p90=qw_h.quantile(0.90),
-        queue_wait_p99=qw_h.quantile(0.99))
+        queue_wait_p99=qw_h.quantile(0.99),
+        timed_out=sum(len(rep.timed_out) for rep in reps),
+        shed=sum(len(rep.shed_tasks) for rep in reps),
+        retries=coord.retries if coord is not None else 0,
+        failovers=coord.failovers if coord is not None else 0,
+        dead_lettered=coord.dead_lettered if coord is not None else 0,
+        failover_placements=(list(coord.failover_placements)
+                             if coord is not None else []))
 
 
 # ---------------------------------------------------------------------------

@@ -152,3 +152,15 @@ def bulk_class_names(classes: Sequence[TrafficClass]) -> List[str]:
     """Names of the ``bulk=True`` classes — the ``bulk_classes``
     argument of ``repro.serving.router.Router``."""
     return [c.name for c in classes if c.bulk]
+
+
+def request_deadline(arrival: float, cls: str,
+                     targets: Dict[str, SLOSpec]) -> float:
+    """Absolute deadline of one request: arrival + its class's e2e SLO
+    target.  ``inf`` (class unknown or no e2e target) = never times
+    out; the failure-aware serving path (``serving.faults``) sheds
+    queued requests past this point before admission."""
+    spec = targets.get(cls)
+    if spec is None:
+        return float("inf")
+    return arrival + spec.target("e2e")

@@ -216,6 +216,18 @@ class BlockAllocator:
             self.drop_ref(blk)
         return len(blocks)
 
+    def free_all(self) -> int:
+        """Crash-time bulk free: drop every live sequence in ascending
+        seq-id order (deterministic free-list order on both sides of a
+        parity run); returns the number of table entries released.
+        Table-less references (prefix-cache pins) are untouched — the
+        cache outlives a replica crash exactly like it outlives normal
+        eviction."""
+        released = 0
+        for seq_id in sorted(self._tables):
+            released += self.free_sequence(seq_id)
+        return released
+
     def check_no_leaks(self) -> None:
         """Assert the pool is whole (used by tests after a full serve;
         prefix-cache engines ``clear()`` the cache's references first)."""

@@ -26,6 +26,16 @@ Three pieces:
   * ``obs.log``     — rate-limited warnings with countable fallback
     events (``fallback_events`` in serve results).
 
+Failure-aware serving (``repro.serving.faults``) adds the fault
+lifecycle kinds to ``EVENT_KINDS`` — ``timeout``, ``shed``, ``retry``,
+``failover``, ``replica_down``, ``replica_up``, ``dead_letter`` — and
+the ``faults.*`` counters (``faults.timed_out``, ``faults.shed``,
+``faults.retries``, ``faults.failovers``, ``faults.dead_lettered``,
+``faults.replica_down``).  All of them sit inside the
+parity view: a faulted engine run and its faulted simulator twin emit
+identical fault streams and counter values; runs without a fault plan
+emit none of them (byte-identity with pre-fault recording).
+
 ``Observability`` bundles one recorder + one registry per run; build
 one with ``Observability()`` and pass it to ``ServingEngine(obs=...)``
 / ``simulate_continuous(obs=...)``, then export with

@@ -104,6 +104,12 @@ class Histogram:
     #: default bucket growth: 5% relative bucket width
     GROWTH = 1.05
 
+    #: bucket index for infinite observations — timed-out / shed
+    #: requests record an ``inf`` e2e latency (a deadline miss never
+    #: resolves), which must land in a dedicated overflow bucket
+    #: rather than overflow the log-bucket index
+    OVERFLOW_BUCKET = 1 << 62
+
     def __init__(self, growth: float = GROWTH) -> None:
         if growth <= 1.0:
             raise ValueError(f"growth must be > 1, got {growth}")
@@ -118,6 +124,8 @@ class Histogram:
 
     # ------------------------------------------------------------------
     def _index(self, v: float) -> int:
+        if math.isinf(v):
+            return self.OVERFLOW_BUCKET
         return int(math.floor(math.log(v) / self._log_g))
 
     def record(self, v: float, n: int = 1) -> None:
@@ -168,7 +176,8 @@ class Histogram:
         for k in sorted(self.buckets):
             seen += self.buckets[k]
             if rank < seen:
-                rep = math.exp((k + 0.5) * self._log_g)
+                rep = (math.inf if k >= self.OVERFLOW_BUCKET
+                       else math.exp((k + 0.5) * self._log_g))
                 return min(max(rep, self.min), self.max)
         return self.max                      # pragma: no cover - guard
 

@@ -43,11 +43,16 @@ from typing import Dict, List, Optional, Tuple
 #: engine-only extras dict on ``snapshot`` events)
 WALL_FIELDS = frozenset({"ts", "dur", "times", "attainment", "wall"})
 
-#: the typed event vocabulary (trace_report validates against it)
+#: the typed event vocabulary (trace_report validates against it);
+#: the fault/failure kinds (serving.faults) only appear when a run is
+#: given a FaultPlan — unfaulted streams stay byte-identical to pre-
+#: fault traces
 EVENT_KINDS = frozenset({
     "enqueue", "admit", "reject", "offload", "prefix_hit", "exec_cache",
     "prefill_chunk", "first_token", "decode_window", "token", "evict",
     "complete", "bulk_batch", "snapshot", "route",
+    "timeout", "shed", "retry", "failover", "replica_down", "replica_up",
+    "dead_letter",
 })
 
 

@@ -1,1 +1,1 @@
-from . import engine, generate, replica, router  # noqa: F401
+from . import engine, faults, generate, replica, router  # noqa: F401

@@ -93,6 +93,7 @@ from repro.prefill import (ChunkScheduler, build_packed_arrays, pack_plans,
                            suffix_shape_key)
 
 from . import generate
+from .faults import shed_pass
 from .pipeline import CompletionWorker
 
 logger = logging.getLogger(__name__)
@@ -191,6 +192,7 @@ class ServingEngine:
                  decode_steps: int = 1,
                  aot_warmup: bool = True,
                  persist_prefix_cache: bool = False,
+                 faults=None,
                  obs: Optional[Observability] = None):
         # per-engine fallback ledger FIRST: the kernel factories below
         # may fire the jnp-fallback warning while they build.  Scoping
@@ -229,6 +231,11 @@ class ServingEngine:
         if persist_prefix_cache and not prefix_cache:
             raise ValueError("persist_prefix_cache=True requires "
                              "prefix_cache=True")
+        if faults is not None and (mode != "continuous"
+                                   or prefill != "stall"):
+            raise ValueError('faults (serving.faults.ReplicaFaults) '
+                             'require mode="continuous", '
+                             'prefill="stall"')
         self.params = params
         self.cfg = cfg
         self.policy = policy
@@ -372,6 +379,18 @@ class ServingEngine:
         self.decode_dispatch_trace: List[int] = []
         # completion worker (serving.pipeline) of the serve in flight
         self._worker: Optional[CompletionWorker] = None
+        # failure-aware serving (serving.faults.ReplicaFaults): the
+        # pre-admission shed pass, straggler slowdowns and the crash
+        # point of the continuous stall loop.  The crash latch and the
+        # final step coordinate persist across serve calls — failover
+        # rounds (replica.ReplicatedEngine) continue a replica's step
+        # stream via serve(step_offset=...), and a crash fires once.
+        self.faults = faults
+        self._crashed = False
+        self.last_step = 0
+        self.timed_out_tasks: List[prio.SimTask] = []
+        self.shed_tasks: List[prio.SimTask] = []
+        self.survivors: List[Request] = []
 
     # ------------------------------------------------------------------
     def _to_sim_task(self, req: Request) -> prio.SimTask:
@@ -477,8 +496,22 @@ class ServingEngine:
         return finish
 
     # ------------------------------------------------------------------
-    def serve(self, requests: Sequence[Request]) -> Dict:
-        """Run a full trace (virtual-time arrivals, real execution)."""
+    def serve(self, requests: Sequence[Request], *,
+              step_offset: int = 0) -> Dict:
+        """Run a full trace (virtual-time arrivals, real execution).
+
+        ``step_offset`` starts the step coordinate above zero — the
+        failover rounds of ``replica.ReplicatedEngine`` use it so a
+        replica's event stream keeps counting steps where its previous
+        serve stopped (the simulator's per-replica step counter never
+        resets, so parity needs the continuation)."""
+        if step_offset and (self.mode != "continuous"
+                            or self.prefill != "stall"):
+            raise ValueError("step_offset requires the continuous "
+                             "stall serve loop")
+        self.timed_out_tasks = []
+        self.shed_tasks = []
+        self.survivors = []
         self.kv_util_samples = []
         self._rejected_ids = set()
         self.peak_concurrency = 0
@@ -507,14 +540,20 @@ class ServingEngine:
         # serve-time fallbacks (AOT warmup failure, late kernel
         # fallbacks) land in this engine's own ledger
         with obslog.scope(self.fallback_ledger):
+            # the worker is constructed BEFORE the try: if it raises,
+            # there is no half-built worker for the finally to trip
+            # over, and any engine exception mid-window always reaches
+            # a close() that joins the daemon thread (close() is
+            # idempotent, so double-teardown is safe too)
+            self._worker = CompletionWorker(
+                metrics=self.obs.metrics
+                if self.obs is not None else None)
             try:
-                self._worker = CompletionWorker(
-                    metrics=self.obs.metrics
-                    if self.obs is not None else None)
                 if self.mode == "continuous":
                     if self.prefill == "chunked":
                         return self._serve_continuous_chunked(requests)
-                    return self._serve_continuous(requests)
+                    return self._serve_continuous(
+                        requests, step_offset=step_offset)
                 return self._serve_batch(requests)
             finally:
                 self._worker.close()
@@ -523,7 +562,12 @@ class ServingEngine:
     def _result(self, done: List[prio.SimTask], n: int) -> Dict:
         ps = (self.prefix_cache.stats()
               if self.prefix_cache is not None else {})
-        rts = np.array([t.response_time for t in done])
+        # a crashed or fully-shed serve can complete nothing — guard
+        # the aggregates (zeros, not nan) instead of assuming done
+        rts = (np.array([t.response_time for t in done]) if done
+               else np.zeros(1))
+        span = (max(t.finish for t in done) - min(t.r for t in done)
+                if done else 0.0)
         util = (np.array(self.kv_util_samples)
                 if self.kv_util_samples else np.zeros(1))
         # tail-latency metrics: TTFT per request (first token emission
@@ -543,11 +587,10 @@ class ServingEngine:
             qw = getattr(t.task, "queue_wait_s", -1.0)
             if qw >= 0.0:
                 qw_h.record(qw)
-        return {
+        out = {
             "mean_response_s": float(rts.mean()),
             "max_response_s": float(rts.max()),
-            "throughput_per_min": 60.0 * n / max(
-                max(t.finish for t in done) - min(t.r for t in done), 1e-9),
+            "throughput_per_min": 60.0 * n / max(span, 1e-9),
             "scheduler_overhead_s": self.scheduler_overhead_s,
             "n_tasks": n,
             "tasks": done,
@@ -648,6 +691,19 @@ class ServingEngine:
             "health_trace": (list(self.obs.health_trace)
                              if self.obs is not None else []),
         }
+        if self.faults is not None:
+            # fault-gated keys: present ONLY when a fault plan is
+            # threaded, so unfaulted result dicts stay byte-identical
+            # to pre-fault serves (SimResult mirrors the counts)
+            out["timed_out"] = len(self.timed_out_tasks)
+            out["shed"] = len(self.shed_tasks)
+            out["timed_out_ids"] = [t.task.task_id
+                                    for t in self.timed_out_tasks]
+            out["shed_ids"] = [t.task.task_id for t in self.shed_tasks]
+            out["crashed"] = self._crashed
+            out["final_step"] = self.last_step
+            out["survivor_ids"] = [q.task_id for q in self.survivors]
+        return out
 
     def health(self) -> Dict:
         """Latest health snapshot of the current/last serve — the
@@ -908,9 +964,11 @@ class ServingEngine:
                              "AOT warmup failed (%s); executables will "
                              "trace on first call", exc)
 
-    def _serve_continuous(self, requests: Sequence[Request]) -> Dict:
+    def _serve_continuous(self, requests: Sequence[Request], *,
+                          step_offset: int = 0) -> Dict:
         persona = self.persona
         ob = self.obs
+        rf = self.faults
         C = self.num_slots
         S = self.input_bucket
         paged = self.kv == "paged"
@@ -935,8 +993,40 @@ class ServingEngine:
         self.admission_log = []
         now = 0.0
         i = 0
-        step = 0
-        while len(done) < n:
+        step = step_offset
+        while (len(done) + len(self.timed_out_tasks)
+               + len(self.shed_tasks)) < n:
+            if (rf is not None and rf.crash_at_step is not None
+                    and not self._crashed and step >= rf.crash_at_step):
+                # replica death (serving.faults.CrashFault): evict the
+                # active slots in slot order (freeing their KV blocks),
+                # then every unfinished request — active, queued,
+                # bulk-lane, not-yet-arrived — survives for the fault
+                # coordinator to re-dispatch.  The simulator's
+                # _ReplicaSim.crash() mirrors this sequence exactly.
+                crash_surv: List[prio.SimTask] = []
+                for slot in range(C):
+                    t = slot_task[slot]
+                    if t is None:
+                        continue
+                    if ob is not None:
+                        ob.event("evict", now, t.task.task_id, step,
+                                 slot=slot)
+                    if paged:
+                        alloc.free_sequence(t.task.task_id)
+                        kvc.clear_table(slot)
+                        reserved[slot] = 0
+                    slot_task[slot] = None
+                    crash_surv.append(t)
+                crash_surv += list(queue) + list(bulk) + sim_tasks[i:]
+                queue, bulk = [], []
+                self._crashed = True
+                self.survivors = [t.task for t in crash_surv]
+                if ob is not None:
+                    ob.event("replica_down", now, None, step,
+                             reason="crash", survivors=len(crash_surv))
+                    ob.inc("faults.replica_down")
+                break
             while i < n and sim_tasks[i].r <= now + 1e-9:
                 if ob is not None:
                     cls = sim_tasks[i].task.traffic_class
@@ -945,6 +1035,16 @@ class ServingEngine:
                              **({"cls": cls} if cls else {}))
                 queue.append(sim_tasks[i])
                 i += 1
+            if rf is not None and queue:
+                # failure-aware pre-admission pass (serving.faults):
+                # doomed-request timeouts + pressure shedding — the
+                # same shed_pass call the simulator's iterate() makes
+                # at the same point, so events/counters parity-match
+                queue, timed, dropped = shed_pass(
+                    queue, now=now, step=step, rf=rf,
+                    slo=ob.slo if ob is not None else None, obs=ob)
+                self.timed_out_tasks += timed
+                self.shed_tasks += dropped
             iter_stall = 0.0
             iter_launches = 0
 
@@ -1144,6 +1244,11 @@ class ServingEngine:
                         jnp.asarray(tokens), num_steps=nsteps)
                 self._worker.submit(window_tok, t0)
                 window_host, dt = self._worker.collect()
+                if rf is not None:
+                    # straggler fault (SlowFault): stretch the window's
+                    # charge to the virtual clock.  Wall-only — parity
+                    # streams strip time fields by construction.
+                    dt *= rf.slow_factor(step)
                 now += dt
                 step += nsteps
                 self.decode_dispatches += 1
@@ -1196,6 +1301,7 @@ class ServingEngine:
             kvc.state = cache
         else:
             self.slot_cache = cache
+        self.last_step = step
         return self._result(done, n)
 
     # ------------------------------------------------------------------

@@ -57,6 +57,7 @@ class CompletionWorker:
     def __init__(self, name: str = "completion-worker", metrics=None):
         self._in: "queue.Queue" = queue.Queue()
         self._out: "queue.Queue" = queue.Queue()
+        self._closed = False
         self._wait_hist = (metrics.histogram("pipeline.collect_wait_s")
                            if metrics is not None else None)
         self._thread = threading.Thread(target=self._run, name=name,
@@ -106,6 +107,12 @@ class CompletionWorker:
                 if self._wait_hist is not None else {})
 
     def close(self, timeout: Optional[float] = 5.0) -> None:
+        """Stop the worker and join its thread.  Idempotent — the
+        serve() teardown path may reach an already-closed worker when
+        an engine exception unwinds mid-window."""
+        if self._closed:
+            return
+        self._closed = True
         self._in.put(None)
         self._thread.join(timeout=timeout)
 

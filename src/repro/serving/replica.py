@@ -57,6 +57,7 @@ class ReplicatedEngine:
     def __init__(self, params, cfg, policy, profile, *,
                  replicas: int = 1,
                  router: Optional[Router] = None,
+                 faults=None,
                  obs: Optional[Observability] = None,
                  **engine_kwargs):
         if replicas < 1:
@@ -68,9 +69,19 @@ class ReplicatedEngine:
                              f"replicas={self.R}")
         self.obs = obs
         self.profile = profile
+        # failure-aware serving (serving.faults.FaultPlan): each
+        # replica gets its per-replica fault slice; the pool-level
+        # machinery (health-gated placement, retry/failover,
+        # dead-letter) runs in _serve_faulted
+        self.faults = faults
+        if faults is not None:
+            faults.validate(self.R)
         self.engines = [ServingEngine(params, cfg, policy, profile,
-                                      obs=obs, **engine_kwargs)
-                        for _ in range(self.R)]
+                                      obs=obs,
+                                      faults=(None if faults is None
+                                              else faults.for_replica(r)),
+                                      **engine_kwargs)
+                        for r in range(self.R)]
         self.placements: List[int] = []
 
     # ------------------------------------------------------------------
@@ -96,6 +107,8 @@ class ReplicatedEngine:
         ``ServingEngine`` results (``None`` for a replica that received
         no requests — an idle replica runs nothing).
         """
+        if self.faults is not None:
+            return self._serve_faulted(requests)
         reqs = sorted(requests, key=lambda q: q.arrival)
         label = self.obs is not None and self.R > 1
         placed: List[List[Request]] = [[] for _ in range(self.R)]
@@ -158,3 +171,139 @@ class ReplicatedEngine:
                 res["fallback_events"] for res in results
                 if res is not None),
         }
+
+    # ------------------------------------------------------------------
+    def _serve_faulted(self, requests: Sequence[Request]) -> Dict:
+        """Failure-aware pool serve: coordinator-gated placement, then
+        ROUND-based serving — round k+1 serves the failover groups of
+        the replicas that crashed in round k, with ``step_offset``
+        continuing each target's step coordinate where its previous
+        serve stopped — until no crash adds new work.  Crashes are
+        one-shot per replica, so at most R+1 rounds run.  This drives
+        the IDENTICAL ``FaultCoordinator`` call sequence as
+        ``simulate_replicated(faults=...)``: placement gating, retry/
+        backoff, failover and dead-letter decisions — and their events
+        and counters — parity-match bit for bit.
+        """
+        from .faults import FaultCoordinator
+
+        reqs = sorted(requests, key=lambda q: q.arrival)
+        label = self.obs is not None and self.R > 1
+        eng0 = self.engines[0]
+        coord = FaultCoordinator(
+            self.faults, self.R, self.router, self.obs,
+            kv_num_blocks=(eng0.kv_num_blocks
+                           if eng0.kv == "paged" else 0))
+        req_u: Dict = {}
+        placements: List[int] = []
+        groups: List[List[Request]] = [[] for _ in range(self.R)]
+        for req in reqs:
+            u = float(max(self.profile.predictor.score(req.text), 0.0))
+            req_u[req.task_id] = u
+            # the coordinator's ledger views ARE this front-end's
+            # placement bookkeeping (placed counts, u sums, full
+            # pools); it emits the route event and dead-letters
+            # (placement -1) when gating empties the eligible set
+            tgt = coord.place(coord.ledger_views(), task_id=req.task_id,
+                              u=u, cls=req.traffic_class,
+                              arrival=req.arrival, need=self._need(req))
+            placements.append(-1 if tgt is None else tgt)
+            if tgt is not None:
+                groups[tgt].append(req)
+        self.placements = placements
+
+        merged: List[List[Dict]] = [[] for _ in range(self.R)]
+        step_offsets = [0] * self.R
+        next_groups = groups
+        while any(next_groups):
+            cur, next_groups = next_groups, [[] for _ in range(self.R)]
+            for r in range(self.R):
+                if not cur[r]:
+                    continue
+                if coord.crashed[r] and not coord.functional(r):
+                    # the target died in an earlier round before this
+                    # failover group could run: the group re-enters the
+                    # coordinator (attempt N+1) exactly as the
+                    # simulator's crash survivors do — re-placed on a
+                    # functional replica or dead-lettered
+                    descs = [coord.survivor(
+                        task_id=q.task_id, u=req_u[q.task_id],
+                        cls=q.traffic_class, arrival=q.arrival,
+                        need=self._need(q), payload=q)
+                        for q in cur[r]]
+                    for payload, tgt in coord.redispatch(
+                            descs, from_replica=r):
+                        next_groups[tgt].append(payload)
+                    continue
+                if label:
+                    self.obs.replica_label = r
+                try:
+                    res = self.engines[r].serve(
+                        cur[r], step_offset=step_offsets[r])
+                finally:
+                    if self.obs is not None:
+                        self.obs.replica_label = None
+                merged[r].append(res)
+                step_offsets[r] = res["final_step"]
+                if res["crashed"] and not coord.crashed[r]:
+                    coord.note_crash(r)
+                    survivors = list(self.engines[r].survivors)
+                    descs = [coord.survivor(
+                        task_id=q.task_id, u=req_u[q.task_id],
+                        cls=q.traffic_class, arrival=q.arrival,
+                        need=self._need(q), payload=q)
+                        for q in survivors]
+                    for payload, tgt in coord.redispatch(
+                            descs, from_replica=r):
+                        next_groups[tgt].append(payload)
+
+        results = [self._merge_rounds(rl) for rl in merged]
+        return {
+            "mode": "replicated",
+            "replicas": self.R,
+            "router_policy": self.router.policy,
+            "n_tasks": len(reqs),
+            "placements": placements,
+            "placement_counts": [placements.count(r)
+                                 for r in range(self.R)],
+            "per_replica": results,
+            "completion_orders": [
+                res["completion_order"] if res is not None else []
+                for res in results],
+            "rejected_for_memory": sum(
+                res["rejected_for_memory"] for res in results
+                if res is not None),
+            "fallback_events": sum(
+                res["fallback_events"] for res in results
+                if res is not None),
+            "timed_out": sum(res["timed_out"] for res in results
+                             if res is not None),
+            "shed": sum(res["shed"] for res in results
+                        if res is not None),
+            "retries": coord.retries,
+            "failovers": coord.failovers,
+            "dead_lettered": coord.dead_lettered,
+            "failover_placements": list(coord.failover_placements),
+        }
+
+    @staticmethod
+    def _merge_rounds(rounds: List[Dict]) -> Optional[Dict]:
+        """Fold one replica's per-round serve results (its initial
+        group plus any failover rounds) into a single result dict: the
+        trailing round's engine-state fields, with the completion /
+        terminal accounting concatenated in round order."""
+        if not rounds:
+            return None
+        if len(rounds) == 1:
+            return rounds[0]
+        out = dict(rounds[-1])
+        out["n_tasks"] = sum(res["n_tasks"] for res in rounds)
+        out["tasks"] = [t for res in rounds for t in res["tasks"]]
+        out["completion_order"] = [tid for res in rounds
+                                   for tid in res["completion_order"]]
+        for key in ("timed_out", "shed", "rejected_for_memory",
+                    "fallback_events"):
+            out[key] = sum(res[key] for res in rounds)
+        for key in ("timed_out_ids", "shed_ids", "survivor_ids"):
+            out[key] = [tid for res in rounds for tid in res[key]]
+        return out

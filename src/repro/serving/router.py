@@ -41,6 +41,14 @@ Admissibility gate: an arrival whose reservation can never fit a
 replica's pool (``need > num_blocks``) is ineligible there — the
 router refuses placements the engine's admission gate would deadlock
 on.
+
+Health gating (``serving.faults``): ``ReplicaView.health`` carries the
+circuit-breaker state (``closed``/``half_open``/``open``); every policy
+skips ``open`` replicas, and a ``half_open`` replica is eligible as a
+probe.  When gating (or admissibility) empties the eligible set,
+``place`` raises ``NoEligibleReplica`` — a ``ValueError`` subclass so
+pre-fault callers are unchanged — which the fault coordinator converts
+into a counted dead-letter outcome instead of a hang.
 """
 
 from __future__ import annotations
@@ -50,6 +58,11 @@ from typing import Dict, List, Sequence, Tuple
 
 #: placement policies, in documentation order
 ROUTER_POLICIES = ("round_robin", "least_queue", "rtlm")
+
+
+class NoEligibleReplica(ValueError):
+    """No replica can take this request (bulk-slice eligibility,
+    admissibility and health gating left an empty set)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +84,8 @@ class ReplicaView:
     #                        0 = unpaged, gate inapplicable)
     u_load: float = 0.0    # summed predicted output lengths in flight
     is_bulk: bool = False  # member of the low-priority bulk slice
+    health: str = "closed"  # circuit-breaker state (serving.faults):
+    #                         "open" replicas are skipped by every policy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,6 +173,9 @@ class Router:
             raise ValueError(f"expected {self.R} views, got "
                              f"{len(views)}")
         elig = self.eligible(cls)
+        # health gate: circuit-broken replicas take no traffic
+        # (half-open replicas stay eligible as probes)
+        elig = [r for r in elig if views[r].health != "open"]
         if need > 0:
             # admissibility: a pool that can never hold the reservation
             # is out (num_blocks == 0 marks an unpaged replica — no gate)
@@ -165,7 +183,7 @@ class Router:
                     if views[r].num_blocks <= 0
                     or need <= views[r].num_blocks]
         if not elig:
-            raise ValueError(
+            raise NoEligibleReplica(
                 f"no eligible replica for cls={cls!r} need={need} "
                 f"(bulk_replicas={self.bulk_replicas}, "
                 f"bulk_classes={self.bulk_classes})")
